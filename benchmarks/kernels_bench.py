@@ -1,0 +1,70 @@
+"""Kernel-path microbenchmarks (CPU; kernels run in interpret mode).
+
+Times the blocked batched-scoring formulation (DESIGN.md §3.3, pure-jnp
+lowering of the kernel contraction) against the paper-faithful per-query
+gather path, as batch size grows — the arithmetic-intensity argument for
+the beyond-paper path. Wall times here are CPU-indicative only; the TPU
+projection lives in EXPERIMENTS.md §Roofline.
+"""
+
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import (BM25Params, DeviceIndex, build_index, pad_queries,
+                        score_batch, suggest_p_max)
+from repro.data.corpus import zipf_corpus, zipf_queries
+from repro.kernels.ref import bm25_block_score_ref
+from repro.sparse.block_csr import block_postings_from_index, \
+    pack_query_batch
+
+
+def run(n_docs: int = 8192, n_vocab: int = 8000) -> list[dict]:
+    corpus = zipf_corpus(n_docs, n_vocab, avg_len=60)
+    p = BM25Params()
+    idx = build_index(corpus, n_vocab, params=p)
+    di = DeviceIndex.from_host(idx)
+    bp = block_postings_from_index(idx, block_size=512, tile=512)
+    tok_d = jnp.asarray(bp.token_ids)
+    loc_d = jnp.asarray(bp.local_doc)
+    sc_d = jnp.asarray(bp.scores)
+
+    blocked = jax.jit(lambda u, w: bm25_block_score_ref(
+        tok_d, loc_d, sc_d, u, w, block_size=bp.block_size))
+
+    rows = []
+    for batch in (8, 32, 128):
+        queries = zipf_queries(batch, n_vocab, q_len=5, seed=batch)
+        toks, wts = pad_queries(queries, 8)
+        uniq, weights = pack_query_batch(toks, wts, u_max=1024)
+        u_d, w_d = jnp.asarray(uniq), jnp.asarray(weights)
+        p_max = suggest_p_max(idx, 8)
+        jt, jw = jnp.asarray(toks), jnp.asarray(wts)
+
+        score_batch(di, jt, jw, p_max=p_max).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            score_batch(di, jt, jw, p_max=p_max).block_until_ready()
+        t_gather = (time.perf_counter() - t0) / 3
+
+        blocked(u_d, w_d).block_until_ready()
+        t0 = time.perf_counter()
+        for _ in range(3):
+            blocked(u_d, w_d).block_until_ready()
+        t_blocked = (time.perf_counter() - t0) / 3
+
+        rows.append({
+            "batch": batch,
+            "gather_us_per_q": round(1e6 * t_gather / batch, 1),
+            "blocked_us_per_q": round(1e6 * t_blocked / batch, 1),
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,60 @@
+"""Benchmark harness — one section per paper table.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast]
+
+Emits CSV-ish lines ``table,key=value,...`` and writes
+benchmarks/out/results.json.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import time
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="smaller corpora (CI-sized)")
+    args = ap.parse_args()
+
+    from . import kernels_bench, throughput, tokenization, variants
+
+    results = {}
+    t0 = time.time()
+
+    sizes = ((1000, 3000), (5000, 10000)) if args.fast else \
+        ((2000, 5000), (10000, 20000), (50000, 50000))
+    results["table1_throughput"] = throughput.run(sizes=sizes)
+    for r in results["table1_throughput"]:
+        print("table1," + ",".join(f"{k}={v}" for k, v in r.items()),
+              flush=True)
+
+    n_docs = 300 if args.fast else 800
+    results["table2_tokenization"] = tokenization.run(n_docs=n_docs)
+    for r in results["table2_tokenization"]:
+        print("table2," + ",".join(f"{k}={v}" for k, v in r.items()),
+              flush=True)
+
+    results["table3_variants"] = variants.run(n_docs=n_docs)
+    for r in results["table3_variants"]:
+        print("table3," + ",".join(f"{k}={v}" for k, v in r.items()),
+              flush=True)
+
+    results["kernels"] = kernels_bench.run(
+        n_docs=2048 if args.fast else 8192,
+        n_vocab=2000 if args.fast else 8000)
+    for r in results["kernels"]:
+        print("kernels," + ",".join(f"{k}={v}" for k, v in r.items()),
+              flush=True)
+
+    os.makedirs("benchmarks/out", exist_ok=True)
+    with open("benchmarks/out/results.json", "w") as f:
+        json.dump(results, f, indent=1)
+    print(f"done in {time.time() - t0:.1f}s -> benchmarks/out/results.json")
+
+
+if __name__ == "__main__":
+    main()

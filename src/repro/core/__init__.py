@@ -1,0 +1,51 @@
+"""BM25S core: eager sparse scoring (Lù, 2024) as a composable JAX module."""
+
+from .index import BM25Index, CorpusStats, build_index, build_sharded_indexes, reshard_index
+from .reference import RankBM25Baseline, ScipyBM25, dense_oracle_scores
+from .retrieval import blockwise_topk, topk_jax, topk_numpy
+from .scoring import DeviceIndex, pad_queries, score_batch, suggest_p_max
+from .tokenizer import Tokenizer, Vocabulary
+from .variants import BM25Params, VARIANTS, get_variant
+
+__all__ = [
+    "BM25Index", "BM25Params", "BM25Retriever", "CorpusStats", "DeviceIndex",
+    "RankBM25Baseline", "ScipyBM25", "Tokenizer", "VARIANTS", "Vocabulary",
+    "blockwise_topk", "build_index", "build_sharded_indexes",
+    "dense_oracle_scores", "get_variant", "pad_queries", "reshard_index",
+    "score_batch", "suggest_p_max", "topk_jax", "topk_numpy",
+]
+
+
+class BM25Retriever:
+    """End-to-end convenience API: texts in, ranked documents out.
+
+    >>> r = BM25Retriever(method="lucene").index(corpus_texts)
+    >>> ids, scores = r.retrieve(["sparse lexical search"], k=10)
+    """
+
+    def __init__(self, *, method: str = "lucene", k1: float = 1.5,
+                 b: float = 0.75, delta: float = 0.5,
+                 stopwords: str | None = "english",
+                 stemmer: str | None = "snowball"):
+        self.params = BM25Params(k1=k1, b=b, delta=delta, method=method)
+        self.tokenizer = Tokenizer(stopwords=stopwords, stemmer=stemmer)
+        self.bm25_index: BM25Index | None = None
+        self._device_index: DeviceIndex | None = None
+
+    def index(self, corpus: list[str]) -> "BM25Retriever":
+        tokens = self.tokenizer.tokenize_corpus(corpus)
+        self.bm25_index = build_index(
+            tokens, self.tokenizer.vocab_size, params=self.params)
+        self._device_index = DeviceIndex.from_host(self.bm25_index)
+        return self
+
+    def retrieve(self, queries: list[str], k: int = 10, *,
+                 q_max: int = 32, p_max: int | None = None):
+        assert self._device_index is not None, "call .index() first"
+        q_tokens = self.tokenizer.tokenize_queries(queries)
+        toks, wts = pad_queries(q_tokens, q_max)
+        if p_max is None:
+            p_max = suggest_p_max(self.bm25_index, q_max)
+        scores = score_batch(self._device_index, toks, wts, p_max=p_max)
+        idx, vals = topk_jax(scores, min(k, self.bm25_index.doc_lens.size))
+        return idx, vals

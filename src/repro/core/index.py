@@ -1,0 +1,269 @@
+"""Eager index-time scoring — the core of BM25S (§2 of the paper).
+
+``build_index`` turns a tokenized corpus into a :class:`BM25Index`: every
+possible score any future query token can contribute to any document is
+computed *now* and stored sparsely, CSC-style keyed by token id. For the
+shifted variants (§2.1) the stored value is the differential
+``SΔ(t,D) = S(t,D) − S⁰(t)`` and the per-token nonoccurrence vector ``S⁰``
+is kept alongside (a |V| array — footnote 12 of the paper).
+
+Query-time work is thereby reduced to: gather the postings of the query
+tokens, sum per document, (+ the scalar ``Σ S⁰(qᵢ)`` for shifted variants),
+then top-k. See ``scoring.py`` / ``retrieval.py`` for the device-side half.
+
+Everything in this module is host-side NumPy; it is embarrassingly parallel
+over document shards (each shard indexes its own documents given global
+``df``/``L_avg`` statistics — see ``build_sharded_indexes``).
+"""
+
+from __future__ import annotations
+
+import json
+import os
+from dataclasses import dataclass, replace
+from typing import Sequence
+
+import numpy as np
+
+from .variants import BM25Params, BM25Variant, get_variant
+
+
+@dataclass
+class CorpusStats:
+    """Global statistics needed to eagerly score any document shard."""
+
+    n_docs: int
+    n_vocab: int
+    df: np.ndarray        # [V] int64 document frequency
+    l_avg: float          # mean document length (tokens)
+
+    @staticmethod
+    def from_corpus(doc_tokens: Sequence[np.ndarray], n_vocab: int) -> "CorpusStats":
+        df = np.zeros(n_vocab, dtype=np.int64)
+        total_len = 0
+        for toks in doc_tokens:
+            total_len += int(toks.size)
+            if toks.size:
+                df[np.unique(toks)] += 1
+        n_docs = len(doc_tokens)
+        l_avg = total_len / max(n_docs, 1)
+        return CorpusStats(n_docs=n_docs, n_vocab=n_vocab, df=df, l_avg=l_avg)
+
+
+@dataclass
+class BM25Index:
+    """Eager sparse score index in CSC-by-token layout.
+
+    ``indptr[t] : indptr[t+1]`` delimits the postings of token ``t``;
+    ``doc_ids`` are sorted ascending within each token's slice (the CSC
+    invariant the distributed/blocked layouts rely on).
+    """
+
+    indptr: np.ndarray      # [V+1] int64
+    doc_ids: np.ndarray     # [nnz] int32
+    scores: np.ndarray      # [nnz] float32 — S or SΔ (differential)
+    nonoccurrence: np.ndarray  # [V] float32 — S⁰; zeros for sparse variants
+    doc_lens: np.ndarray    # [C] int32
+    n_docs: int
+    n_vocab: int
+    l_avg: float
+    variant: str
+    params: BM25Params
+    doc_offset: int = 0     # global id of local doc 0 (for shards)
+
+    @property
+    def nnz(self) -> int:
+        return int(self.doc_ids.size)
+
+    @property
+    def is_shifted(self) -> bool:
+        return bool(np.any(self.nonoccurrence != 0.0))
+
+    def token_df(self) -> np.ndarray:
+        return np.diff(self.indptr)
+
+    # -- persistence --------------------------------------------------------
+    def save(self, path: str) -> None:
+        os.makedirs(path, exist_ok=True)
+        np.savez(
+            os.path.join(path, "arrays.npz"),
+            indptr=self.indptr, doc_ids=self.doc_ids, scores=self.scores,
+            nonoccurrence=self.nonoccurrence, doc_lens=self.doc_lens,
+        )
+        meta = {
+            "n_docs": self.n_docs, "n_vocab": self.n_vocab,
+            "l_avg": self.l_avg, "variant": self.variant,
+            "doc_offset": self.doc_offset,
+            "params": {"k1": self.params.k1, "b": self.params.b,
+                       "delta": self.params.delta, "method": self.params.method},
+        }
+        tmp = os.path.join(path, "meta.json.tmp")
+        with open(tmp, "w") as f:
+            json.dump(meta, f)
+        os.replace(tmp, os.path.join(path, "meta.json"))
+
+    @staticmethod
+    def load(path: str) -> "BM25Index":
+        with open(os.path.join(path, "meta.json")) as f:
+            meta = json.load(f)
+        arrs = np.load(os.path.join(path, "arrays.npz"))
+        return BM25Index(
+            indptr=arrs["indptr"], doc_ids=arrs["doc_ids"],
+            scores=arrs["scores"], nonoccurrence=arrs["nonoccurrence"],
+            doc_lens=arrs["doc_lens"], n_docs=meta["n_docs"],
+            n_vocab=meta["n_vocab"], l_avg=meta["l_avg"],
+            variant=meta["variant"], doc_offset=meta.get("doc_offset", 0),
+            params=BM25Params(**meta["params"]),
+        )
+
+
+def _corpus_coo(doc_tokens: Sequence[np.ndarray]) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """(token_ids, doc_ids, tf) postings + doc lengths for a corpus shard."""
+    tok_chunks, doc_chunks, tf_chunks = [], [], []
+    doc_lens = np.zeros(len(doc_tokens), dtype=np.int32)
+    for d, toks in enumerate(doc_tokens):
+        doc_lens[d] = toks.size
+        if toks.size == 0:
+            continue
+        uniq, counts = np.unique(toks, return_counts=True)
+        tok_chunks.append(uniq.astype(np.int64))
+        doc_chunks.append(np.full(uniq.size, d, dtype=np.int64))
+        tf_chunks.append(counts.astype(np.float64))
+    if not tok_chunks:
+        z64, zf = np.zeros(0, np.int64), np.zeros(0, np.float64)
+        return z64, z64.copy(), zf, doc_lens
+    return (np.concatenate(tok_chunks), np.concatenate(doc_chunks),
+            np.concatenate(tf_chunks), doc_lens)
+
+
+def build_index(
+    doc_tokens: Sequence[np.ndarray],
+    n_vocab: int,
+    *,
+    params: BM25Params | None = None,
+    stats: CorpusStats | None = None,
+    doc_offset: int = 0,
+) -> BM25Index:
+    """Eagerly score a (shard of a) corpus into a :class:`BM25Index`.
+
+    ``stats`` carries *global* corpus statistics; when ``None`` they are
+    computed from ``doc_tokens`` itself (single-shard build). Passing global
+    stats while giving only a document shard is exactly how the distributed
+    index build works — scores depend on other shards only through
+    ``(df, N, L_avg)``.
+    """
+    params = params or BM25Params()
+    variant: BM25Variant = get_variant(params.method)
+    if stats is None:
+        stats = CorpusStats.from_corpus(doc_tokens, n_vocab)
+
+    tok, doc, tf, doc_lens = _corpus_coo(doc_tokens)
+
+    df_per_posting = stats.df[tok].astype(np.float64)
+    dl_per_posting = doc_lens[doc].astype(np.float64)
+    scores = variant.score(
+        tf, df_per_posting, stats.n_docs, dl_per_posting, stats.l_avg, params
+    )
+
+    # §2.1 score shifting: store the differential score so the matrix stays
+    # sparse. For sparse variants nonocc ≡ 0 and this is a no-op.
+    df_all = stats.df.astype(np.float64)
+    nonocc = np.where(
+        df_all > 0,
+        variant.nonoccurrence(np.maximum(df_all, 1.0), stats.n_docs, params),
+        0.0,
+    )
+    scores = scores - nonocc[tok]
+
+    # CSC-by-token: sort postings by (token, doc). np.lexsort is stable.
+    order = np.lexsort((doc, tok))
+    tok, doc, scores = tok[order], doc[order], scores[order]
+    indptr = np.zeros(n_vocab + 1, dtype=np.int64)
+    np.add.at(indptr, tok + 1, 1)
+    np.cumsum(indptr, out=indptr)
+
+    return BM25Index(
+        indptr=indptr,
+        doc_ids=doc.astype(np.int32),
+        scores=scores.astype(np.float32),
+        nonoccurrence=nonocc.astype(np.float32),
+        doc_lens=doc_lens,
+        n_docs=stats.n_docs if doc_offset == 0 and len(doc_tokens) == stats.n_docs
+        else len(doc_tokens),
+        n_vocab=n_vocab,
+        l_avg=stats.l_avg,
+        variant=variant.name,
+        params=params,
+        doc_offset=doc_offset,
+    )
+
+
+def build_sharded_indexes(
+    doc_tokens: Sequence[np.ndarray],
+    n_vocab: int,
+    n_shards: int,
+    *,
+    params: BM25Params | None = None,
+) -> list[BM25Index]:
+    """Distributed index build: global stats pass + per-shard eager scoring.
+
+    Shards are contiguous document ranges (balanced ±1). This mirrors the
+    production flow where each host indexes its own documents after an
+    all-reduce of ``(df, Σ len, N)``.
+    """
+    stats = CorpusStats.from_corpus(doc_tokens, n_vocab)
+    bounds = np.linspace(0, len(doc_tokens), n_shards + 1).astype(int)
+    shards = []
+    for s in range(n_shards):
+        lo, hi = int(bounds[s]), int(bounds[s + 1])
+        shards.append(
+            build_index(doc_tokens[lo:hi], n_vocab, params=params,
+                        stats=stats, doc_offset=lo)
+        )
+    return shards
+
+
+def reshard_index(shards: list[BM25Index], n_new: int) -> list[BM25Index]:
+    """Elastically re-balance shards to a new shard count.
+
+    Pure host-side re-slicing: postings are re-bucketed by global doc id.
+    Used when the device pool shrinks/grows (see serve/engine.py).
+    """
+    if not shards:
+        raise ValueError("no shards to reshard")
+    # reconstruct global COO
+    toks, docs, scs, lens_parts = [], [], [], []
+    v = shards[0].n_vocab
+    for sh in shards:
+        tok = np.repeat(np.arange(v, dtype=np.int64), np.diff(sh.indptr))
+        toks.append(tok)
+        docs.append(sh.doc_ids.astype(np.int64) + sh.doc_offset)
+        scs.append(sh.scores)
+        lens_parts.append((sh.doc_offset, sh.doc_lens))
+    tok = np.concatenate(toks)
+    doc = np.concatenate(docs)
+    sc = np.concatenate(scs)
+    n_docs_total = max(off + dl.size for off, dl in lens_parts)
+    doc_lens = np.zeros(n_docs_total, dtype=np.int32)
+    for off, dl in lens_parts:
+        doc_lens[off:off + dl.size] = dl
+
+    proto = shards[0]
+    bounds = np.linspace(0, n_docs_total, n_new + 1).astype(int)
+    out = []
+    for s in range(n_new):
+        lo, hi = int(bounds[s]), int(bounds[s + 1])
+        sel = (doc >= lo) & (doc < hi)
+        t_s, d_s, s_s = tok[sel], doc[sel] - lo, sc[sel]
+        order = np.lexsort((d_s, t_s))
+        t_s, d_s, s_s = t_s[order], d_s[order], s_s[order]
+        indptr = np.zeros(v + 1, dtype=np.int64)
+        np.add.at(indptr, t_s + 1, 1)
+        np.cumsum(indptr, out=indptr)
+        out.append(replace(
+            proto,
+            indptr=indptr, doc_ids=d_s.astype(np.int32),
+            scores=s_s.astype(np.float32), doc_lens=doc_lens[lo:hi],
+            n_docs=hi - lo, doc_offset=lo,
+        ))
+    return out

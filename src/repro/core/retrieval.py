@@ -1,0 +1,133 @@
+"""Top-k selection and the sharded retrieval step.
+
+The paper's §2 "Top-k selection": average-O(n) partition-based selection
+(np.argpartition) or JAX/XLA ``top_k`` — it observes the JAX path is faster
+in practice, so that is our device default.
+
+At pod scale the corpus is document-sharded; top-k generalizes losslessly to
+a two-stage merge: per-shard local top-k (each shard's winners are a superset
+of its contribution to the global winners), all-gather the ``k`` candidates
+per shard (tiny: ``shards × k × 8B``), then a global top-k over
+``shards × k``. ``sharded_retrieve`` expresses this with ``shard_map`` so the
+same code runs on 1 device (tests) and 512 chips (dry-run).
+"""
+
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from jax.experimental.shard_map import shard_map
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from .scoring import DeviceIndex, score_query
+
+
+def topk_numpy(scores: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Paper's np.argpartition path (introspective selection, O(n) average)."""
+    k = min(k, scores.shape[-1])
+    part = np.argpartition(scores, -k, axis=-1)[..., -k:]
+    vals = np.take_along_axis(scores, part, axis=-1)
+    order = np.argsort(-vals, axis=-1, kind="stable")
+    idx = np.take_along_axis(part, order, axis=-1)
+    return idx, np.take_along_axis(scores, idx, axis=-1)
+
+
+@partial(jax.jit, static_argnames=("k",))
+def topk_jax(scores: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
+    """XLA top_k (the paper's preferred backend). Returns (indices, values)."""
+    vals, idx = jax.lax.top_k(scores, k)
+    return idx, vals
+
+
+def blockwise_topk(scores: jax.Array, k: int, block: int
+                   ) -> tuple[jax.Array, jax.Array]:
+    """Two-stage single-device top-k: per-block top-k, then merge.
+
+    Lossless: every global winner is a winner of its own block. Average work
+    is O(n) + O((n/block)·k log ...) — the distributed merge in miniature,
+    and the jnp oracle for ``kernels/blockwise_topk``.
+    """
+    n = scores.shape[-1]
+    assert n % block == 0, (n, block)
+    nb = n // block
+    kb = min(k, block)
+    blocks = scores.reshape(*scores.shape[:-1], nb, block)
+    bvals, bidx = jax.lax.top_k(blocks, kb)            # [..., nb, kb]
+    base = (jnp.arange(nb, dtype=jnp.int32) * block)[:, None]
+    gidx = (bidx + base).reshape(*scores.shape[:-1], nb * kb)
+    gvals = bvals.reshape(*scores.shape[:-1], nb * kb)
+    mvals, midx = jax.lax.top_k(gvals, min(k, nb * kb))
+    return jnp.take_along_axis(gidx, midx, axis=-1), mvals
+
+
+def make_sharded_retrieve(mesh: Mesh, shard_axes: tuple[str, ...], *,
+                          p_max: int, k: int, n_docs_per_shard: int):
+    """Build the pod-scale retrieval step: shard-local score+topk, global merge.
+
+    The device index arrays are sharded over ``shard_axes`` (leading dim =
+    shard id); queries are replicated. Returns a jit-able
+    ``retrieve(stacked_index, q_tokens[B,Q], q_weights[B,Q])``
+    -> (global doc ids [B,k], scores [B,k]).
+    """
+    n_shards = int(np.prod([mesh.shape[a] for a in shard_axes]))
+
+    def local_score_topk(idx_arrays, q_tokens, q_weights):
+        # idx_arrays leaves have a leading shard dim of size 1 inside shard_map
+        indptr, doc_ids, scores, nonocc, offsets = (x[0] for x in idx_arrays)
+        dindex = DeviceIndex(indptr, doc_ids, scores, nonocc,
+                             n_docs=n_docs_per_shard, doc_offset=0)
+        s = jax.vmap(lambda t, w: score_query(dindex, t, w, p_max=p_max))(
+            q_tokens, q_weights)                        # [B, n_local]
+        vals, local_idx = jax.lax.top_k(s, min(k, n_docs_per_shard))
+        gidx = local_idx + offsets.astype(jnp.int32)
+        return gidx[None], vals[None]                   # keep shard dim
+
+    spec_idx = tuple(P(shard_axes) for _ in range(5))
+
+    @jax.jit
+    def retrieve(idx_arrays, q_tokens, q_weights):
+        gidx, gvals = shard_map(
+            local_score_topk, mesh=mesh,
+            in_specs=(spec_idx, P(), P()),
+            out_specs=(P(shard_axes), P(shard_axes)),
+        )(idx_arrays, q_tokens, q_weights)
+        # [n_shards, B, k] -> [B, n_shards*k] -> global top-k (the merge)
+        b = q_tokens.shape[0]
+        allv = jnp.swapaxes(gvals, 0, 1).reshape(b, -1)
+        alli = jnp.swapaxes(gidx, 0, 1).reshape(b, -1)
+        mvals, midx = jax.lax.top_k(allv, k)
+        return jnp.take_along_axis(alli, midx, axis=-1), mvals
+
+    return retrieve
+
+
+def stack_shard_arrays(shards, mesh: Mesh, shard_axes: tuple[str, ...]):
+    """Host → device: stack per-shard index arrays padded to common sizes.
+
+    Returns the 5-tuple consumed by ``make_sharded_retrieve`` with every
+    leaf sharded over ``shard_axes`` on its leading (shard) dim, plus the
+    static per-shard doc count.
+    """
+    n = len(shards)
+    v = shards[0].n_vocab
+    nnz_pad = max(s.doc_ids.size for s in shards)
+    ndoc_pad = max(s.doc_lens.size for s in shards)
+    indptr = np.zeros((n, v + 1), np.int32)
+    doc_ids = np.zeros((n, nnz_pad), np.int32)
+    scores = np.zeros((n, nnz_pad), np.float32)
+    nonocc = np.zeros((n, v), np.float32)
+    offsets = np.zeros((n, 1), np.int32)
+    for i, s in enumerate(shards):
+        indptr[i] = s.indptr
+        doc_ids[i, : s.doc_ids.size] = s.doc_ids
+        # padding postings point at doc 0 with score 0 — harmless
+        scores[i, : s.scores.size] = s.scores
+        nonocc[i] = s.nonoccurrence
+        offsets[i, 0] = s.doc_offset
+    sharding = NamedSharding(mesh, P(shard_axes))
+    arrs = tuple(jax.device_put(a, sharding)
+                 for a in (indptr, doc_ids, scores, nonocc, offsets))
+    return arrs, ndoc_pad

@@ -1,0 +1,157 @@
+"""Device-side BM25S query scoring in JAX.
+
+This is the paper-faithful eager path, adapted to XLA's static-shape world:
+
+    slice the query tokens' postings  →  sum across the token dimension
+
+becomes
+
+    ragged-gather flatten (static postings budget)  →  segment_sum
+
+A query is a padded ``(tokens[Q_max], weights[Q_max])`` pair; ``weights``
+carries the per-unique-token occurrence count (summing a token's postings
+``w`` times ≡ the paper's per-occurrence summation) and 0 marks padding.
+The gather budget ``P_max`` bounds ``Σᵢ df(qᵢ)`` per query and is a static
+compile-time constant (configs size it from corpus statistics; the
+retriever logs and truncates pathological queries).
+
+The shifted variants' query constant ``Σᵢ wᵢ·S⁰(qᵢ)`` (§2.1) is added here,
+so returned scores are *exact*, not rank-equivalent.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .index import BM25Index
+
+
+@jax.tree_util.register_pytree_node_class
+@dataclass
+class DeviceIndex:
+    """BM25Index arrays on device (one shard's postings)."""
+
+    indptr: jax.Array       # [V+1] int32
+    doc_ids: jax.Array      # [nnz] int32
+    scores: jax.Array       # [nnz] float32
+    nonoccurrence: jax.Array  # [V] float32
+    n_docs: int             # static
+    doc_offset: int = 0     # static
+
+    def tree_flatten(self):
+        return (
+            (self.indptr, self.doc_ids, self.scores, self.nonoccurrence),
+            (self.n_docs, self.doc_offset),
+        )
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        indptr, doc_ids, scores, nonocc = children
+        return cls(indptr, doc_ids, scores, nonocc, *aux)
+
+    @staticmethod
+    def from_host(index: BM25Index) -> "DeviceIndex":
+        return DeviceIndex(
+            indptr=jnp.asarray(index.indptr, dtype=jnp.int32),
+            doc_ids=jnp.asarray(index.doc_ids, dtype=jnp.int32),
+            scores=jnp.asarray(index.scores, dtype=jnp.float32),
+            nonoccurrence=jnp.asarray(index.nonoccurrence, dtype=jnp.float32),
+            n_docs=int(index.doc_lens.size),
+            doc_offset=int(index.doc_offset),
+        )
+
+
+def pad_queries(query_tokens: list[np.ndarray], q_max: int
+                ) -> tuple[np.ndarray, np.ndarray]:
+    """Unique-ify + pad a batch of tokenized queries.
+
+    Returns ``tokens [B, q_max] int32`` (pad = -1) and
+    ``weights [B, q_max] float32`` (occurrence counts; 0 = pad). Queries with
+    more than ``q_max`` unique tokens keep the highest-count tokens.
+    """
+    b = len(query_tokens)
+    toks = np.full((b, q_max), -1, dtype=np.int32)
+    wts = np.zeros((b, q_max), dtype=np.float32)
+    for i, q in enumerate(query_tokens):
+        q = q[q >= 0]
+        uniq, counts = np.unique(q, return_counts=True)
+        if uniq.size > q_max:
+            keep = np.argsort(-counts, kind="stable")[:q_max]
+            uniq, counts = uniq[keep], counts[keep]
+        toks[i, : uniq.size] = uniq
+        wts[i, : uniq.size] = counts
+    return toks, wts
+
+
+def _flatten_postings(indptr: jax.Array, q_tokens: jax.Array,
+                      q_weights: jax.Array, p_max: int):
+    """Ragged-gather bookkeeping: map flat slot j -> (query token i, posting).
+
+    Returns (positions [p_max], weight-per-slot [p_max], valid mask [p_max]).
+    """
+    valid_q = q_tokens >= 0
+    safe_q = jnp.where(valid_q, q_tokens, 0)
+    starts = indptr[safe_q]
+    lens = jnp.where(valid_q, indptr[safe_q + 1] - starts, 0)
+    cum = jnp.cumsum(lens)                      # inclusive
+    total = cum[-1]
+    j = jnp.arange(p_max, dtype=jnp.int32)
+    # token index owning flat slot j (first i with cum[i] > j)
+    i = jnp.searchsorted(cum, j, side="right").astype(jnp.int32)
+    i = jnp.minimum(i, q_tokens.shape[0] - 1)
+    offset_excl = cum[i] - lens[i]
+    pos = starts[i] + (j - offset_excl)
+    ok = j < total
+    return jnp.where(ok, pos, 0), jnp.where(ok, q_weights[i], 0.0), ok
+
+
+def score_query(index: DeviceIndex, q_tokens: jax.Array, q_weights: jax.Array,
+                *, p_max: int) -> jax.Array:
+    """Exact BM25 scores of one query against this shard's documents.
+
+    The eager path: gather the precomputed postings scores, segment-sum per
+    document, add the §2.1 nonoccurrence shift.
+    """
+    pos, w, ok = _flatten_postings(index.indptr, q_tokens, q_weights, p_max)
+    g_scores = index.scores[pos] * w
+    g_docs = jnp.where(ok, index.doc_ids[pos], index.n_docs)
+    dense = jax.ops.segment_sum(
+        g_scores, g_docs, num_segments=index.n_docs + 1
+    )[: index.n_docs]
+    valid_q = q_tokens >= 0
+    shift = jnp.sum(
+        jnp.where(valid_q, index.nonoccurrence[jnp.where(valid_q, q_tokens, 0)], 0.0)
+        * q_weights
+    )
+    return dense + shift
+
+
+@partial(jax.jit, static_argnames=("p_max",))
+def score_batch(index: DeviceIndex, q_tokens: jax.Array, q_weights: jax.Array,
+                *, p_max: int) -> jax.Array:
+    """Batched exact scoring: ``[B, Q_max] -> [B, n_docs]``."""
+    return jax.vmap(lambda t, w: score_query(index, t, w, p_max=p_max))(
+        q_tokens, q_weights
+    )
+
+
+def query_posting_budget(index: BM25Index, q_tokens: np.ndarray) -> int:
+    """Host helper: exact Σ df(qᵢ) for a padded query batch (budget sizing)."""
+    df = np.diff(index.indptr)
+    safe = np.where(q_tokens >= 0, q_tokens, 0)
+    return int((np.where(q_tokens >= 0, df[safe], 0)).sum(axis=-1).max())
+
+
+def suggest_p_max(index: BM25Index, q_max: int, *, quantile: float = 1.0,
+                  tile: int = 1024) -> int:
+    """Static budget heuristic: q_max × quantile(df), rounded to a tile."""
+    df = np.diff(index.indptr)
+    df = df[df > 0]
+    per_tok = float(np.quantile(df, quantile)) if df.size else 1.0
+    budget = int(q_max * per_tok)
+    return max(tile, ((budget + tile - 1) // tile) * tile)

@@ -1,0 +1,123 @@
+"""BM25S tokenizer: scikit-learn regex split + stopwords + Snowball stemming.
+
+Faithful to §2 of the paper:
+
+* splitting uses the exact scikit-learn ``CountVectorizer`` token pattern
+  ``r"(?u)\\b\\w\\w+\\b"``;
+* optional stopword removal (Elastic English list);
+* optional Snowball stemming, applied to the *vocabulary* ("we can stem all
+  words in the vocabulary, which can be used to look up the stemmed version
+  of each word in the collection") — i.e. each unique surface form is stemmed
+  once and occurrences are mapped through a dict;
+* finally each (stemmed) unique word maps to an integer id, so documents and
+  queries become ``int32`` arrays usable to index score matrices.
+
+Everything here is host-side NumPy/Python — devices only ever see the ids.
+"""
+
+from __future__ import annotations
+
+import re
+from dataclasses import dataclass, field
+from typing import Iterable, Sequence
+
+import numpy as np
+
+from .stemmer import snowball_stem
+from .stopwords import get_stopwords
+
+TOKEN_PATTERN = re.compile(r"(?u)\b\w\w+\b")
+
+
+@dataclass
+class Vocabulary:
+    """Bidirectional word<->id mapping over (optionally stemmed) word forms."""
+
+    word_to_id: dict[str, int] = field(default_factory=dict)
+    frozen: bool = False
+
+    def lookup(self, word: str) -> int:
+        """Return id for ``word``, adding it if the vocab is not frozen."""
+        wid = self.word_to_id.get(word, -1)
+        if wid < 0 and not self.frozen:
+            wid = len(self.word_to_id)
+            self.word_to_id[word] = wid
+        return wid
+
+    def __len__(self) -> int:
+        return len(self.word_to_id)
+
+    @property
+    def id_to_word(self) -> list[str]:
+        out = [""] * len(self.word_to_id)
+        for w, i in self.word_to_id.items():
+            out[i] = w
+        return out
+
+
+@dataclass
+class Tokenizer:
+    """Configurable BM25S analyzer.
+
+    Parameters mirror the paper's Table 2 ablation axes: ``stopwords`` in
+    {"english", None} and ``stemmer`` in {"snowball", None}.
+    """
+
+    stopwords: str | None = "english"
+    stemmer: str | None = "snowball"
+    lower: bool = True
+
+    def __post_init__(self) -> None:
+        self._stop = get_stopwords(self.stopwords)
+        self._stem_cache: dict[str, str] = {}
+        self.vocab = Vocabulary()
+
+    # -- single text ---------------------------------------------------------
+    def split(self, text: str) -> list[str]:
+        if self.lower:
+            text = text.lower()
+        return TOKEN_PATTERN.findall(text)
+
+    def _stem(self, word: str) -> str:
+        stemmed = self._stem_cache.get(word)
+        if stemmed is None:
+            stemmed = snowball_stem(word)
+            self._stem_cache[word] = stemmed
+        return stemmed
+
+    def tokenize_words(self, text: str) -> list[str]:
+        words = [w for w in self.split(text) if w not in self._stop]
+        if self.stemmer is not None:
+            words = [self._stem(w) for w in words]
+        return words
+
+    def tokenize_ids(self, text: str, *, update_vocab: bool = True) -> np.ndarray:
+        """Tokenize to int32 ids. Unknown words map to -1 when vocab frozen."""
+        was_frozen = self.vocab.frozen
+        if not update_vocab:
+            self.vocab.frozen = True
+        try:
+            ids = [self.vocab.lookup(w) for w in self.tokenize_words(text)]
+        finally:
+            self.vocab.frozen = was_frozen
+        ids = [i for i in ids if i >= 0]
+        return np.asarray(ids, dtype=np.int32)
+
+    # -- corpus --------------------------------------------------------------
+    def tokenize_corpus(self, texts: Iterable[str]) -> list[np.ndarray]:
+        """Tokenize a corpus, growing the vocabulary."""
+        return [self.tokenize_ids(t, update_vocab=True) for t in texts]
+
+    def tokenize_queries(self, texts: Sequence[str]) -> list[np.ndarray]:
+        """Tokenize queries against the frozen corpus vocabulary.
+
+        Out-of-vocabulary query words are dropped: they cannot match any
+        document, so their score contribution is exactly zero for the sparse
+        variants, and they contribute only the query-constant ``S⁰`` shift
+        for the shifted variants (handled by the retriever).
+        """
+        return [self.tokenize_ids(t, update_vocab=False) for t in texts]
+
+    @property
+    def vocab_size(self) -> int:
+        return len(self.vocab)

@@ -1,0 +1,11 @@
+"""Synthetic data pipelines: corpora with planted relevance, LM batches,
+procedural graphs + neighbor sampling, recsys click logs."""
+
+from .corpus import SyntheticCorpus, zipf_corpus
+from .lm import lm_batches
+from .graphs import (batched_molecules, neighbor_sample, random_graph)
+from .clicklogs import ctr_batches, seq_rec_batches
+
+__all__ = ["SyntheticCorpus", "zipf_corpus", "lm_batches", "random_graph",
+           "neighbor_sample", "batched_molecules", "ctr_batches",
+           "seq_rec_batches"]

@@ -1,0 +1,18 @@
+"""Pallas TPU kernels for the framework's compute hot-spots.
+
+Each kernel file carries the ``pl.pallas_call`` + BlockSpec implementation;
+``ops.py`` exposes the jit'd wrappers; ``ref.py`` holds the pure-jnp oracles
+the tests pin every kernel against (interpret mode on CPU).
+
+Kernels:
+  bm25_block_score  — the paper's hot loop as membership-GEMM + scatter-GEMM
+  block_segment_sum — shared scatter-add substrate (GNN / bags / scoring)
+  embedding_bag     — HBM row-DMA gather + in-register weighted reduce
+  blockwise_topk    — per-block iterative-max selection (2-stage top-k)
+"""
+
+from .ops import bm25_score_blocked, embedding_bag, segment_sum_blocked, topk
+from . import ref
+
+__all__ = ["bm25_score_blocked", "embedding_bag", "segment_sum_blocked",
+           "topk", "ref"]

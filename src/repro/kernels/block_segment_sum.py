@@ -1,0 +1,61 @@
+"""Pallas TPU kernel: blocked segment-sum (scatter-add as one-hot matmul).
+
+The shared sparse-substrate primitive (DESIGN.md §2): GNN message
+aggregation, embedding-bag reduction and BM25 scoring all reduce to
+``out[s] += values[p]`` for ``s = segment_ids[p]`` within a destination
+block. TPU has no fast random scatter, so the tile-level scatter is lowered
+to ``one_hot(segment_ids)ᵀ @ values`` on the MXU.
+
+Grid ``(n_blocks, P // tile_p)``; the posting-tile dimension accumulates
+into the block's output. Padding rows must carry zero values.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu  # noqa: F401
+
+
+def _kernel(ids_ref, val_ref, out_ref, *, num_segments: int):
+    pj = pl.program_id(1)
+
+    @pl.when(pj == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    ids = ids_ref[0, :]                                    # [PT] int32
+    vals = val_ref[0, :, :]                                # [PT, D]
+    s_iota = jax.lax.broadcasted_iota(
+        jnp.int32, (num_segments, ids.shape[0]), 0)
+    oneh = (s_iota == ids[None, :]).astype(vals.dtype)     # [S, PT]
+    out_ref[0, :, :] += oneh @ vals                        # [S, D] MXU
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("num_segments", "tile_p", "interpret"))
+def block_segment_sum(values: jax.Array, segment_ids: jax.Array, *,
+                      num_segments: int, tile_p: int = 512,
+                      interpret: bool | None = None) -> jax.Array:
+    """[nb, P, D] values + [nb, P] local ids -> [nb, num_segments, D]."""
+    nb, p, d = values.shape
+    assert segment_ids.shape == (nb, p), (segment_ids.shape, values.shape)
+    assert p % tile_p == 0, (p, tile_p)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    return pl.pallas_call(
+        functools.partial(_kernel, num_segments=num_segments),
+        grid=(nb, p // tile_p),
+        in_specs=[
+            pl.BlockSpec((1, tile_p), lambda i, j: (i, j)),
+            pl.BlockSpec((1, tile_p, d), lambda i, j: (i, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, num_segments, d), lambda i, j: (i, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((nb, num_segments, d), values.dtype),
+        interpret=interpret,
+        name="block_segment_sum",
+    )(segment_ids, values)

@@ -1,0 +1,85 @@
+"""jit'd public wrappers around the Pallas kernels.
+
+These are the entry points the rest of the framework calls; each picks the
+kernel path on TPU and interpret mode elsewhere, and composes the kernel
+with the surrounding host/JAX logic (layout reshapes, nonoccurrence shift,
+global top-k merge).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .blockwise_topk import blockwise_topk_kernel
+from .bm25_block_score import bm25_block_score
+from .block_segment_sum import block_segment_sum
+from .embedding_bag import embedding_bag_kernel
+
+
+def bm25_score_blocked(token_ids: jax.Array, local_doc: jax.Array,
+                       scores: jax.Array, uniq_tokens: jax.Array,
+                       weights: jax.Array, nonocc_shift: jax.Array, *,
+                       block_size: int, n_docs: int,
+                       tile_p: int = 512) -> jax.Array:
+    """Batched BM25 scores [B, n_docs] from block-bucketed postings.
+
+    ``nonocc_shift`` is the per-query ``Σᵢ wᵢ·S⁰(qᵢ)`` constant ([B]) — zero
+    for the sparse variants, the §2.1 shift for BM25L/BM25+/TFldp.
+    """
+    out = bm25_block_score(token_ids, local_doc, scores, uniq_tokens,
+                           weights, block_size=block_size, tile_p=tile_p)
+    nb, bs, b = out.shape
+    flat = jnp.transpose(out, (2, 0, 1)).reshape(b, nb * bs)[:, :n_docs]
+    return flat + nonocc_shift[:, None]
+
+
+def segment_sum_blocked(values: jax.Array, segment_ids: jax.Array, *,
+                        num_segments: int, tile_p: int = 512) -> jax.Array:
+    """Blocked scatter-add: [nb, P, D] + [nb, P] -> [nb, num_segments, D]."""
+    return block_segment_sum(values, segment_ids,
+                             num_segments=num_segments, tile_p=tile_p)
+
+
+def embedding_bag(table: jax.Array, indices: jax.Array,
+                  weights: jax.Array | None = None, *,
+                  tile_b: int = 128) -> jax.Array:
+    """Kernel-backed EmbeddingBag; pads B up to a tile multiple if needed."""
+    b, f = indices.shape
+    if weights is None:
+        weights = jnp.ones((b, f), table.dtype)
+    pad = (-b) % tile_b
+    if pad:
+        indices = jnp.concatenate(
+            [indices, jnp.full((pad, f), -1, indices.dtype)])
+        weights = jnp.concatenate([weights, jnp.zeros((pad, f), weights.dtype)])
+    out = embedding_bag_kernel(table, indices, weights, tile_b=tile_b)
+    return out[:b]
+
+
+def topk(x: jax.Array, k: int, *, block: int = 4096
+         ) -> tuple[jax.Array, jax.Array]:
+    """Two-stage top-k over the last axis: per-block kernel + global merge.
+
+    Accepts [n] or [B, n]; returns (values, indices) sorted descending.
+    """
+    squeeze = x.ndim == 1
+    if squeeze:
+        x = x[None]
+    bsz, n = x.shape
+    if n % block or n <= block:
+        vals, idx = jax.lax.top_k(x, k)                 # fallback: tiny inputs
+    else:
+        nb = n // block
+        kb = min(k, block)
+        xb = x.reshape(bsz * nb, block)
+        bvals, bidx = blockwise_topk_kernel(xb, k=kb)
+        bvals = bvals.reshape(bsz, nb * kb)
+        gidx = (bidx.reshape(bsz, nb, kb)
+                + (jnp.arange(nb, dtype=jnp.int32) * block)[None, :, None]
+                ).reshape(bsz, nb * kb)
+        vals, merge_idx = jax.lax.top_k(bvals, k)       # tiny global merge
+        idx = jnp.take_along_axis(gidx, merge_idx, axis=-1)
+    if squeeze:
+        return vals[0], idx[0]
+    return vals, idx

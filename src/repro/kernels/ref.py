@@ -1,0 +1,71 @@
+"""Pure-jnp oracles for every Pallas kernel in this package.
+
+Each ``*_ref`` takes exactly the operands of its kernel counterpart and is
+written with the most obvious jnp formulation — no blocking, no MXU tricks —
+so kernel tests can ``assert_allclose`` against unambiguous semantics.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def bm25_block_score_ref(token_ids: jax.Array, local_doc: jax.Array,
+                         scores: jax.Array, uniq_tokens: jax.Array,
+                         weights: jax.Array, *, block_size: int,
+                         spmd_axes=None) -> jax.Array:
+    """[nb, P] postings x [U, B] query weights -> [nb, block_size, B] scores.
+
+    For each posting p in block i: binary-search its token in the sorted
+    unique-token table (exact match; padding postings have token -1 and
+    match nothing), gather the per-query weight row, multiply by the eager
+    score, scatter-add into its local document row.
+    """
+    nb, p = token_ids.shape
+
+    def one_block(tok, loc, sc):
+        idx = jnp.searchsorted(uniq_tokens, tok).astype(jnp.int32)
+        idx = jnp.minimum(idx, uniq_tokens.shape[0] - 1)
+        hit = (jnp.take(uniq_tokens, idx) == tok)[:, None]
+        w = jnp.where(hit, jnp.take(weights, idx, axis=0), 0.0)           # [P,B]
+        contrib = sc[:, None] * w                                         # [P,B]
+        return jax.ops.segment_sum(contrib, loc, num_segments=block_size)
+
+    # spmd_axes pins the block dim's mesh axes so the per-block scatter
+    # stays shard-local under pjit (see DESIGN.md §5)
+    return jax.vmap(one_block, spmd_axis_name=spmd_axes)(
+        token_ids, local_doc, scores)
+
+
+def block_segment_sum_ref(values: jax.Array, segment_ids: jax.Array,
+                          *, num_segments: int) -> jax.Array:
+    """[nb, P, D] values + [nb, P] local ids -> [nb, num_segments, D].
+
+    Padding rows must carry zero values (the blocked layouts guarantee it).
+    """
+    def one_block(v, s):
+        return jax.ops.segment_sum(v, s, num_segments=num_segments)
+
+    return jax.vmap(one_block)(values, segment_ids)
+
+
+def embedding_bag_ref(table: jax.Array, indices: jax.Array,
+                      weights: jax.Array) -> jax.Array:
+    """[V, D] table + [B, F] indices (-1 pad) + [B, F] weights -> [B, D]."""
+    valid = indices >= 0
+    safe = jnp.where(valid, indices, 0)
+    rows = jnp.take(table, safe, axis=0)                  # [B, F, D]
+    w = weights * valid.astype(table.dtype)
+    return (rows * w[..., None]).sum(axis=1)
+
+
+def blockwise_topk_ref(x: jax.Array, *, k: int, block: int
+                       ) -> tuple[jax.Array, jax.Array]:
+    """[n] -> per-block (values [nb, k], global indices [nb, k]), descending."""
+    n = x.shape[0]
+    nb = n // block
+    blocks = x.reshape(nb, block)
+    vals, idx = jax.lax.top_k(blocks, k)
+    gidx = idx + (jnp.arange(nb, dtype=idx.dtype) * block)[:, None]
+    return vals, gidx

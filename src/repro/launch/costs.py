@@ -1,0 +1,297 @@
+"""Loop-aware cost accounting for the dry-run roofline.
+
+XLA's ``compiled.cost_analysis()`` counts every ``while`` body ONCE, so a
+scan-over-layers transformer under-reports FLOPs by ~n_layers ×
+n_microbatches (verified in EXPERIMENTS.md §Dry-run methodology). Two
+replacements:
+
+* ``jaxpr_cost`` — walks the closed jaxpr multiplying through ``scan``
+  lengths (exact trip counts by construction). FLOPs from dot_general
+  contraction shapes; HBM-traffic estimate from a fusion-aware model:
+  dot/gather/scatter/reduce operands+results are read/written from HBM,
+  other elementwise ops contribute their OUTPUT bytes only (XLA fuses
+  producer chains; each materialized tensor is written once). Documented
+  as the traffic model in EXPERIMENTS.md.
+
+* ``collective_bytes_multiplied`` — parses the post-SPMD optimized HLO,
+  recovers each while loop's trip count from the largest integer constant
+  in its condition computation, and multiplies the collective payloads in
+  its body accordingly (recursively through call/fusion/conditional).
+"""
+
+from __future__ import annotations
+
+import math
+import re
+from typing import Any
+
+import jax
+import numpy as np
+
+_DTYPE_BYTES = {
+    "float64": 8, "float32": 4, "float16": 2, "bfloat16": 2,
+    "int64": 8, "uint64": 8, "int32": 4, "uint32": 4,
+    "int16": 2, "uint16": 2, "int8": 1, "uint8": 1, "bool": 1,
+    "complex64": 8, "complex128": 16,
+    "float8_e4m3fn": 1, "float8_e5m2": 1,
+}
+
+
+def _nbytes(aval) -> float:
+    try:
+        return float(np.prod(aval.shape)) * _DTYPE_BYTES.get(
+            str(aval.dtype), 4)
+    except Exception:
+        return 0.0
+
+
+def _nelems(aval) -> float:
+    try:
+        return float(np.prod(aval.shape))
+    except Exception:
+        return 0.0
+
+
+_ELEMENTWISE_FREE = {
+    "broadcast_in_dim", "reshape", "squeeze", "convert_element_type",
+    "iota", "constant", "slice", "transpose", "rev", "bitcast_convert_type",
+    "copy", "stop_gradient", "split",
+}
+
+_SUBJAXPR_KEYS = ("jaxpr", "call_jaxpr", "fun_jaxpr", "closed_jaxpr")
+
+
+def _sub_jaxprs(params: dict):
+    for k in _SUBJAXPR_KEYS:
+        if k in params and params[k] is not None:
+            yield params[k]
+
+
+def jaxpr_cost(closed, *, shard_map_factor: int = 1) -> dict:
+    """Returns {"flops": .., "bytes": ..} for one closed jaxpr (global)."""
+    acc = {"flops": 0.0, "bytes": 0.0}
+    _walk(closed.jaxpr if hasattr(closed, "jaxpr") else closed, acc,
+          shard_map_factor)
+    return acc
+
+
+def _walk(jaxpr, acc: dict, smf: int, scale: float = 1.0) -> None:
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        params = eqn.params
+        if name == "dot_general":
+            lhs = eqn.invars[0].aval
+            (lc, _rc), (lb, _rb) = params["dimension_numbers"]
+            k = float(np.prod([lhs.shape[i] for i in lc])) if lc else 1.0
+            out = eqn.outvars[0].aval
+            acc["flops"] += scale * 2.0 * _nelems(out) * k
+            acc["bytes"] += scale * (sum(_nbytes(v.aval) for v in eqn.invars)
+                                     + _nbytes(out))
+        elif name == "scan":
+            length = float(params.get("length", 1))
+            inner = {"flops": 0.0, "bytes": 0.0}
+            _walk(params["jaxpr"].jaxpr, inner, smf)
+            acc["flops"] += scale * length * inner["flops"]
+            acc["bytes"] += scale * length * inner["bytes"]
+        elif name == "while":
+            # only Pallas-interpret / fori paths hit this; assume 1 trip and
+            # flag via bytes of carry (rare in dry-run cells)
+            for sub in _sub_jaxprs(params):
+                inner = {"flops": 0.0, "bytes": 0.0}
+                _walk(sub.jaxpr if hasattr(sub, "jaxpr") else sub, inner, smf)
+                acc["flops"] += scale * inner["flops"]
+                acc["bytes"] += scale * inner["bytes"]
+        elif name == "cond":
+            costs = []
+            for br in params.get("branches", ()):
+                inner = {"flops": 0.0, "bytes": 0.0}
+                _walk(br.jaxpr if hasattr(br, "jaxpr") else br, inner, smf)
+                costs.append(inner)
+            if costs:
+                acc["flops"] += scale * max(c["flops"] for c in costs)
+                acc["bytes"] += scale * max(c["bytes"] for c in costs)
+        elif name == "shard_map":
+            for sub in _sub_jaxprs(params):
+                inner = {"flops": 0.0, "bytes": 0.0}
+                _walk(sub.jaxpr if hasattr(sub, "jaxpr") else sub, inner, smf)
+                acc["flops"] += scale * smf * inner["flops"]
+                acc["bytes"] += scale * smf * inner["bytes"]
+        elif any(k in params for k in _SUBJAXPR_KEYS):
+            for sub in _sub_jaxprs(params):
+                _walk(sub.jaxpr if hasattr(sub, "jaxpr") else sub, acc, smf,
+                      scale)
+        elif name in ("gather", "dynamic_slice", "take"):
+            out = eqn.outvars[0].aval
+            acc["bytes"] += scale * 2.0 * _nbytes(out)
+        elif name.startswith("scatter") or name == "dynamic_update_slice":
+            upd = eqn.invars[-1].aval
+            acc["flops"] += scale * _nelems(upd)
+            acc["bytes"] += scale * (2.0 * _nbytes(upd)
+                                     + _nbytes(eqn.outvars[0].aval) * 0.0)
+        elif name.startswith("reduce_") or name in ("argmax", "argmin"):
+            inb = sum(_nbytes(v.aval) for v in eqn.invars)
+            acc["flops"] += scale * sum(_nelems(v.aval) for v in eqn.invars)
+            acc["bytes"] += scale * inb
+        elif name in ("sort", "top_k", "approx_top_k"):
+            inb = sum(_nbytes(v.aval) for v in eqn.invars)
+            n = sum(_nelems(v.aval) for v in eqn.invars)
+            acc["flops"] += scale * n * max(math.log2(max(n, 2)), 1.0)
+            acc["bytes"] += scale * 2.0 * inb
+        elif name in ("cumsum", "cumlogsumexp", "cummax", "cumprod"):
+            acc["flops"] += scale * 2.0 * _nelems(eqn.outvars[0].aval)
+            acc["bytes"] += scale * 2.0 * _nbytes(eqn.outvars[0].aval)
+        elif name in _ELEMENTWISE_FREE:
+            pass
+        else:
+            # generic elementwise: flops = outputs, traffic = outputs once
+            outb = sum(_nbytes(v.aval) for v in eqn.outvars)
+            acc["flops"] += scale * sum(_nelems(v.aval) for v in eqn.outvars)
+            acc["bytes"] += scale * outb
+
+
+def traced_cost(fn, args, *, n_shards: int = 1) -> dict:
+    """Trace ``fn(*args)`` (abstract) and return global flops/bytes."""
+    closed = jax.make_jaxpr(fn)(*args)
+    return jaxpr_cost(closed, shard_map_factor=n_shards)
+
+
+# --------------------------------------------------------------------------
+# loop-aware collective accounting from optimized HLO text
+# --------------------------------------------------------------------------
+
+_HLO_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%?([\w\.\-]+)\s*(?:\([^)]*\))?\s*->.*\{")
+_WHILE_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_WHILE_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_CALL_RE = re.compile(r"(?:calls|to_apply)=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"branch_computations=\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+_COLL_RE = re.compile(
+    r"=\s+(.+?)\s+(all-gather|all-reduce|reduce-scatter|all-to-all"
+    r"|collective-permute)(-start|-done)?\(")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _HLO_DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _HLO_DTYPE_BYTES[dt]
+    return total
+
+
+def _split_computations(text: str) -> dict[str, list[str]]:
+    """Map computation name -> body lines. Headers sit at column 0 and end
+    with '{'; params may contain nested parens, so only the leading token
+    (the computation name) is parsed."""
+    comps: dict[str, list[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        if line and not line.startswith(" "):
+            s = line.strip()
+            if s == "}":
+                cur = None
+                continue
+            if s.endswith("{") and (s.startswith("%") or s.startswith("ENTRY")):
+                tok = s.split()[1] if s.startswith("ENTRY") else s.split()[0]
+                name = tok.lstrip("%").split("(")[0]
+                if name:
+                    cur = name
+                    comps[cur] = []
+                continue
+            cur = None          # module header / metadata sections
+            continue
+        if cur is not None:
+            comps[cur].append(line)
+    return comps
+
+
+def collective_bytes_multiplied(text: str) -> dict:
+    """Collective wire bytes with while-loop trip counts multiplied in."""
+    comps = _split_computations(text)
+    entry = None
+    for line in text.splitlines():
+        if line.startswith("ENTRY"):
+            m = re.match(r"ENTRY\s+%?([\w\.\-]+)", line)
+            if m:
+                entry = m.group(1)
+    if entry is None:
+        entry = next(iter(comps), None)
+
+    def trip_count(cond_name: str) -> int:
+        consts = []
+        for line in comps.get(cond_name, ()):
+            consts += [int(c) for c in _CONST_RE.findall(line)]
+        return max([c for c in consts if 1 <= c <= 10_000_000] or [1])
+
+    memo: dict[str, dict] = {}
+
+    def visit(name: str) -> dict:
+        if name in memo:
+            return memo[name]
+        memo[name] = {"per_op": {}, "wire_bytes": 0.0}   # cycle guard
+        agg: dict[str, dict] = {}
+        wire = 0.0
+
+        def add(op, nbytes, w, mult=1.0):
+            d = agg.setdefault(op, {"count": 0, "bytes": 0.0,
+                                    "wire_bytes": 0.0})
+            d["count"] += mult
+            d["bytes"] += nbytes * mult
+            d["wire_bytes"] += w * mult
+
+        for line in comps.get(name, ()):
+            if " while(" in line:
+                mc_, mb_ = (_WHILE_COND_RE.search(line),
+                            _WHILE_BODY_RE.search(line))
+                if mc_ and mb_:
+                    t = trip_count(mc_.group(1))
+                    sub = visit(mb_.group(1))
+                    for op, d in sub["per_op"].items():
+                        add(op, d["bytes"], d["wire_bytes"], t)
+                    wire += t * sub["wire_bytes"]
+                    continue
+            mcnd = _COND_RE.search(line)
+            if mcnd:
+                branches = [b.strip().lstrip("%") for b in
+                            mcnd.group(1).split(",")]
+                subs = [visit(b) for b in branches if b in comps]
+                if subs:
+                    worst = max(subs, key=lambda s: s["wire_bytes"])
+                    for op, d in worst["per_op"].items():
+                        add(op, d["bytes"], d["wire_bytes"])
+                    wire += worst["wire_bytes"]
+                continue
+            mc = _COLL_RE.search(line)
+            if mc and mc.group(3) != "-done":
+                nbytes = _shape_bytes(mc.group(1))
+                w = 2 * nbytes if mc.group(2) == "all-reduce" else nbytes
+                add(mc.group(2), nbytes, w)
+                wire += w
+                continue
+            mcall = _CALL_RE.search(line)
+            if mcall and "fusion" not in line:
+                sub = visit(mcall.group(1))
+                for op, d in sub["per_op"].items():
+                    add(op, d["bytes"], d["wire_bytes"])
+                wire += sub["wire_bytes"]
+        memo[name] = {"per_op": agg, "wire_bytes": wire}
+        return memo[name]
+
+    out = visit(entry) if entry else {"per_op": {}, "wire_bytes": 0.0}
+    # round counts for readability
+    for d in out["per_op"].values():
+        d["count"] = int(d["count"])
+        d["bytes"] = int(d["bytes"])
+        d["wire_bytes"] = int(d["wire_bytes"])
+    out["wire_bytes"] = int(out["wire_bytes"])
+    return out

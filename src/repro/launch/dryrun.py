@@ -1,0 +1,249 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+DOC = """Multi-pod dry-run: lower + compile every (arch × shape) cell on the
+production meshes and extract the roofline terms from the compiled artifact.
+
+For each cell:
+    with mesh:
+        lowered  = jax.jit(step, in_shardings=...).lower(*abstract_args)
+        compiled = lowered.compile()
+        memory_analysis / cost_analysis / collective parse (as_text)
+
+Results append incrementally to a JSON file (benchmarks/out/dryrun.json by
+default) so a long sweep survives interruption; EXPERIMENTS.md §Dry-run and
+§Roofline are generated from it.
+
+Usage:
+    python -m repro.launch.dryrun --arch qwen3-8b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod both] [--out FILE]
+"""
+
+import argparse
+import json
+import re
+import time
+import traceback
+
+
+# TPU v5e hardware model (per chip)
+PEAK_FLOPS_BF16 = 197e12       # FLOP/s
+HBM_BW = 819e9                 # B/s
+ICI_BW = 50e9                  # B/s per link
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16,
+}
+
+_COLLECTIVE_RE = re.compile(
+    r"=\s+(\w[\w\d\.\-]*)\s+"                      # result shape or tuple
+    r"(all-gather|all-reduce|reduce-scatter|all-to-all|collective-permute)"
+    r"(?:-start|-done)?\(", )
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+
+
+def _shape_bytes(shape_str: str) -> int:
+    """Bytes of one HLO shape string like 'bf16[16,4096]' or a tuple."""
+    total = 0
+    for dt, dims in _SHAPE_RE.findall(shape_str):
+        if dt not in _DTYPE_BYTES:
+            continue
+        n = 1
+        for d in dims.split(","):
+            if d:
+                n *= int(d)
+        total += n * _DTYPE_BYTES[dt]
+    return total
+
+
+def parse_collectives(hlo_text: str) -> dict:
+    """Per-device collective bytes from post-SPMD optimized HLO.
+
+    Wire-cost model (per device): all-reduce ≈ 2× payload (ring
+    reduce-scatter + all-gather), others ≈ 1× the op's result payload.
+    ``-start``/``-done`` pairs are counted once (on the start).
+    """
+    per_op: dict[str, dict] = {}
+    for line in hlo_text.splitlines():
+        line = line.strip()
+        m = re.search(
+            r"=\s+(.+?)\s+(all-gather|all-reduce|reduce-scatter|all-to-all"
+            r"|collective-permute)(-start|-done)?\(", line)
+        if not m or m.group(3) == "-done":
+            continue
+        shape_str, op = m.group(1), m.group(2)
+        nbytes = _shape_bytes(shape_str)
+        wire = 2 * nbytes if op == "all-reduce" else nbytes
+        d = per_op.setdefault(op, {"count": 0, "bytes": 0, "wire_bytes": 0})
+        d["count"] += 1
+        d["bytes"] += nbytes
+        d["wire_bytes"] += wire
+    total_wire = sum(d["wire_bytes"] for d in per_op.values())
+    return {"per_op": per_op, "wire_bytes": total_wire}
+
+
+def roofline(flops_global: float, bytes_global: float, coll_wire_dev: float,
+             n_chips: int, model_flops: float) -> dict:
+    """Three roofline terms (seconds) + bottleneck + useful-compute ratio.
+
+    ``flops_global``/``bytes_global`` come from the loop-aware jaxpr walk
+    (whole step, all devices); per-device = /n_chips under the cell's
+    sharding. ``coll_wire_dev`` is per-device wire bytes from the
+    loop-multiplied HLO parse.
+    """
+    flops_dev = flops_global / n_chips
+    bytes_dev = bytes_global / n_chips
+    t_compute = flops_dev / PEAK_FLOPS_BF16
+    t_memory = bytes_dev / HBM_BW
+    t_coll = coll_wire_dev / ICI_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory,
+             "collective_s": t_coll}
+    bottleneck = max(terms, key=terms.get)
+    return {
+        "hlo_flops_per_device": flops_dev,
+        "hlo_bytes_per_device": bytes_dev,
+        "collective_wire_bytes_per_device": coll_wire_dev,
+        **terms,
+        "bottleneck": bottleneck.replace("_s", ""),
+        "model_flops": model_flops,
+        "useful_flops_ratio": (model_flops / flops_global
+                               if flops_global else 0.0),
+        "step_time_bound_s": max(terms.values()),
+        "roofline_fraction": (
+            (model_flops / (n_chips * PEAK_FLOPS_BF16)) /
+            max(max(terms.values()), 1e-30)),
+    }
+
+
+def run_cell(cell, mesh, *, verbose: bool = True) -> dict:
+    import jax
+
+    from ..dist.sharding import activation_sharding
+    from .costs import collective_bytes_multiplied, traced_cost
+
+    t0 = time.time()
+    if cell.remesh is not None:
+        mesh = cell.remesh(mesh)
+    fn, args = cell.build(mesh)
+    in_shardings = cell.shardings(mesh, args)
+    with mesh, activation_sharding(mesh):
+        lowered = jax.jit(fn, in_shardings=in_shardings).lower(*args)
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+        try:
+            mem = compiled.memory_analysis()
+            mem_d = {
+                "argument_size_b": getattr(mem, "argument_size_in_bytes", 0),
+                "output_size_b": getattr(mem, "output_size_in_bytes", 0),
+                "temp_size_b": getattr(mem, "temp_size_in_bytes", 0),
+                "generated_code_size_b":
+                    getattr(mem, "generated_code_size_in_bytes", 0),
+            }
+        except Exception:
+            mem_d = {}
+        cost_list = compiled.cost_analysis()
+        xla_cost = cost_list if isinstance(cost_list, dict) else cost_list[0]
+        text = compiled.as_text()
+        # loop-aware global flops/bytes from the jaxpr (see costs.py)
+        jc = traced_cost(fn, args, n_shards=mesh.size)
+    coll = collective_bytes_multiplied(text)
+    n_chips = mesh.size
+    roof = roofline(jc["flops"], jc["bytes"], coll["wire_bytes"],
+                    n_chips, cell.model_flops)
+    rec = {
+        "arch": cell.arch, "shape": cell.shape, "kind": cell.kind,
+        "mesh": "x".join(str(mesh.shape[a]) for a in mesh.shape),
+        "axes": list(mesh.shape.keys()), "n_chips": n_chips,
+        "lower_s": round(t_lower, 2), "compile_s": round(t_compile, 2),
+        "memory": mem_d, "collectives": coll["per_op"],
+        "xla_cost_flops_bodies_once": float(xla_cost.get("flops", 0.0)),
+        "xla_cost_bytes_bodies_once":
+            float(xla_cost.get("bytes accessed", 0.0)),
+        **roof,
+        "note": cell.note, "ok": True,
+    }
+    if verbose:
+        per_dev = (mem_d.get("argument_size_b", 0)
+                   + mem_d.get("temp_size_b", 0)) / 2**30
+        print(f"[dryrun] {cell.key:42s} mesh={rec['mesh']:9s} "
+              f"bottleneck={rec['bottleneck']:10s} "
+              f"t_bound={rec['step_time_bound_s']:.3e}s "
+              f"mem/dev={per_dev:.2f}GiB "
+              f"(lower {t_lower:.0f}s compile {t_compile:.0f}s)", flush=True)
+    return rec
+
+
+def load_results(path: str) -> dict:
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (FileNotFoundError, json.JSONDecodeError):
+        return {}
+
+
+def save_result(path: str, key: str, rec: dict) -> None:
+    results = load_results(path)
+    results[key] = rec
+    os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(results, f, indent=1)
+    os.replace(tmp, path)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", choices=["off", "on", "both"],
+                    default="both")
+    ap.add_argument("--out", default="benchmarks/out/dryrun.json")
+    ap.add_argument("--skip-done", action="store_true")
+    ap.add_argument("--include-extra", action="store_true",
+                    help="include the bm25s extra cells in --all")
+    args = ap.parse_args()
+
+    from ..configs import all_cells, get_cells
+    from .mesh import make_production_mesh
+
+    if args.all:
+        cells = all_cells(include_extra=args.include_extra)
+    elif args.arch:
+        cells = get_cells(args.arch)
+        if args.shape:
+            cells = [c for c in cells if c.shape == args.shape]
+    else:
+        ap.error("--arch or --all required")
+
+    pods = {"off": [False], "on": [True], "both": [False, True]}[args.multi_pod]
+    done = load_results(args.out) if args.skip_done else {}
+    failures = []
+    for multi_pod in pods:
+        mesh = make_production_mesh(multi_pod=multi_pod)
+        tag = "2x16x16" if multi_pod else "16x16"
+        for cell in cells:
+            key = f"{cell.key}@{tag}"
+            if key in done and done[key].get("ok"):
+                print(f"[dryrun] skip {key} (done)", flush=True)
+                continue
+            try:
+                rec = run_cell(cell, mesh)
+            except Exception as e:  # record failures, keep sweeping
+                rec = {"arch": cell.arch, "shape": cell.shape,
+                       "mesh": tag, "ok": False, "error": repr(e),
+                       "traceback": traceback.format_exc()[-2000:]}
+                failures.append(key)
+                print(f"[dryrun] FAIL {key}: {e!r}", flush=True)
+            save_result(args.out, key, rec)
+    print(f"[dryrun] complete; {len(failures)} failures: {failures}",
+          flush=True)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,133 @@
+import os
+os.environ["XLA_FLAGS"] = (os.environ.get("_REPRO_EXTRA_XLA_FLAGS", "") +
+                           " --xla_force_host_platform_device_count=512").strip()
+
+DOC = """§Perf hillclimb driver: named variants of the three chosen cells.
+
+Each variant encodes one hypothesis from the EXPERIMENTS.md §Perf log
+(sharding scheme, microbatch count, dtype, top-k structure). Results append
+to benchmarks/out/hillclimb.json next to the baselines in dryrun.json.
+
+    python -m repro.launch.hillclimb --cell qwen3-8b/train_4k --variant dp64tp4
+    python -m repro.launch.hillclimb --all
+"""
+
+import argparse
+import json
+
+
+def _variants():
+    import jax.numpy as jnp
+
+    from ..configs import bm25s as bm25s_cfg
+    from ..configs import mixtral_8x22b, qwen3_8b
+    from ..configs.common import lm_train_cell, remesh_dp_tp
+
+    v = {}
+
+    # ---- bonus: qwen3-8b/decode_32k (memory-bound) — int8 KV cache -------
+    from dataclasses import replace as _rep
+    from ..configs.common import lm_decode_cell
+    v["qwen3-8b/decode_32k"] = {
+        "kv_int8": lm_decode_cell(
+            "qwen3-8b", _rep(qwen3_8b.CONFIG, kv_quant=True),
+            batch=128, seq_len=32768, shape_name="decode_32k",
+            note="int8 KV cache, per-(pos, head) scales"),
+    }
+
+    # ---- qwen3-8b/train_4k: dense-LM TP collectives dominate -------------
+    q = qwen3_8b.CONFIG
+    v["qwen3-8b/train_4k"] = {
+        "mb2": lm_train_cell("qwen3-8b", q, global_batch=256, seq_len=4096,
+                             n_microbatches=2, note="mb 4->2"),
+        "dp64tp4": lm_train_cell(
+            "qwen3-8b", q, global_batch=256, seq_len=4096, n_microbatches=4,
+            remesh=remesh_dp_tp(64, 4), note="remesh dp64 tp4"),
+        "dp256tp1": lm_train_cell(
+            "qwen3-8b", q, global_batch=256, seq_len=4096, n_microbatches=4,
+            remesh=remesh_dp_tp(256, 1), note="remesh dp256 tp1 (pure FSDP)"),
+        "dp256tp1_mb1": lm_train_cell(
+            "qwen3-8b", q, global_batch=256, seq_len=4096, n_microbatches=1,
+            remesh=remesh_dp_tp(256, 1),
+            note="pure FSDP + single microbatch (gathers once)"),
+    }
+
+    # ---- mixtral-8x22b/train_4k: most collective-bound cell --------------
+    m = mixtral_8x22b.CONFIG
+    v["mixtral-8x22b/train_4k"] = {
+        "mb4": lm_train_cell("mixtral-8x22b", m, global_batch=256,
+                             seq_len=4096, n_microbatches=4,
+                             note="mb 8->4 (halve FSDP re-gathers)"),
+        "dp64tp4_mb4": lm_train_cell(
+            "mixtral-8x22b", m, global_batch=256, seq_len=4096,
+            n_microbatches=4, remesh=remesh_dp_tp(64, 4),
+            note="remesh dp64 tp4 + mb4"),
+        "dp32tp8_mb4": lm_train_cell(
+            "mixtral-8x22b", m, global_batch=256, seq_len=4096,
+            n_microbatches=4, remesh=remesh_dp_tp(32, 8),
+            note="remesh dp32 tp8 + mb4"),
+        "dp32tp8_mb2": lm_train_cell(
+            "mixtral-8x22b", m, global_batch=256, seq_len=4096,
+            n_microbatches=2, remesh=remesh_dp_tp(32, 8),
+            note="remesh dp32 tp8 + mb2 (halve weight re-gathers again)"),
+        "dp64tp4_mb2": lm_train_cell(
+            "mixtral-8x22b", m, global_batch=256, seq_len=4096,
+            n_microbatches=2, remesh=remesh_dp_tp(64, 4),
+            note="remesh dp64 tp4 + mb2"),
+    }
+
+    # ---- bm25s/score_blocked_2m: the paper's technique, batched ----------
+    v["bm25s/score_blocked_2m"] = {
+        "topk2stage": bm25s_cfg._score_blocked_cell(
+            sharded_topk=True, note="shard-aligned 2-stage top-k"),
+        "topk2stage_bf16": bm25s_cfg._score_blocked_cell(
+            sharded_topk=True, score_dtype=jnp.bfloat16,
+            note="2-stage top-k + bf16 scores/weights"),
+        "topk2stage_bf16_b1024": bm25s_cfg._score_blocked_cell(
+            sharded_topk=True, score_dtype=jnp.bfloat16, batch=1024,
+            u_max=4096, note="+ 4x query batch (amortize posting reads)"),
+    }
+    return v
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--cell", default=None)
+    ap.add_argument("--variant", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--out", default="benchmarks/out/hillclimb.json")
+    args = ap.parse_args()
+
+    from .dryrun import load_results, run_cell, save_result
+    from .mesh import make_production_mesh
+
+    variants = _variants()
+    todo = []
+    if args.all:
+        for cell_key, vs in variants.items():
+            todo += [(cell_key, name, c) for name, c in vs.items()]
+    else:
+        vs = variants[args.cell]
+        names = [args.variant] if args.variant else list(vs)
+        todo = [(args.cell, n, vs[n]) for n in names]
+
+    mesh = make_production_mesh(multi_pod=False)
+    done = load_results(args.out)
+    for cell_key, name, cell in todo:
+        key = f"{cell_key}#{name}@16x16"
+        if key in done and done[key].get("ok"):
+            print(f"[hillclimb] skip {key}")
+            continue
+        try:
+            rec = run_cell(cell, mesh)
+            rec["variant"] = name
+        except Exception as e:
+            import traceback
+            rec = {"ok": False, "variant": name, "error": repr(e),
+                   "traceback": traceback.format_exc()[-1500:]}
+            print(f"[hillclimb] FAIL {key}: {e!r}")
+        save_result(args.out, key, rec)
+
+
+if __name__ == "__main__":
+    main()

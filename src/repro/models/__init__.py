@@ -1,0 +1,9 @@
+"""Model zoo: LM transformer family, EGNN, and recsys architectures."""
+
+from . import egnn, recsys, transformer
+from .transformer import LMConfig
+from .egnn import EGNNConfig
+from .recsys import RecsysConfig
+
+__all__ = ["egnn", "recsys", "transformer",
+           "LMConfig", "EGNNConfig", "RecsysConfig"]

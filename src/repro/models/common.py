@@ -1,0 +1,77 @@
+"""Shared model components: norms, RoPE, initializers, masking.
+
+Pure-functional style: params are pytrees of jnp arrays, every module is a
+``(params, x) -> y`` function. Compute runs in ``cfg.dtype`` (bf16 on TPU);
+parameters are stored fp32 and cast at use (the train stack keeps fp32
+masters + optimizer state; serving casts once at load).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+def rms_norm(x: jax.Array, weight: jax.Array, *, eps: float = 1e-6,
+             plus_one: bool = False) -> jax.Array:
+    """RMSNorm; ``plus_one`` selects the Gemma ``(1 + w)`` convention."""
+    dt = x.dtype
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    x32 = x32 * jax.lax.rsqrt(var + eps)
+    w = weight.astype(jnp.float32)
+    w = 1.0 + w if plus_one else w
+    return (x32 * w).astype(dt)
+
+
+def rope_freqs(head_dim: int, theta: float) -> np.ndarray:
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, *, theta: float
+               ) -> jax.Array:
+    """Rotary embedding. x: [..., S, n_heads, head_dim]; positions: [..., S]."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta), dtype=jnp.float32)
+    ang = positions[..., None].astype(jnp.float32) * freqs       # [..., S, hd/2]
+    cos = jnp.cos(ang)[..., None, :]                             # [..., S, 1, hd/2]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+def causal_window_mask(q_pos: jax.Array, k_pos: jax.Array,
+                       window: jax.Array | int) -> jax.Array:
+    """True where key j may attend query i: causal ∧ (window==0 ∨ i-j<window).
+
+    ``window`` may be a traced scalar (per-layer value carried through scan),
+    0 meaning full (dense causal) attention.
+    """
+    causal = k_pos[None, :] <= q_pos[:, None]
+    dist_ok = (q_pos[:, None] - k_pos[None, :]) < jnp.where(
+        jnp.asarray(window) > 0, jnp.asarray(window), jnp.iinfo(jnp.int32).max)
+    return causal & dist_ok
+
+
+def uniform_init(key, shape, scale: float, dtype=jnp.float32) -> jax.Array:
+    return jax.random.uniform(key, shape, dtype, -scale, scale)
+
+
+def normal_init(key, shape, stddev: float, dtype=jnp.float32) -> jax.Array:
+    return jax.random.normal(key, shape, dtype) * stddev
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+def count_params(params) -> int:
+    return int(sum(np.prod(x.shape) for x in jax.tree.leaves(params)))
+
+
+def cast_tree(params, dtype):
+    return jax.tree.map(
+        lambda x: x.astype(dtype) if jnp.issubdtype(x.dtype, jnp.floating)
+        else x, params)

@@ -1,0 +1,160 @@
+"""EGNN — E(n)-equivariant graph network (Satorras et al., arXiv:2102.09844).
+
+Edge-list message passing on the shared sparse substrate (DESIGN.md §2):
+message construction is a gather over ``(src, dst)`` index arrays, and
+aggregation is the same segment-sum primitive as BM25 scoring — the kernel
+regime the assignment calls "cheap equivariant" (scalar-distance MLP, no
+spherical harmonics).
+
+Per layer l (m_ij over directed edges):
+    m_ij      = φ_e(h_i, h_j, ‖x_i − x_j‖², a_ij)
+    x_i'      = x_i + mean_j (x_i − x_j) · φ_x(m_ij)        (equivariant)
+    h_i'      = φ_h(h_i, Σ_j m_ij)                           (invariant)
+
+Graphs are static-shape: ``edges [E, 2]`` int32 with -1 padding; batched
+small graphs are flattened with a ``graph_ids`` vector for the readout.
+
+Distribution: edges sharded over the mesh, node tensors replicated; the
+per-layer psum of the aggregated messages is the collective-bound roofline
+cell (EXPERIMENTS.md).
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import normal_init, split_keys
+from ..sparse.segment_ops import segment_mean, segment_sum
+
+
+@dataclass(frozen=True)
+class EGNNConfig:
+    name: str
+    n_layers: int = 4
+    d_hidden: int = 64
+    d_feat: int = 64            # input node-feature dim
+    d_edge: int = 0             # input edge-attribute dim (0 = none)
+    n_out: int = 1              # classes (nodes) or regression dims (graph)
+    readout: str = "node"       # "node" | "graph"
+    coord_dim: int = 3
+    dtype: Any = jnp.float32
+
+
+def _mlp_init(key, dims):
+    ks = split_keys(key, len(dims) - 1)
+    return [{"w": normal_init(k, (a, b), 1.0 / np.sqrt(a)),
+             "b": jnp.zeros((b,))}
+            for k, (a, b) in zip(ks, zip(dims[:-1], dims[1:]))]
+
+
+def _mlp(params, x, act=jax.nn.silu, last_act=False):
+    for i, lyr in enumerate(params):
+        x = x @ lyr["w"] + lyr["b"]
+        if i < len(params) - 1 or last_act:
+            x = act(x)
+    return x
+
+
+def init_params(key, cfg: EGNNConfig) -> dict:
+    d = cfg.d_hidden
+    ks = iter(split_keys(key, 3 + 4 * cfg.n_layers))
+    params = {
+        "proj_in": {"w": normal_init(next(ks), (cfg.d_feat, d),
+                                     1.0 / np.sqrt(cfg.d_feat)),
+                    "b": jnp.zeros((d,))},
+        "layers": [],
+        "head": _mlp_init(next(ks), (d, d, cfg.n_out)),
+    }
+    edge_in = 2 * d + 1 + cfg.d_edge
+    for _ in range(cfg.n_layers):
+        params["layers"].append({
+            "phi_e": _mlp_init(next(ks), (edge_in, d, d)),
+            "phi_x": _mlp_init(next(ks), (d, d, 1)),
+            "phi_h": _mlp_init(next(ks), (2 * d, d, d)),
+        })
+    return params
+
+
+def _layer(cfg: EGNNConfig, lp: dict, h, x, src, dst, edge_attr, valid,
+           n_nodes: int):
+    """One EGNN layer over the (padded) directed edge list."""
+    hi, hj = h[dst], h[src]                       # messages flow src -> dst
+    xi, xj = x[dst], x[src]
+    diff = xi - xj                                # [E, 3]
+    dist2 = jnp.sum(diff * diff, axis=-1, keepdims=True)
+    feats = [hi, hj, dist2]
+    if edge_attr is not None:
+        feats.append(edge_attr)
+    m = _mlp(lp["phi_e"], jnp.concatenate(feats, axis=-1), last_act=True)
+    m = m * valid[:, None]
+
+    # equivariant coordinate update (mean over incoming edges)
+    coef = _mlp(lp["phi_x"], m)                   # [E, 1]
+    upd = diff * coef * valid[:, None]
+    seg = jnp.where(valid > 0, dst, n_nodes)      # padding -> sentinel
+    x = x + segment_mean(upd, seg, n_nodes)
+
+    # invariant feature update (sum aggregation)
+    agg = segment_sum(m, seg, n_nodes)
+    h = h + _mlp(lp["phi_h"], jnp.concatenate([h, agg], axis=-1))
+    return h, x
+
+
+def forward(cfg: EGNNConfig, params: dict, batch: dict
+            ) -> tuple[jax.Array, jax.Array]:
+    """batch: node_feat [N,F], coords [N,3], edges [E,2] (-1 pad),
+    optional edge_attr [E,De], optional graph_ids [N] (graph readout).
+    Returns (predictions, final coords)."""
+    nf = batch["node_feat"].astype(cfg.dtype)
+    x = batch["coords"].astype(cfg.dtype)
+    edges = batch["edges"]
+    valid = (edges[:, 0] >= 0).astype(cfg.dtype)
+    src = jnp.maximum(edges[:, 0], 0)
+    dst = jnp.maximum(edges[:, 1], 0)
+    n_nodes = nf.shape[0]
+    edge_attr = batch.get("edge_attr")
+
+    h = nf @ params["proj_in"]["w"] + params["proj_in"]["b"]
+    layer = jax.checkpoint(
+        lambda lp, h, x: _layer(cfg, lp, h, x, src, dst, edge_attr, valid,
+                                n_nodes),
+        policy=jax.checkpoint_policies.nothing_saveable)
+    for lp in params["layers"]:
+        h, x = layer(lp, h, x)   # remat: messages recomputed in backward
+
+    if cfg.readout == "graph":
+        gid = batch["graph_ids"]
+        n_graphs = int(batch["n_graphs"])
+        pooled = segment_sum(h, gid, n_graphs)
+        return _mlp(params["head"], pooled), x
+    return _mlp(params["head"], h), x
+
+
+def loss_fn(cfg: EGNNConfig, params: dict, batch: dict
+            ) -> tuple[jax.Array, dict]:
+    pred, _ = forward(cfg, params, batch)
+    if cfg.readout == "graph":
+        target = batch["targets"]                          # [G, n_out]
+        loss = jnp.mean((pred - target) ** 2)
+        return loss, {"loss": loss, "mse": loss}
+    labels = batch["labels"]                               # [N] (-1 = unlabeled)
+    mask = (labels >= 0).astype(jnp.float32)
+    logits = pred.astype(jnp.float32)
+    lse = jax.nn.logsumexp(logits, axis=-1)
+    gold = jnp.take_along_axis(
+        logits, jnp.maximum(labels, 0)[:, None], axis=-1)[:, 0]
+    ce = ((lse - gold) * mask).sum() / jnp.maximum(mask.sum(), 1.0)
+    acc = (((jnp.argmax(logits, -1) == labels) * mask).sum()
+           / jnp.maximum(mask.sum(), 1.0))
+    return ce, {"loss": ce, "acc": acc}
+
+
+def reduced(cfg: EGNNConfig, **overrides) -> EGNNConfig:
+    small = dict(n_layers=2, d_hidden=16)
+    small.update(overrides)
+    return replace(cfg, **small)

@@ -1,0 +1,356 @@
+"""RecSys architectures: DLRM, AutoInt, SASRec, MIND.
+
+All four share the sparse embedding substrate (DESIGN.md §2): huge
+row-sharded tables + gather (+ segment-reduce for multi-hot bags) — the
+same eager-scoring primitive as BM25S. The embedding lookup is the hot
+path; tables are stored concatenated (``[Σ vocab_f, D]`` + per-field row
+offsets) so the whole state is a single shardable array and one gather.
+
+``retrieval_scores`` (the ``retrieval_cand`` shape) scores one user against
+10⁶ candidates as a batched dot against the item table — never a loop —
+and feeds the two-stage top-k kernel.
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import normal_init, split_keys
+
+
+@dataclass(frozen=True)
+class RecsysConfig:
+    name: str
+    model: str                       # dlrm | autoint | sasrec | mind
+    vocab_sizes: tuple[int, ...]     # per sparse field (item vocab for seq models)
+    embed_dim: int
+    n_dense: int = 0
+    bot_mlp: tuple[int, ...] = ()
+    top_mlp: tuple[int, ...] = ()
+    n_attn_layers: int = 3           # autoint
+    n_heads: int = 2
+    d_attn: int = 32
+    n_blocks: int = 2                # sasrec
+    seq_len: int = 50
+    n_interests: int = 4             # mind
+    capsule_iters: int = 3
+    dtype: Any = jnp.float32
+
+    @property
+    def n_sparse(self) -> int:
+        return len(self.vocab_sizes)
+
+    @property
+    def total_rows(self) -> int:
+        return int(sum(self.vocab_sizes))
+
+    @property
+    def padded_rows(self) -> int:
+        """Concatenated-table rows padded so the (data, model) row/dim
+        sharding always divides (4096 | rows)."""
+        return -(-self.total_rows // 4096) * 4096
+
+    def field_offsets(self) -> np.ndarray:
+        return np.concatenate([[0], np.cumsum(self.vocab_sizes)[:-1]]
+                              ).astype(np.int32)
+
+
+def _mlp_init(key, dims):
+    ks = split_keys(key, len(dims) - 1)
+    return [{"w": normal_init(k, (a, b), 1.0 / np.sqrt(a)),
+             "b": jnp.zeros((b,))}
+            for k, (a, b) in zip(ks, zip(dims[:-1], dims[1:]))]
+
+
+def _mlp(params, x, act=jax.nn.relu, last_act=False):
+    for i, lyr in enumerate(params):
+        x = x @ lyr["w"] + lyr["b"]
+        if i < len(params) - 1 or last_act:
+            x = act(x)
+    return x
+
+
+def lookup_fields(table: jax.Array, offsets: jax.Array, idx: jax.Array
+                  ) -> jax.Array:
+    """[B, F] per-field ids -> [B, F, D] rows of the concatenated table."""
+    return jnp.take(table, idx + offsets[None, :], axis=0)
+
+
+# ==========================================================================
+# DLRM (arXiv:1906.00091, MLPerf config)
+# ==========================================================================
+
+def dlrm_init(key, cfg: RecsysConfig) -> dict:
+    ks = iter(split_keys(key, 4))
+    return {
+        "table": normal_init(next(ks), (cfg.padded_rows, cfg.embed_dim),
+                             1.0 / np.sqrt(cfg.embed_dim)),
+        "bot": _mlp_init(next(ks), (cfg.n_dense,) + cfg.bot_mlp),
+        "top": _mlp_init(next(ks), (_dlrm_top_in(cfg),) + cfg.top_mlp),
+    }
+
+
+def _dlrm_top_in(cfg: RecsysConfig) -> int:
+    f = cfg.n_sparse + 1                     # embeddings + bottom-MLP output
+    return cfg.embed_dim + f * (f - 1) // 2  # dense feature + pairwise dots
+
+
+def dlrm_forward(cfg: RecsysConfig, params: dict, batch: dict) -> jax.Array:
+    offsets = jnp.asarray(cfg.field_offsets())
+    dense = batch["dense"].astype(cfg.dtype)            # [B, 13]
+    emb = lookup_fields(params["table"], offsets, batch["sparse"])  # [B,26,D]
+    bot = _mlp(params["bot"], dense, last_act=True)     # [B, D]
+    z = jnp.concatenate([bot[:, None, :], emb], axis=1)  # [B, 27, D]
+    inter = jnp.einsum("bfd,bgd->bfg", z, z)             # [B, 27, 27]
+    f = z.shape[1]
+    iu, ju = np.triu_indices(f, k=1)
+    pairs = inter[:, iu, ju]                             # [B, 351]
+    top_in = jnp.concatenate([bot, pairs], axis=-1)
+    return _mlp(params["top"], top_in)[:, 0]             # logits [B]
+
+
+# ==========================================================================
+# AutoInt (arXiv:1810.11921)
+# ==========================================================================
+
+def autoint_init(key, cfg: RecsysConfig) -> dict:
+    d, da, h = cfg.embed_dim, cfg.d_attn, cfg.n_heads
+    ks = iter(split_keys(key, 3 + 4 * cfg.n_attn_layers))
+    layers = []
+    d_in = d
+    for _ in range(cfg.n_attn_layers):
+        layers.append({
+            "wq": normal_init(next(ks), (d_in, da), 1.0 / np.sqrt(d_in)),
+            "wk": normal_init(next(ks), (d_in, da), 1.0 / np.sqrt(d_in)),
+            "wv": normal_init(next(ks), (d_in, da), 1.0 / np.sqrt(d_in)),
+            "wres": normal_init(next(ks), (d_in, da), 1.0 / np.sqrt(d_in)),
+        })
+        d_in = da
+    return {
+        "table": normal_init(next(ks), (cfg.padded_rows, d), 1.0 / np.sqrt(d)),
+        "layers": layers,
+        "out": _mlp_init(next(ks), (cfg.n_sparse * d_in, 1)),
+    }
+
+
+def autoint_forward(cfg: RecsysConfig, params: dict, batch: dict) -> jax.Array:
+    offsets = jnp.asarray(cfg.field_offsets())
+    x = lookup_fields(params["table"], offsets, batch["sparse"])  # [B,F,D]
+    h = cfg.n_heads
+    for lp in params["layers"]:
+        q = (x @ lp["wq"])
+        k = (x @ lp["wk"])
+        v = (x @ lp["wv"])
+        dh = q.shape[-1] // h
+        def split(t):
+            return t.reshape(*t.shape[:-1], h, dh)
+        att = jnp.einsum("bfhd,bghd->bhfg", split(q), split(k)) / np.sqrt(dh)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhfg,bghd->bfhd", att, split(v))
+        o = o.reshape(*x.shape[:-1], h * dh)
+        x = jax.nn.relu(o + x @ lp["wres"])
+    flat = x.reshape(x.shape[0], -1)
+    return _mlp(params["out"], flat)[:, 0]
+
+
+# ==========================================================================
+# SASRec (arXiv:1808.09781)
+# ==========================================================================
+
+def sasrec_init(key, cfg: RecsysConfig) -> dict:
+    d = cfg.embed_dim
+    v = cfg.vocab_sizes[0]
+    ks = iter(split_keys(key, 3 + 6 * cfg.n_blocks))
+    blocks = []
+    for _ in range(cfg.n_blocks):
+        blocks.append({
+            "ln1": jnp.ones((d,)), "ln2": jnp.ones((d,)),
+            "wq": normal_init(next(ks), (d, d), 1.0 / np.sqrt(d)),
+            "wk": normal_init(next(ks), (d, d), 1.0 / np.sqrt(d)),
+            "wv": normal_init(next(ks), (d, d), 1.0 / np.sqrt(d)),
+            "ffn1": _mlp_init(next(ks), (d, d))[0],
+            "ffn2": _mlp_init(next(ks), (d, d))[0],
+        })
+    return {
+        "item_emb": normal_init(next(ks), (-(-(v + 1) // 4096) * 4096, d),
+                                1.0 / np.sqrt(d)),
+        "pos_emb": normal_init(next(ks), (cfg.seq_len, d), 0.02),
+        "blocks": blocks,
+        "ln_f": jnp.ones((d,)),
+    }
+
+
+def _layernorm(x, w, eps=1e-6):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) * jax.lax.rsqrt(var + eps) * w
+
+
+def sasrec_hidden(cfg: RecsysConfig, params: dict, history: jax.Array
+                  ) -> jax.Array:
+    """history [B, L] item ids (0 = pad) -> hidden states [B, L, D]."""
+    b, l = history.shape
+    x = jnp.take(params["item_emb"], history, axis=0)
+    x = x + params["pos_emb"][None, :l]
+    mask = (history > 0).astype(cfg.dtype)
+    x = x * mask[..., None]
+    causal = np.tril(np.ones((l, l), bool))
+    for blk in params["blocks"]:
+        h = _layernorm(x, blk["ln1"])
+        q, k, v = h @ blk["wq"], h @ blk["wk"], h @ blk["wv"]
+        att = jnp.einsum("bqd,bkd->bqk", q, k) / np.sqrt(q.shape[-1])
+        att = jnp.where(causal[None], att, -1e30)
+        att = jnp.where(mask[:, None, :] > 0, att, -1e30)
+        att = jax.nn.softmax(att, axis=-1)
+        x = x + jnp.einsum("bqk,bkd->bqd", att, v)
+        h = _layernorm(x, blk["ln2"])
+        x = x + (jax.nn.relu(h @ blk["ffn1"]["w"] + blk["ffn1"]["b"])
+                 @ blk["ffn2"]["w"] + blk["ffn2"]["b"])
+        x = x * mask[..., None]
+    return _layernorm(x, params["ln_f"])
+
+
+def sasrec_forward(cfg: RecsysConfig, params: dict, batch: dict) -> jax.Array:
+    """Next-item logit for (pos_items, neg_items): returns [B, L, 2] logits."""
+    h = sasrec_hidden(cfg, params, batch["history"])       # [B, L, D]
+    pos = jnp.take(params["item_emb"], batch["pos_items"], axis=0)
+    neg = jnp.take(params["item_emb"], batch["neg_items"], axis=0)
+    return jnp.stack([jnp.sum(h * pos, -1), jnp.sum(h * neg, -1)], axis=-1)
+
+
+# ==========================================================================
+# MIND (arXiv:1904.08030)
+# ==========================================================================
+
+def mind_init(key, cfg: RecsysConfig) -> dict:
+    d = cfg.embed_dim
+    v = cfg.vocab_sizes[0]
+    ks = iter(split_keys(key, 3))
+    return {
+        "item_emb": normal_init(next(ks), (-(-(v + 1) // 4096) * 4096, d),
+                                1.0 / np.sqrt(d)),
+        "bilinear": normal_init(next(ks), (d, d), 1.0 / np.sqrt(d)),
+        # fixed (non-trained in paper) routing-logit init, one per interest
+        "b_init": normal_init(next(ks), (cfg.n_interests, cfg.seq_len), 1.0),
+    }
+
+
+def _squash(x, axis=-1, eps=1e-9):
+    n2 = jnp.sum(x * x, axis=axis, keepdims=True)
+    return (n2 / (1.0 + n2)) * x / jnp.sqrt(n2 + eps)
+
+
+def mind_interests(cfg: RecsysConfig, params: dict, history: jax.Array
+                   ) -> jax.Array:
+    """Dynamic routing: history [B, L] -> interest capsules [B, K, D]."""
+    e = jnp.take(params["item_emb"], history, axis=0)        # [B, L, D]
+    mask = (history > 0).astype(cfg.dtype)                   # [B, L]
+    u_hat = e @ params["bilinear"]                           # [B, L, D]
+    b = jnp.broadcast_to(params["b_init"][None],
+                         (history.shape[0],) + params["b_init"].shape)
+    v = None
+    for it in range(cfg.capsule_iters):
+        w = jax.nn.softmax(b, axis=1)                        # over K
+        w = w * mask[:, None, :]
+        z = jnp.einsum("bkl,bld->bkd", w, u_hat)
+        v = _squash(z)
+        if it < cfg.capsule_iters - 1:
+            # stop-gradient per the paper's routing (coefficients not trained)
+            b = b + jnp.einsum("bkd,bld->bkl", jax.lax.stop_gradient(v), u_hat)
+    return v
+
+
+def mind_forward(cfg: RecsysConfig, params: dict, batch: dict) -> jax.Array:
+    """Label-aware attention score for pos/neg targets: [B, 2] logits."""
+    v = mind_interests(cfg, params, batch["history"])        # [B, K, D]
+
+    def score(items):
+        e_t = jnp.take(params["item_emb"], items, axis=0)    # [B, D]
+        att = jax.nn.softmax(jnp.einsum("bkd,bd->bk", v, e_t) ** 2, axis=-1)
+        u = jnp.einsum("bk,bkd->bd", att, v)
+        return jnp.sum(u * e_t, axis=-1)
+
+    return jnp.stack([score(batch["pos_items"]),
+                      score(batch["neg_items"])], axis=-1)
+
+
+# ==========================================================================
+# shared losses / serving / retrieval
+# ==========================================================================
+
+_FORWARD = {"dlrm": dlrm_forward, "autoint": autoint_forward,
+            "sasrec": sasrec_forward, "mind": mind_forward}
+_INIT = {"dlrm": dlrm_init, "autoint": autoint_init,
+         "sasrec": sasrec_init, "mind": mind_init}
+
+
+def init_params(key, cfg: RecsysConfig) -> dict:
+    return _INIT[cfg.model](key, cfg)
+
+
+def forward(cfg: RecsysConfig, params: dict, batch: dict) -> jax.Array:
+    return _FORWARD[cfg.model](cfg, params, batch)
+
+
+def loss_fn(cfg: RecsysConfig, params: dict, batch: dict
+            ) -> tuple[jax.Array, dict]:
+    logits = forward(cfg, params, batch)
+    if cfg.model in ("dlrm", "autoint"):                     # CTR: BCE w/ labels
+        labels = batch["labels"].astype(jnp.float32)
+        loss = jnp.mean(_bce(logits.astype(jnp.float32), labels))
+    else:                                                    # pos/neg pairs
+        lg = logits.astype(jnp.float32)
+        pos, neg = lg[..., 0], lg[..., 1]
+        mask = (batch["pos_items"] > 0).astype(jnp.float32)
+        loss = ((_bce(pos, jnp.ones_like(pos)) +
+                 _bce(neg, jnp.zeros_like(neg))) * mask).sum() \
+            / jnp.maximum(mask.sum(), 1.0)
+    return loss, {"loss": loss}
+
+
+def _bce(logits, labels):
+    return jnp.maximum(logits, 0) - logits * labels + \
+        jnp.log1p(jnp.exp(-jnp.abs(logits)))
+
+
+def retrieval_scores(cfg: RecsysConfig, params: dict, batch: dict,
+                     candidates: jax.Array) -> jax.Array:
+    """Score a query-user against [Nc] candidate items (batched dot)."""
+    if cfg.model == "sasrec":
+        h = sasrec_hidden(cfg, params, batch["history"])[:, -1]   # [B, D]
+        cand = jnp.take(params["item_emb"], candidates, axis=0)   # [Nc, D]
+        return h @ cand.T                                         # [B, Nc]
+    if cfg.model == "mind":
+        v = mind_interests(cfg, params, batch["history"])         # [B, K, D]
+        cand = jnp.take(params["item_emb"], candidates, axis=0)
+        return jnp.einsum("bkd,nd->bkn", v, cand).max(axis=1)     # max-interest
+    # CTR models: candidate id occupies the item field (field 0 by convention)
+    b = batch["sparse"].shape[0]
+    nc = candidates.shape[0]
+    sparse = jnp.broadcast_to(batch["sparse"][:, None, :],
+                              (b, nc, cfg.n_sparse)).reshape(b * nc, -1)
+    sparse = sparse.at[:, 0].set(jnp.tile(candidates, b))
+    rep = {"sparse": sparse}
+    if cfg.n_dense:
+        rep["dense"] = jnp.broadcast_to(
+            batch["dense"][:, None, :],
+            (b, nc, cfg.n_dense)).reshape(b * nc, -1)
+    return forward(cfg, params, rep).reshape(b, nc)
+
+
+def reduced(cfg: RecsysConfig, **overrides) -> RecsysConfig:
+    small = dict(
+        vocab_sizes=tuple(min(v, 1000) for v in cfg.vocab_sizes),
+        seq_len=min(cfg.seq_len, 10),
+    )
+    if cfg.bot_mlp:
+        small["bot_mlp"] = (32, cfg.embed_dim)
+    if cfg.top_mlp:
+        small["top_mlp"] = (32, 1)
+    small.update(overrides)
+    return replace(cfg, **small)

@@ -1,0 +1,589 @@
+"""Decoder-only LM transformer family.
+
+One configurable implementation covers the five assigned LM architectures:
+
+* GQA (``n_kv_heads < n_heads``), explicit ``head_dim`` (Gemma3's 256,
+  danube3's non-MXU-aligned 120);
+* sliding-window attention (Mistral/danube3) and Gemma3's N:1
+  local:global layer pattern with per-layer RoPE theta;
+* optional qk-norm (Qwen3);
+* SwiGLU dense MLP or Mixtral-style top-2 MoE (token-dispatch formulation —
+  DESIGN.md explains why weight-gathered MoE beats all-to-all for E=8 on
+  this mesh);
+* scan-over-layers + remat for training/prefill (bounded HLO + memory),
+  unrolled layers with per-layer window-capped ring KV caches for decode.
+
+Attention never materializes the full ``[S, S]`` score matrix: queries are
+processed in ``seq_chunk`` blocks (``lax.map``), each computing an exact
+softmax over all keys — peak live memory is one chunk's scores.
+"""
+
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field, replace
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .common import (apply_rope, causal_window_mask, normal_init, rms_norm,
+                     split_keys)
+from ..dist.sharding import constrain, dp_spmd_axes
+
+
+@dataclass(frozen=True)
+class LMConfig:
+    name: str
+    n_layers: int
+    d_model: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    head_dim: int | None = None
+    rope_theta: float = 10_000.0
+    rope_theta_global: float | None = None   # gemma3: global layers use 1e6
+    qk_norm: bool = False
+    sliding_window: int | None = None        # None = full attention
+    global_every: int | None = None          # every Nth layer is global
+    n_experts: int | None = None             # None = dense MLP
+    top_k: int = 2
+    capacity_factor: float = 1.25
+    embed_scale: bool = False                # gemma: h *= sqrt(d_model)
+    rmsnorm_plus_one: bool = False           # gemma (1 + w) convention
+    tie_embeddings: bool = False
+    norm_eps: float = 1e-6
+    dtype: Any = jnp.bfloat16
+    seq_chunk: int = 512                     # attention query-chunk
+    loss_chunk: int = 512                    # logits/CE sequence-chunk
+    moe_group_seq: int = 4096                # MoE dispatch group (tokens)
+    kv_quant: bool = False                   # int8 KV cache (decode only)
+
+    @property
+    def hd(self) -> int:
+        return self.head_dim or self.d_model // self.n_heads
+
+    @property
+    def is_moe(self) -> bool:
+        return self.n_experts is not None
+
+    def layer_windows(self) -> np.ndarray:
+        """Per-layer attention window; 0 = full (global) attention."""
+        w = np.zeros(self.n_layers, dtype=np.int32)
+        if self.sliding_window is not None:
+            w[:] = self.sliding_window
+            if self.global_every is not None:
+                w[self.global_every - 1:: self.global_every] = 0
+        return w
+
+    def layer_thetas(self) -> np.ndarray:
+        t = np.full(self.n_layers, self.rope_theta, dtype=np.float32)
+        if self.rope_theta_global is not None and self.global_every:
+            t[self.global_every - 1:: self.global_every] = self.rope_theta_global
+        return t
+
+
+# --------------------------------------------------------------------------
+# init
+# --------------------------------------------------------------------------
+
+def init_params(key, cfg: LMConfig) -> dict:
+    l, d, f, v = cfg.n_layers, cfg.d_model, cfg.d_ff, cfg.vocab_size
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = iter(split_keys(key, 16))
+    s_in = 1.0 / np.sqrt(d)
+    layers = {
+        "attn_norm": jnp.zeros((l, d)) if cfg.rmsnorm_plus_one
+        else jnp.ones((l, d)),
+        "mlp_norm": jnp.zeros((l, d)) if cfg.rmsnorm_plus_one
+        else jnp.ones((l, d)),
+        "wq": normal_init(next(ks), (l, d, h * hd), s_in),
+        "wk": normal_init(next(ks), (l, d, kv * hd), s_in),
+        "wv": normal_init(next(ks), (l, d, kv * hd), s_in),
+        "wo": normal_init(next(ks), (l, h * hd, d), 1.0 / np.sqrt(h * hd)),
+    }
+    if cfg.qk_norm:
+        layers["q_norm"] = jnp.ones((l, hd))
+        layers["k_norm"] = jnp.ones((l, hd))
+    if cfg.is_moe:
+        e = cfg.n_experts
+        layers["router"] = normal_init(next(ks), (l, d, e), s_in)
+        layers["w_gate"] = normal_init(next(ks), (l, e, d, f), s_in)
+        layers["w_up"] = normal_init(next(ks), (l, e, d, f), s_in)
+        layers["w_down"] = normal_init(next(ks), (l, e, f, d), 1.0 / np.sqrt(f))
+    else:
+        layers["w_gate"] = normal_init(next(ks), (l, d, f), s_in)
+        layers["w_up"] = normal_init(next(ks), (l, d, f), s_in)
+        layers["w_down"] = normal_init(next(ks), (l, f, d), 1.0 / np.sqrt(f))
+    params = {
+        "embed": normal_init(next(ks), (v, d), 1.0),
+        "layers": layers,
+        "final_norm": jnp.zeros((d,)) if cfg.rmsnorm_plus_one
+        else jnp.ones((d,)),
+    }
+    if not cfg.tie_embeddings:
+        params["lm_head"] = normal_init(next(ks), (d, v), s_in)
+    return params
+
+
+# --------------------------------------------------------------------------
+# attention
+# --------------------------------------------------------------------------
+
+def _heads(x, n, hd):
+    return x.reshape(*x.shape[:-1], n, hd)
+
+
+def chunked_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                      q_pos: jax.Array, k_pos: jax.Array,
+                      window: jax.Array, *, seq_chunk: int) -> jax.Array:
+    """Exact causal/windowed attention, one query chunk at a time.
+
+    q: [B, Sq, H, hd]; k, v: [B, Sk, KV, hd]; positions are absolute.
+    Returns [B, Sq, H, hd]. Peak memory: one chunk's [B, H, Cq, Sk] scores.
+    """
+    b, sq, h, hd = q.shape
+    kvh = k.shape[2]
+    g = h // kvh
+    cq = min(seq_chunk, sq)
+    while sq % cq:
+        cq //= 2
+    nc = sq // cq
+    scale = hd ** -0.5
+
+    qg = q.reshape(b, nc, cq, kvh, g, hd).transpose(1, 0, 2, 3, 4, 5)
+    posc = q_pos.reshape(nc, cq)
+
+    def one_chunk(args):
+        qc, pc = args                                       # [B,Cq,KV,G,hd], [Cq]
+        s = jnp.einsum("bqkgh,bskh->bkgqs", qc.astype(jnp.float32),
+                       k.astype(jnp.float32)) * scale       # [B,KV,G,Cq,Sk]
+        mask = causal_window_mask(pc, k_pos, window)        # [Cq, Sk]
+        s = jnp.where(mask[None, None, None], s, -1e30)
+        p = jax.nn.softmax(s, axis=-1)
+        return jnp.einsum("bkgqs,bskh->bqkgh", p,
+                          v.astype(jnp.float32)).astype(q.dtype)
+
+    out = jax.lax.map(one_chunk, (qg, posc))                # [nc,B,Cq,KV,G,hd]
+    return out.transpose(1, 0, 2, 3, 4, 5).reshape(b, sq, h, hd)
+
+
+def attention_block(cfg: LMConfig, lp: dict, x: jax.Array,
+                    positions: jax.Array, window: jax.Array,
+                    theta: jax.Array) -> jax.Array:
+    b, s, _ = x.shape
+    h, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    dt = cfg.dtype
+    q = _heads(x @ lp["wq"].astype(dt), h, hd)
+    k = _heads(x @ lp["wk"].astype(dt), kv, hd)
+    v = _heads(x @ lp["wv"].astype(dt), kv, hd)
+    if cfg.qk_norm:
+        q = rms_norm(q, lp["q_norm"], eps=cfg.norm_eps)
+        k = rms_norm(k, lp["k_norm"], eps=cfg.norm_eps)
+    q = _rope_dyn(q, positions, theta)
+    k = _rope_dyn(k, positions, theta)
+    # Megatron-style TP: query heads over "model" (replicated if H % model
+    # != 0, e.g. Gemma3's 4 heads), K/V replicated across the model axis
+    # (GQA standard when TP > n_kv_heads).
+    q = constrain(q, "dp", None, "model", None)
+    k = constrain(k, "dp", None, None, None)
+    v = constrain(v, "dp", None, None, None)
+    out = chunked_attention(q, k, v, positions, positions, window,
+                            seq_chunk=cfg.seq_chunk)
+    out = out.reshape(b, s, h * hd) @ lp["wo"].astype(dt)
+    return constrain(out, "dp", None, None)
+
+
+def _rope_dyn(x, positions, theta):
+    """RoPE with a (possibly traced, per-layer) theta scalar."""
+    hd = x.shape[-1]
+    exponent = jnp.arange(0, hd, 2, dtype=jnp.float32) / hd
+    freqs = jnp.asarray(theta, jnp.float32) ** -exponent
+    ang = positions[..., None].astype(jnp.float32) * freqs
+    cos = jnp.cos(ang)[..., None, :]
+    sin = jnp.sin(ang)[..., None, :]
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+    return out.astype(x.dtype)
+
+
+# --------------------------------------------------------------------------
+# MLP / MoE
+# --------------------------------------------------------------------------
+
+def mlp_block(cfg: LMConfig, lp: dict, x: jax.Array) -> jax.Array:
+    dt = cfg.dtype
+    gate = jax.nn.silu(x @ lp["w_gate"].astype(dt))
+    gate = constrain(gate, "dp", None, "model")
+    up = constrain(x @ lp["w_up"].astype(dt), "dp", None, "model")
+    out = (gate * up) @ lp["w_down"].astype(dt)
+    return constrain(out, "dp", None, None)
+
+
+def moe_block(cfg: LMConfig, lp: dict, x: jax.Array
+              ) -> tuple[jax.Array, jax.Array]:
+    """Top-k token-dispatch MoE (scatter/gather, static capacity).
+
+    Returns (output, aux_load_balance_loss). Tokens beyond an expert's
+    capacity are dropped (contribute zero), standard GShard behaviour.
+    Dispatch runs per GROUP (GShard's G dimension): groups are
+    (batch × seq-chunks of ``moe_group_seq``), so the scatter/gather stays
+    local to the data shard and the ``[G, E, C, d_ff]`` expert activations
+    stay bounded for long-sequence prefill.
+    """
+    b, s, d = x.shape
+    g_seq = min(cfg.moe_group_seq, s)
+    while s % g_seq:
+        g_seq //= 2
+    groups = b * (s // g_seq)
+    xg = constrain(x.reshape(groups, g_seq, d), "dp", None, None)
+    # spmd_axis_name pins the group dim to the data axes so the partitioner
+    # keeps dispatch/expert-GEMMs group-local (all-gathering the FSDP-
+    # sharded expert weights) instead of partial-contracting + all-reducing
+    # activations across shards.
+    yg, aux = jax.vmap(lambda xr: _moe_tokens(cfg, lp, xr),
+                       spmd_axis_name=dp_spmd_axes())(xg)
+    yg = constrain(yg, "dp", None, None)
+    return yg.reshape(b, s, d), aux.mean()
+
+
+def _moe_tokens(cfg: LMConfig, lp: dict, xf: jax.Array
+                ) -> tuple[jax.Array, jax.Array]:
+    """MoE over a flat token block xf [T, D] -> ([T, D], aux)."""
+    dt = cfg.dtype
+    t, d = xf.shape
+    e, k = cfg.n_experts, cfg.top_k
+    cap = int(np.ceil(cfg.capacity_factor * t * k / e))
+
+    logits = (xf @ lp["router"].astype(dt)).astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, k)                             # [T, K]
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+
+    # GShard aux loss: E * Σ_e f_e · p_e
+    f_e = jnp.mean(jax.nn.one_hot(idx[:, 0], e, dtype=jnp.float32), axis=0)
+    p_e = jnp.mean(probs, axis=0)
+    aux = e * jnp.sum(f_e * p_e)
+
+    flat_e = idx.reshape(-1)                                     # [T*K]
+    oh = jax.nn.one_hot(flat_e, e, dtype=jnp.int32)              # [T*K, E]
+    pos = (jnp.cumsum(oh, axis=0) * oh).sum(-1) - 1              # rank in expert
+    keep = pos < cap
+    slot = jnp.where(keep, flat_e * cap + pos, e * cap)          # sentinel last
+
+    x_rep = jnp.repeat(xf, k, axis=0)                            # [T*K, D]
+    buf = jnp.zeros((e * cap + 1, d), dt).at[slot].add(
+        x_rep * keep[:, None].astype(dt))
+    buf = constrain(buf, None, None)             # group-local (+dp via vmap)
+    xin = buf[: e * cap].reshape(e, cap, d)
+
+    gate = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xin, lp["w_gate"].astype(dt)))
+    gate = constrain(gate, None, None, "model")
+    up = constrain(jnp.einsum("ecd,edf->ecf", xin, lp["w_up"].astype(dt)),
+                   None, None, "model")
+    h = jnp.einsum("ecf,efd->ecd", gate * up, lp["w_down"].astype(dt))
+
+    hflat = jnp.concatenate([h.reshape(e * cap, d),
+                             jnp.zeros((1, d), dt)], axis=0)
+    hflat = constrain(hflat, None, None)
+    y = hflat[slot].reshape(t, k, d)
+    y = (y * (w * keep.reshape(t, k)).astype(dt)[..., None]).sum(axis=1)
+    return y, aux
+
+
+# --------------------------------------------------------------------------
+# full forward (scan over layers, remat)
+# --------------------------------------------------------------------------
+
+def _layer_fwd(cfg: LMConfig, lp: dict, x: jax.Array, positions: jax.Array,
+               window: jax.Array, theta: jax.Array
+               ) -> tuple[jax.Array, jax.Array]:
+    h = rms_norm(x, lp["attn_norm"], eps=cfg.norm_eps,
+                 plus_one=cfg.rmsnorm_plus_one)
+    x = x + attention_block(cfg, lp, h, positions, window, theta)
+    h = rms_norm(x, lp["mlp_norm"], eps=cfg.norm_eps,
+                 plus_one=cfg.rmsnorm_plus_one)
+    if cfg.is_moe:
+        y, aux = moe_block(cfg, lp, h)
+    else:
+        y, aux = mlp_block(cfg, lp, h), jnp.zeros((), jnp.float32)
+    return x + y, aux
+
+
+def forward(cfg: LMConfig, params: dict, tokens: jax.Array,
+            positions: jax.Array | None = None) -> tuple[jax.Array, jax.Array]:
+    """Embed + all layers. Returns (hidden [B,S,D] in cfg.dtype, aux loss)."""
+    b, s = tokens.shape
+    if positions is None:
+        positions = jnp.arange(s, dtype=jnp.int32)
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), cfg.dtype)
+    x = constrain(x, "dp", None, None)
+
+    windows = jnp.asarray(cfg.layer_windows())
+    thetas = jnp.asarray(cfg.layer_thetas())
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def body(x, scanned):
+        lp, win, th = scanned
+        x, aux = _layer_fwd(cfg, lp, x, positions, win, th)
+        return x, aux
+
+    x, auxes = jax.lax.scan(body, x, (params["layers"], windows, thetas))
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps,
+                 plus_one=cfg.rmsnorm_plus_one)
+    return x, auxes.mean()
+
+
+def _unembed(cfg: LMConfig, params: dict) -> jax.Array:
+    if cfg.tie_embeddings:
+        return params["embed"].T.astype(cfg.dtype)
+    return params["lm_head"].astype(cfg.dtype)
+
+
+def loss_fn(cfg: LMConfig, params: dict, batch: dict) -> tuple[jax.Array, dict]:
+    """Next-token CE, computed in sequence chunks (logits never [B,S,V]).
+
+    batch: tokens [B, S] int32, labels [B, S] int32 (-1 = ignore).
+    """
+    tokens, labels = batch["tokens"], batch["labels"]
+    b, s = tokens.shape
+    hidden, aux = forward(cfg, params, tokens)
+    head = _unembed(cfg, params)
+
+    cs = min(cfg.loss_chunk, s)
+    while s % cs:
+        cs //= 2
+    nc = s // cs
+    hs = hidden.reshape(b, nc, cs, cfg.d_model).transpose(1, 0, 2, 3)
+    hs = constrain(hs, None, "dp", None, None)
+    ls = labels.reshape(b, nc, cs).transpose(1, 0, 2)
+    ls = constrain(ls, None, "dp", None)
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def chunk_ce(args):
+        # checkpointed so the [B, cs, V] logits are recomputed in the
+        # backward instead of being stacked across all chunks
+        h, lab = args
+        logits = (h @ head).astype(jnp.float32)             # [B, cs, V]
+        logits = constrain(logits, "dp", None, "model")     # vocab-sharded CE
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        safe = jnp.maximum(lab, 0)
+        gold = jnp.take_along_axis(logits, safe[..., None], axis=-1)[..., 0]
+        valid = (lab >= 0).astype(jnp.float32)
+        return ((lse - gold) * valid).sum(), valid.sum()
+
+    ces, cnts = jax.lax.map(chunk_ce, (hs, ls))
+    n_tok = jnp.maximum(cnts.sum(), 1.0)
+    ce = ces.sum() / n_tok
+    loss = ce + 0.01 * aux
+    return loss, {"loss": loss, "ce": ce, "aux": aux, "n_tokens": n_tok}
+
+
+# --------------------------------------------------------------------------
+# prefill + decode (serving)
+# --------------------------------------------------------------------------
+
+def prefill(cfg: LMConfig, params: dict, tokens: jax.Array
+            ) -> tuple[jax.Array, dict]:
+    """Full-sequence forward producing last-position logits + KV cache.
+
+    The cache is uniform [L, B, S, KV, hd] (scan-stacked); decode uses
+    per-layer window-capped caches — ``cache_from_prefill`` converts.
+    """
+    b, s = tokens.shape
+    positions = jnp.arange(s, dtype=jnp.int32)
+    x = params["embed"].astype(cfg.dtype)[tokens]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), cfg.dtype)
+    x = constrain(x, "dp", None, None)
+    windows = jnp.asarray(cfg.layer_windows())
+    thetas = jnp.asarray(cfg.layer_thetas())
+    kv, hd = cfg.n_kv_heads, cfg.hd
+
+    @functools.partial(jax.checkpoint,
+                       policy=jax.checkpoint_policies.nothing_saveable)
+    def body(x, scanned):
+        lp, win, th = scanned
+        h = rms_norm(x, lp["attn_norm"], eps=cfg.norm_eps,
+                     plus_one=cfg.rmsnorm_plus_one)
+        q = _heads(h @ lp["wq"].astype(cfg.dtype), cfg.n_heads, hd)
+        k = _heads(h @ lp["wk"].astype(cfg.dtype), kv, hd)
+        v = _heads(h @ lp["wv"].astype(cfg.dtype), kv, hd)
+        if cfg.qk_norm:
+            q = rms_norm(q, lp["q_norm"], eps=cfg.norm_eps)
+            k = rms_norm(k, lp["k_norm"], eps=cfg.norm_eps)
+        q = _rope_dyn(q, positions, th)
+        k = _rope_dyn(k, positions, th)
+        q = constrain(q, "dp", None, "model", None)
+        k = constrain(k, "dp", None, None, None)
+        v = constrain(v, "dp", None, None, None)
+        att = chunked_attention(q, k, v, positions, positions, win,
+                                seq_chunk=cfg.seq_chunk)
+        att = att.reshape(b, s, cfg.n_heads * hd) @ lp["wo"].astype(cfg.dtype)
+        x = x + constrain(att, "dp", None, None)
+        h = rms_norm(x, lp["mlp_norm"], eps=cfg.norm_eps,
+                     plus_one=cfg.rmsnorm_plus_one)
+        if cfg.is_moe:
+            y, _ = moe_block(cfg, lp, h)
+        else:
+            y = mlp_block(cfg, lp, h)
+        return x + y, (k, v)
+
+    x, (ks, vs) = jax.lax.scan(body, x, (params["layers"], windows, thetas))
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps,
+                 plus_one=cfg.rmsnorm_plus_one)
+    logits = (x[:, -1, :] @ _unembed(cfg, params)).astype(jnp.float32)
+    return logits, {"k": ks, "v": vs, "pos": jnp.asarray(s, jnp.int32)}
+
+
+def decode_cache_shapes(cfg: LMConfig, batch: int, seq_len: int
+                        ) -> list[tuple[int, int, int, int]]:
+    """Per-layer decode cache shapes: [B, min(S, window_i or S), KV, hd]."""
+    out = []
+    for w in cfg.layer_windows():
+        s_i = seq_len if w == 0 else min(seq_len, int(w))
+        out.append((batch, s_i, cfg.n_kv_heads, cfg.hd))
+    return out
+
+
+def init_decode_cache(cfg: LMConfig, batch: int, seq_len: int,
+                      dtype=None) -> dict:
+    """KV cache; with ``cfg.kv_quant`` entries are int8 + per-(pos, head)
+    scales (KIVI-style per-token quantization — halves both the cache
+    footprint and the decode HBM traffic, the dominant roofline term)."""
+    dtype = dtype or cfg.dtype
+    shapes = decode_cache_shapes(cfg, batch, seq_len)
+    cache = {
+        "pos": jnp.asarray(seq_len, jnp.int32),   # decode continues at S
+    }
+    if cfg.kv_quant:
+        cache["k"] = [jnp.zeros(s, jnp.int8) for s in shapes]
+        cache["v"] = [jnp.zeros(s, jnp.int8) for s in shapes]
+        cache["k_scale"] = [jnp.ones(s[:3], jnp.float32) for s in shapes]
+        cache["v_scale"] = [jnp.ones(s[:3], jnp.float32) for s in shapes]
+    else:
+        cache["k"] = [jnp.zeros(s, dtype) for s in shapes]
+        cache["v"] = [jnp.zeros(s, dtype) for s in shapes]
+    return cache
+
+
+def _kv_quantize(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """[B, 1, KV, hd] -> int8 values + per-(B, 1, KV) scale."""
+    scale = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1) / 127.0
+    scale = jnp.maximum(scale, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def _kv_dequant(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale[..., None]
+
+
+def decode_step(cfg: LMConfig, params: dict, cache: dict, tokens: jax.Array
+                ) -> tuple[jax.Array, dict]:
+    """One decode step for the whole batch (lockstep position).
+
+    tokens: [B] int32. Layers are unrolled so each layer keeps its own
+    window-capped ring cache (a production decode graph, not a scan).
+    """
+    b = tokens.shape[0]
+    h_heads, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = h_heads // kv
+    pos = cache["pos"]
+    x = params["embed"].astype(cfg.dtype)[tokens][:, None, :]   # [B,1,D]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), cfg.dtype)
+    windows = cfg.layer_windows()
+    thetas = cfg.layer_thetas()
+    new_k, new_v = [], []
+    new_ks, new_vs = [], []
+    scale = hd ** -0.5
+    posv = pos[None]
+
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda p: p[i], params["layers"])
+        ck, cv = cache["k"][i], cache["v"][i]
+        s_i = ck.shape[1]
+        h = rms_norm(x, lp["attn_norm"], eps=cfg.norm_eps,
+                     plus_one=cfg.rmsnorm_plus_one)
+        q = _heads(h @ lp["wq"].astype(cfg.dtype), h_heads, hd)
+        k = _heads(h @ lp["wk"].astype(cfg.dtype), kv, hd)
+        v = _heads(h @ lp["wv"].astype(cfg.dtype), kv, hd)
+        if cfg.qk_norm:
+            q = rms_norm(q, lp["q_norm"], eps=cfg.norm_eps)
+            k = rms_norm(k, lp["k_norm"], eps=cfg.norm_eps)
+        th = jnp.asarray(thetas[i])
+        q = _rope_dyn(q, posv, th)
+        k = _rope_dyn(k, posv, th)
+        slot = pos % s_i                                        # ring index
+        if cfg.kv_quant:
+            kq, ks_ = _kv_quantize(k)
+            vq, vs_ = _kv_quantize(v)
+            ck = jax.lax.dynamic_update_slice(ck, kq, (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, vq, (0, slot, 0, 0))
+            cks = jax.lax.dynamic_update_slice(
+                cache["k_scale"][i], ks_, (0, slot, 0))
+            cvs = jax.lax.dynamic_update_slice(
+                cache["v_scale"][i], vs_, (0, slot, 0))
+            new_ks.append(cks)
+            new_vs.append(cvs)
+            k_full = _kv_dequant(ck, cks)
+            v_full = _kv_dequant(cv, cvs)
+        else:
+            ck = jax.lax.dynamic_update_slice(ck, k.astype(ck.dtype),
+                                              (0, slot, 0, 0))
+            cv = jax.lax.dynamic_update_slice(cv, v.astype(cv.dtype),
+                                              (0, slot, 0, 0))
+            k_full = ck.astype(jnp.float32)
+            v_full = cv.astype(jnp.float32)
+        new_k.append(ck)
+        new_v.append(cv)
+        n_valid = jnp.minimum(pos + 1, s_i)
+        qh = q.reshape(b, kv, g, hd).astype(jnp.float32)
+        s_ = jnp.einsum("bkgh,bskh->bkgs", qh, k_full) * scale   # [B,KV,G,S]
+        valid = jnp.arange(s_i)[None, None, None, :] < n_valid
+        s_ = jnp.where(valid, s_, -1e30)
+        p = jax.nn.softmax(s_, axis=-1)
+        att = jnp.einsum("bkgs,bskh->bkgh", p, v_full)
+        att = att.reshape(b, 1, h_heads * hd).astype(cfg.dtype)
+        x = x + att @ lp["wo"].astype(cfg.dtype)
+        h = rms_norm(x, lp["mlp_norm"], eps=cfg.norm_eps,
+                     plus_one=cfg.rmsnorm_plus_one)
+        if cfg.is_moe:
+            y, _ = moe_block(cfg, lp, h)
+        else:
+            y = mlp_block(cfg, lp, h)
+        x = x + y
+
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps,
+                 plus_one=cfg.rmsnorm_plus_one)
+    logits = (x[:, 0, :] @ _unembed(cfg, params)).astype(jnp.float32)
+    out_cache = {"k": new_k, "v": new_v, "pos": pos + 1}
+    if cfg.kv_quant:
+        out_cache["k_scale"] = new_ks
+        out_cache["v_scale"] = new_vs
+    return logits, out_cache
+
+
+def reduced(cfg: LMConfig, **overrides) -> LMConfig:
+    """Smoke-test-sized variant of a config (same family/features)."""
+    small = dict(
+        n_layers=min(cfg.n_layers, 2 if cfg.global_every is None
+                     else cfg.global_every + 1),
+        d_model=64, n_heads=4,
+        n_kv_heads=min(cfg.n_kv_heads, 2), head_dim=16, d_ff=128,
+        vocab_size=256,
+        sliding_window=None if cfg.sliding_window is None else 16,
+        n_experts=None if cfg.n_experts is None else 4,
+        seq_chunk=16, loss_chunk=16,
+        dtype=jnp.float32,
+    )
+    small.update(overrides)
+    return replace(cfg, **small)

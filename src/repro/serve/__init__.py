@@ -1,0 +1,6 @@
+"""Serving stack: sharded retrieval engine with hedging, LM decode engine."""
+
+from .retrieval_engine import RetrievalEngine, ShardRuntime
+from .decode_engine import DecodeEngine
+
+__all__ = ["RetrievalEngine", "ShardRuntime", "DecodeEngine"]

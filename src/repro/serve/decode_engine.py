@@ -1,0 +1,174 @@
+"""LM decode engine: slot-based continuous batching over ragged positions.
+
+The dry-run decode cells use the lockstep ``decode_step`` (whole batch at
+one position — the shape that matters for the roofline). Serving needs
+per-request positions; this engine keeps a fixed batch of SLOTS, each with
+its own position and ring cache row, and advances all active slots in one
+jitted step per token (``decode_step_ragged``). Finished slots are refilled
+from the queue — requests of different lengths never force a recompile
+because every shape is static.
+"""
+
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..models import transformer
+from ..models.common import rms_norm
+from ..models.transformer import (LMConfig, _heads, _rope_dyn, _unembed,
+                                  mlp_block, moe_block)
+from ..dist.sharding import constrain
+
+
+def decode_step_ragged(cfg: LMConfig, params: dict, cache: dict,
+                       tokens: jax.Array, pos: jax.Array, active: jax.Array
+                       ) -> tuple[jax.Array, dict]:
+    """One token for every ACTIVE slot; slots carry independent positions.
+
+    tokens, pos, active: [B]. Inactive slots compute but do not write cache.
+    """
+    b = tokens.shape[0]
+    h_heads, kv, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    g = h_heads // kv
+    x = params["embed"].astype(cfg.dtype)[tokens][:, None, :]
+    if cfg.embed_scale:
+        x = x * jnp.asarray(np.sqrt(cfg.d_model), cfg.dtype)
+    windows = cfg.layer_windows()
+    thetas = cfg.layer_thetas()
+    scale = hd ** -0.5
+    new_k, new_v = [], []
+    posv = pos[:, None]                                  # [B, 1]
+
+    for i in range(cfg.n_layers):
+        lp = jax.tree.map(lambda p: p[i], params["layers"])
+        ck, cv = cache["k"][i], cache["v"][i]
+        s_i = ck.shape[1]
+        h = rms_norm(x, lp["attn_norm"], eps=cfg.norm_eps,
+                     plus_one=cfg.rmsnorm_plus_one)
+        q = _heads(h @ lp["wq"].astype(cfg.dtype), h_heads, hd)
+        k = _heads(h @ lp["wk"].astype(cfg.dtype), kv, hd)
+        v = _heads(h @ lp["wv"].astype(cfg.dtype), kv, hd)
+        if cfg.qk_norm:
+            q = rms_norm(q, lp["q_norm"], eps=cfg.norm_eps)
+            k = rms_norm(k, lp["k_norm"], eps=cfg.norm_eps)
+        th = jnp.asarray(thetas[i])
+        q = _rope_dyn(q, posv, th)
+        k = _rope_dyn(k, posv, th)
+        slot = (pos % s_i).astype(jnp.int32)             # [B] per-row ring
+        rows = jnp.arange(b)
+        upd_k = jnp.where(active[:, None, None],
+                          k[:, 0].astype(ck.dtype), ck[rows, slot])
+        upd_v = jnp.where(active[:, None, None],
+                          v[:, 0].astype(cv.dtype), cv[rows, slot])
+        ck = ck.at[rows, slot].set(upd_k)
+        cv = cv.at[rows, slot].set(upd_v)
+        new_k.append(ck)
+        new_v.append(cv)
+        n_valid = jnp.minimum(pos + 1, s_i)[:, None]     # [B, 1]
+        qh = q.reshape(b, kv, g, hd).astype(jnp.float32)
+        s_ = jnp.einsum("bkgh,bskh->bkgs", qh,
+                        ck.astype(jnp.float32)) * scale
+        valid = jnp.arange(s_i)[None, :] < n_valid       # [B, S]
+        s_ = jnp.where(valid[:, None, None, :], s_, -1e30)
+        p = jax.nn.softmax(s_, axis=-1)
+        att = jnp.einsum("bkgs,bskh->bkgh", p, cv.astype(jnp.float32))
+        att = att.reshape(b, 1, h_heads * hd).astype(cfg.dtype)
+        x = x + att @ lp["wo"].astype(cfg.dtype)
+        h = rms_norm(x, lp["mlp_norm"], eps=cfg.norm_eps,
+                     plus_one=cfg.rmsnorm_plus_one)
+        y = moe_block(cfg, lp, h)[0] if cfg.is_moe else mlp_block(cfg, lp, h)
+        x = x + y
+
+    x = rms_norm(x, params["final_norm"], eps=cfg.norm_eps,
+                 plus_one=cfg.rmsnorm_plus_one)
+    logits = (x[:, 0, :] @ _unembed(cfg, params)).astype(jnp.float32)
+    return logits, {"k": new_k, "v": new_v, "pos": cache["pos"]}
+
+
+@dataclass
+class _Slot:
+    request_id: int | None = None
+    prompt: list[int] = field(default_factory=list)
+    fed: int = 0                  # prompt tokens consumed
+    generated: list[int] = field(default_factory=list)
+    max_new: int = 16
+
+
+class DecodeEngine:
+    """Fixed-slot continuous batching around ``decode_step_ragged``."""
+
+    def __init__(self, cfg: LMConfig, params, *, n_slots: int = 4,
+                 max_seq: int = 256, greedy: bool = True):
+        self.cfg = cfg
+        self.params = params
+        self.n_slots = n_slots
+        self.max_seq = max_seq
+        self.cache = transformer.init_decode_cache(cfg, n_slots, max_seq)
+        self.pos = jnp.zeros((n_slots,), jnp.int32)
+        self.slots = [_Slot() for _ in range(n_slots)]
+        self.queue: deque = deque()
+        self.finished: dict[int, list[int]] = {}
+        self._next_id = 0
+        self._step = jax.jit(
+            lambda p, c, t, pos, act: decode_step_ragged(
+                cfg, p, c, t, pos, act))
+
+    def submit(self, prompt_ids: list[int], *, max_new: int = 16) -> int:
+        rid = self._next_id
+        self._next_id += 1
+        self.queue.append((rid, list(prompt_ids), max_new))
+        return rid
+
+    def _fill_slots(self) -> None:
+        for i, s in enumerate(self.slots):
+            if s.request_id is None and self.queue:
+                rid, prompt, max_new = self.queue.popleft()
+                self.slots[i] = _Slot(request_id=rid, prompt=prompt,
+                                      max_new=max_new)
+                self.pos = self.pos.at[i].set(0)
+
+    def step(self) -> None:
+        """Advance every active slot by one token (prefill or generate)."""
+        self._fill_slots()
+        tokens = np.zeros(self.n_slots, np.int32)
+        active = np.zeros(self.n_slots, bool)
+        for i, s in enumerate(self.slots):
+            if s.request_id is None:
+                continue
+            active[i] = True
+            if s.fed < len(s.prompt):
+                tokens[i] = s.prompt[s.fed]
+            else:
+                tokens[i] = s.generated[-1]
+        if not active.any():
+            return
+        logits, self.cache = self._step(
+            self.params, self.cache, jnp.asarray(tokens), self.pos,
+            jnp.asarray(active))
+        nxt = np.asarray(jnp.argmax(logits, axis=-1))
+        self.pos = self.pos + jnp.asarray(active, jnp.int32)
+        for i, s in enumerate(self.slots):
+            if s.request_id is None:
+                continue
+            if s.fed < len(s.prompt):
+                s.fed += 1
+                if s.fed == len(s.prompt):
+                    s.generated.append(int(nxt[i]))
+            else:
+                s.generated.append(int(nxt[i]))
+            if len(s.generated) >= s.max_new:
+                self.finished[s.request_id] = s.generated
+                self.slots[i] = _Slot()
+
+    def run_until_done(self, max_steps: int = 10_000) -> dict[int, list[int]]:
+        for _ in range(max_steps):
+            if not self.queue and all(s.request_id is None
+                                      for s in self.slots):
+                break
+            self.step()
+        return self.finished

@@ -1,0 +1,129 @@
+"""Batched retrieval serving with shard hedging, deadlines and elasticity.
+
+The paper's §2 "Multi-threading" uses pooled executors for retrieval
+speedup; at pod scale the same executor pattern becomes the scatter-gather
+layer over document shards, and the operational concerns become:
+
+* stragglers — the global merge proceeds once a QUORUM of shard top-k lists
+  has arrived by the deadline; late shards are dropped from that response
+  (recorded as ``degraded``) instead of stalling the tail latency. Because
+  per-shard top-k is a superset property, a missed shard can only remove
+  candidates it owns — results from responsive shards stay exact.
+* elasticity — ``rescale(n_shards)`` re-buckets the postings (pure host
+  re-slicing, ``core.index.reshard_index``) when the pool grows/shrinks.
+
+``ShardRuntime`` is process-local here (threads simulate shard servers; a
+``delay`` hook lets tests inject stragglers), but the engine logic —
+quorum, deadline, merge, re-shard — is exactly the production control
+plane.
+"""
+
+from __future__ import annotations
+
+import heapq
+import time
+from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
+from dataclasses import dataclass, field
+from typing import Callable, Sequence
+
+import numpy as np
+
+from ..core.index import BM25Index, reshard_index
+from ..core.reference import ScipyBM25
+
+
+@dataclass
+class ShardRuntime:
+    """One shard's scorer (thread-simulated shard server)."""
+
+    index: BM25Index
+    delay: Callable[[], float] | None = None     # test hook: seconds to sleep
+
+    def __post_init__(self):
+        self._scorer = ScipyBM25(self.index)
+
+    def topk(self, query_tokens: np.ndarray, k: int
+             ) -> tuple[np.ndarray, np.ndarray]:
+        if self.delay is not None:
+            time.sleep(self.delay())
+        return self._scorer.retrieve(query_tokens, k)
+
+
+@dataclass
+class RetrievalResult:
+    ids: np.ndarray
+    scores: np.ndarray
+    degraded: bool
+    shards_answered: int
+    latency_s: float
+
+
+class RetrievalEngine:
+    def __init__(self, shards: Sequence[BM25Index], *, k: int = 10,
+                 deadline_s: float = 0.5, quorum: float = 0.75,
+                 max_workers: int = 8,
+                 delay: Callable[[int], Callable[[], float] | None] = None):
+        self.k = k
+        self.deadline_s = deadline_s
+        self.quorum = quorum
+        self._delay_factory = delay
+        self._pool = ThreadPoolExecutor(max_workers=max_workers)
+        self._build_runtimes(list(shards))
+
+    def _build_runtimes(self, shards: list[BM25Index]) -> None:
+        self.shards = shards
+        self.runtimes = [
+            ShardRuntime(s, delay=self._delay_factory(i)
+                         if self._delay_factory else None)
+            for i, s in enumerate(shards)
+        ]
+
+    # -- control plane ------------------------------------------------------
+    def rescale(self, n_shards: int) -> None:
+        """Elastic re-shard (device pool grew or shrank)."""
+        self._build_runtimes(reshard_index(self.shards, n_shards))
+
+    # -- data plane ----------------------------------------------------------
+    def retrieve(self, query_tokens: np.ndarray, *, k: int | None = None
+                 ) -> RetrievalResult:
+        k = k or self.k
+        t0 = time.time()
+        futures = {
+            self._pool.submit(rt.topk, query_tokens, k): i
+            for i, rt in enumerate(self.runtimes)
+        }
+        need = max(1, int(np.ceil(self.quorum * len(self.runtimes))))
+        done: dict[int, tuple[np.ndarray, np.ndarray]] = {}
+        pending = set(futures)
+        deadline = t0 + self.deadline_s
+        while pending:
+            timeout = deadline - time.time()
+            if timeout <= 0 and len(done) >= need:
+                break                     # quorum met, deadline passed
+            finished, pending = wait(
+                pending, timeout=max(timeout, 0.005),
+                return_when=FIRST_COMPLETED)
+            for f in finished:
+                done[futures[f]] = f.result()
+            if not finished and len(done) >= need:
+                break
+        for f in pending:                 # backfill continues off-path
+            f.cancel()
+        ids, scores = self._merge(done.values(), k)
+        return RetrievalResult(
+            ids=ids, scores=scores,
+            degraded=len(done) < len(self.runtimes),
+            shards_answered=len(done), latency_s=time.time() - t0)
+
+    @staticmethod
+    def _merge(parts, k: int) -> tuple[np.ndarray, np.ndarray]:
+        heap: list[tuple[float, int]] = []
+        for ids, scores in parts:
+            for i, s in zip(ids.tolist(), scores.tolist()):
+                if len(heap) < k:
+                    heapq.heappush(heap, (s, i))
+                elif s > heap[0][0]:
+                    heapq.heapreplace(heap, (s, i))
+        heap.sort(reverse=True)
+        return (np.asarray([i for _, i in heap], dtype=np.int64),
+                np.asarray([s for s, _ in heap], dtype=np.float32))

@@ -1,0 +1,158 @@
+"""Block-bucketed CSR — the TPU-native layout for eager sparse scores.
+
+DESIGN.md §3.1: documents (or GNN destination nodes) are grouped into fixed
+blocks of ``block_size``; each block's postings (or edges) live in flat
+arrays padded to a static per-block budget that is a multiple of the kernel
+tile. Every shape is static under ``jit``; padding waste is the block-size
+quantization cost and is reported by ``padding_stats``.
+
+The same layout backs three workloads:
+  * BM25S scoring   — (token_id, local_doc, score) per posting
+  * GNN aggregation — (src_node, local_dst, edge_weight/message id)
+  * EmbeddingBag    — (row_id, local_bag, sample_weight)
+"""
+
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+import numpy as np
+
+
+@dataclass
+class BlockedPostings:
+    """Postings bucketed by destination block (static-shape sparse layout).
+
+    ``token_ids[i, p]`` is -1 for padding slots; padding slots carry
+    ``scores == 0`` and ``local_doc == 0`` so any consumer that forgets the
+    mask still computes correct sums.
+    """
+
+    token_ids: np.ndarray   # [n_blocks, nnz_pad] int32, -1 = pad
+    local_doc: np.ndarray   # [n_blocks, nnz_pad] int32 in [0, block_size)
+    scores: np.ndarray      # [n_blocks, nnz_pad] float32
+    block_size: int
+    n_docs: int             # true (unpadded) number of documents
+    n_vocab: int
+
+    @property
+    def n_blocks(self) -> int:
+        return int(self.token_ids.shape[0])
+
+    @property
+    def nnz_pad(self) -> int:
+        return int(self.token_ids.shape[1])
+
+    def padding_stats(self) -> dict:
+        real = int((self.token_ids >= 0).sum())
+        total = self.token_ids.size
+        return {
+            "nnz": real,
+            "padded_nnz": total,
+            "pad_fraction": 1.0 - real / max(total, 1),
+            "n_blocks": self.n_blocks,
+            "nnz_pad_per_block": self.nnz_pad,
+        }
+
+
+def _round_up(x: int, tile: int) -> int:
+    return max(tile, ((x + tile - 1) // tile) * tile)
+
+
+def block_postings_from_coo(
+    token_ids: np.ndarray,
+    doc_ids: np.ndarray,
+    scores: np.ndarray,
+    *,
+    n_docs: int,
+    n_vocab: int,
+    block_size: int = 512,
+    tile: int = 512,
+    sort_tokens: bool = True,
+) -> BlockedPostings:
+    """Bucket COO postings by ``doc_id // block_size`` and pad per block.
+
+    ``nnz_pad`` is the max per-block count rounded up to ``tile`` (one budget
+    shared by all blocks so the arrays are rectangular). Within a block
+    postings are sorted by token id (the membership-lookup kernel exploits
+    locality, and determinism helps tests).
+    """
+    n_blocks = max(1, -(-n_docs // block_size))
+    blk = doc_ids // block_size
+    counts = np.bincount(blk, minlength=n_blocks)
+    nnz_pad = _round_up(int(counts.max()) if counts.size else 0, tile)
+
+    tok = np.full((n_blocks, nnz_pad), -1, dtype=np.int32)
+    loc = np.zeros((n_blocks, nnz_pad), dtype=np.int32)
+    sc = np.zeros((n_blocks, nnz_pad), dtype=np.float32)
+
+    order = np.argsort(blk, kind="stable")
+    token_ids, doc_ids, scores, blk = (
+        token_ids[order], doc_ids[order], scores[order], blk[order])
+    starts = np.zeros(n_blocks + 1, dtype=np.int64)
+    np.add.at(starts, blk + 1, 1)
+    np.cumsum(starts, out=starts)
+    for i in range(n_blocks):
+        lo, hi = int(starts[i]), int(starts[i + 1])
+        t = token_ids[lo:hi]
+        d = doc_ids[lo:hi] - i * block_size
+        s = scores[lo:hi]
+        if sort_tokens and t.size:
+            o = np.argsort(t, kind="stable")
+            t, d, s = t[o], d[o], s[o]
+        tok[i, : t.size] = t
+        loc[i, : t.size] = d
+        sc[i, : t.size] = s
+    return BlockedPostings(tok, loc, sc, block_size=block_size,
+                           n_docs=n_docs, n_vocab=n_vocab)
+
+
+def block_postings_from_index(index, *, block_size: int = 512,
+                              tile: int = 512) -> BlockedPostings:
+    """Re-block a :class:`repro.core.index.BM25Index` (CSC-by-token) shard."""
+    df = np.diff(index.indptr)
+    tok = np.repeat(np.arange(index.n_vocab, dtype=np.int32), df)
+    return block_postings_from_coo(
+        tok, index.doc_ids.astype(np.int64), index.scores,
+        n_docs=int(index.doc_lens.size), n_vocab=index.n_vocab,
+        block_size=block_size, tile=tile)
+
+
+def block_edges(src: np.ndarray, dst: np.ndarray, weight: np.ndarray | None,
+                *, n_nodes: int, block_size: int = 512,
+                tile: int = 512) -> BlockedPostings:
+    """GNN edge list -> destination-blocked layout (same container).
+
+    ``token_ids`` carries the *source node id*, ``local_doc`` the destination
+    offset within its block, ``scores`` the edge weight (1.0 if None).
+    """
+    w = np.ones(src.shape[0], np.float32) if weight is None else weight
+    return block_postings_from_coo(
+        src.astype(np.int32), dst.astype(np.int64), w.astype(np.float32),
+        n_docs=n_nodes, n_vocab=n_nodes, block_size=block_size, tile=tile,
+        sort_tokens=False)
+
+
+def pack_query_batch(q_tokens: np.ndarray, q_weights: np.ndarray,
+                     u_max: int) -> tuple[np.ndarray, np.ndarray]:
+    """Batch of padded queries -> (sorted unique tokens [U], weights [U, B]).
+
+    The batched kernel scores *all* queries in one pass over the postings
+    (DESIGN.md §3.3); its query-side operand is the batch's unique-token
+    table plus a per-query weight column. Pad token = 2^31 - 1 (sorts last,
+    matches nothing since posting pads are -1).
+    """
+    b = q_tokens.shape[0]
+    uniq = np.unique(q_tokens[q_tokens >= 0])
+    if uniq.size > u_max:
+        raise ValueError(f"query batch has {uniq.size} unique tokens "
+                         f"> u_max={u_max}")
+    table = np.full(u_max, np.iinfo(np.int32).max, dtype=np.int32)
+    table[: uniq.size] = uniq
+    weights = np.zeros((u_max, b), dtype=np.float32)
+    for i in range(b):
+        t, w = q_tokens[i], q_weights[i]
+        valid = t >= 0
+        pos = np.searchsorted(uniq, t[valid])
+        weights[pos, i] = w[valid]
+    return table, weights

@@ -1,0 +1,69 @@
+"""EmbeddingBag in JAX: ``jnp.take`` + segment reduction.
+
+JAX has no native ``nn.EmbeddingBag``; per the brief this IS part of the
+system. Bags are fixed-fanout ``(B, F)`` index arrays (recsys multi-hot
+fields, GNN sampled neighborhoods) with optional per-sample weights and a
+``-1`` padding convention.
+
+The gather is a plain ``jnp.take`` so XLA can turn it into a fused dynamic
+gather; with row-sharded tables under ``jit`` the gather lowers to the
+cross-device collectives counted in the roofline table. A Pallas
+DMA-pipelined version lives in ``kernels/embedding_bag.py``.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def embedding_bag(table: jax.Array, indices: jax.Array,
+                  weights: jax.Array | None = None, *,
+                  combiner: str = "sum") -> jax.Array:
+    """Gather-and-reduce: table [V, D], indices [..., F] -> [..., D].
+
+    ``indices == -1`` are padding (contribute zero; excluded from "mean").
+    """
+    valid = indices >= 0
+    safe = jnp.where(valid, indices, 0)
+    rows = jnp.take(table, safe, axis=0)                 # [..., F, D]
+    w = valid.astype(table.dtype)
+    if weights is not None:
+        w = w * weights
+    rows = rows * w[..., None]
+    if combiner == "sum":
+        return rows.sum(axis=-2)
+    if combiner == "mean":
+        denom = jnp.maximum(w.sum(axis=-1, keepdims=True), 1e-9)
+        return rows.sum(axis=-2) / denom
+    if combiner == "max":
+        neg = jnp.where(valid[..., None], rows,
+                        jnp.finfo(table.dtype).min)
+        out = neg.max(axis=-2)
+        any_valid = valid.any(axis=-1, keepdims=True)
+        return jnp.where(any_valid, out, 0.0)
+    raise ValueError(f"unknown combiner {combiner!r}")
+
+
+def multi_table_lookup(tables: list[jax.Array], indices: jax.Array
+                       ) -> jax.Array:
+    """Per-field single-hot lookup: indices [B, n_fields] -> [B, n_fields, D].
+
+    Recsys convention: one embedding table per categorical field, all with
+    the same dim. Fields with huge vocabs may be row-sharded; the stacked
+    form (`stacked_table_lookup`) is preferred under jit for those.
+    """
+    cols = [jnp.take(t, indices[:, i], axis=0) for i, t in enumerate(tables)]
+    return jnp.stack(cols, axis=1)
+
+
+def stacked_table_lookup(table: jax.Array, offsets: jax.Array,
+                         indices: jax.Array) -> jax.Array:
+    """Lookup into one concatenated [Σ vocab_f, D] table.
+
+    ``offsets[f]`` is the row offset of field ``f``; concatenating tables
+    gives a single shardable array (row-sharded over "model") and a single
+    gather — the layout used by the production configs.
+    """
+    flat = indices + offsets[None, :]
+    return jnp.take(table, flat, axis=0)

@@ -1,0 +1,68 @@
+"""Segment reductions — the shared sparse primitive (DESIGN.md §2).
+
+JAX has no EmbeddingBag and only BCOO sparse; message passing, embedding
+bags and BM25 scoring are all built here on ``jax.ops.segment_sum`` /
+``segment_max`` over explicit index arrays. These wrappers add the
+conventions the rest of the framework relies on (sentinel segments for
+padding, mean/softmax composites, degree normalization).
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def segment_sum(values: jax.Array, segment_ids: jax.Array, num_segments: int
+                ) -> jax.Array:
+    """segment_sum with an extra sentinel row: ids == num_segments are dropped."""
+    out = jax.ops.segment_sum(values, segment_ids, num_segments=num_segments + 1)
+    return out[:num_segments]
+
+
+def segment_mean(values: jax.Array, segment_ids: jax.Array, num_segments: int,
+                 *, eps: float = 1e-9) -> jax.Array:
+    s = segment_sum(values, segment_ids, num_segments)
+    ones = jnp.ones(values.shape[:1], dtype=values.dtype)
+    cnt = segment_sum(ones, segment_ids, num_segments)
+    return s / jnp.maximum(cnt, eps)[(...,) + (None,) * (s.ndim - 1)]
+
+
+def segment_max(values: jax.Array, segment_ids: jax.Array, num_segments: int
+                ) -> jax.Array:
+    out = jax.ops.segment_max(values, segment_ids,
+                              num_segments=num_segments + 1)
+    return out[:num_segments]
+
+
+def segment_softmax(logits: jax.Array, segment_ids: jax.Array,
+                    num_segments: int) -> jax.Array:
+    """Softmax normalized within each segment (GAT-style edge softmax)."""
+    m = segment_max(logits, segment_ids, num_segments)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)
+    shifted = logits - m[segment_ids]
+    e = jnp.exp(shifted)
+    z = segment_sum(e, segment_ids, num_segments)
+    return e / jnp.maximum(z[segment_ids], 1e-9)
+
+
+def scatter_add(acc: jax.Array, idx: jax.Array, values: jax.Array) -> jax.Array:
+    """acc[idx] += values with out-of-range idx dropped (XLA scatter-add)."""
+    return acc.at[idx].add(values, mode="drop")
+
+
+def one_hot_matmul_segment_sum(values: jax.Array, segment_ids: jax.Array,
+                               num_segments: int) -> jax.Array:
+    """Scatter-add expressed as a dense one-hot matmul (the MXU form).
+
+    ``out[s] = Σ_p 1[segment_ids[p] == s] · values[p]`` — mathematically the
+    same as segment_sum but lowered to a GEMM. Used as the jnp-level
+    reference for the Pallas block kernels and, on TPU, as the fast path for
+    small ``num_segments`` (e.g. one document block).
+    """
+    oh = (segment_ids[:, None] ==
+          jnp.arange(num_segments, dtype=segment_ids.dtype)[None, :])
+    oh = oh.astype(values.dtype)
+    if values.ndim == 1:
+        return values @ oh
+    return jnp.einsum("p...,ps->s...", values, oh)

@@ -1,0 +1,7 @@
+"""Training stack: optimizer, step builder, checkpointing, fault tolerance."""
+
+from .optimizer import AdamW, cosine_schedule, global_norm
+from .step import init_train_state, make_train_step
+
+__all__ = ["AdamW", "cosine_schedule", "global_norm",
+           "init_train_state", "make_train_step"]

@@ -1,0 +1,82 @@
+"""Fault-tolerant training loop.
+
+Design points for 1000+ nodes (validated in tests at small scale):
+
+* fixed-shape steps — XLA collectives can never deadlock on data-dependent
+  shapes; a straggling host delays but never wedges the step;
+* periodic checkpoints with atomic manifests (checkpoint.py) +
+  ``auto-resume``: the loop entry point looks for the latest COMPLETE
+  checkpoint and continues from there, so preemption between (or during)
+  steps loses at most ``ckpt_every`` steps;
+* step-level retry: a transient step failure (simulated in tests via an
+  injected fault hook) is retried from the last known-good state rather
+  than crashing the job;
+* metrics emitted per step through a callback (production would export to
+  a metrics service; tests assert on them).
+"""
+
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Callable, Iterator
+
+import jax
+
+from .checkpoint import (latest_complete_step, load_checkpoint,
+                         save_checkpoint)
+
+
+@dataclass
+class LoopConfig:
+    total_steps: int
+    ckpt_every: int = 50
+    ckpt_dir: str | None = None
+    max_step_retries: int = 2
+    log_every: int = 10
+    metrics_cb: Callable[[int, dict], None] | None = None
+    fault_hook: Callable[[int], None] | None = None   # tests inject faults
+
+
+def run_training(train_step, state: tuple, batches: Iterator[dict],
+                 cfg: LoopConfig) -> tuple:
+    """Run (params, opt_state) through the loop with resume + retry.
+
+    ``train_step(params, opt_state, batch) -> (params, opt_state, metrics)``
+    must be jit-compiled by the caller. Returns the final state.
+    """
+    params, opt_state = state
+    start = 0
+    if cfg.ckpt_dir:
+        latest = latest_complete_step(cfg.ckpt_dir)
+        if latest is not None:
+            params, opt_state = load_checkpoint(
+                cfg.ckpt_dir, latest, (params, opt_state))
+            start = latest
+    step = start
+    while step < cfg.total_steps:
+        batch = next(batches)
+        for attempt in range(cfg.max_step_retries + 1):
+            try:
+                if cfg.fault_hook is not None:
+                    cfg.fault_hook(step)
+                new_params, new_opt, metrics = train_step(
+                    params, opt_state, batch)
+                # materialize before committing (surfaces async failures)
+                jax.block_until_ready(metrics["loss"])
+                params, opt_state = new_params, new_opt
+                break
+            except Exception:
+                if attempt >= cfg.max_step_retries:
+                    raise
+                # retry from last good state (params/opt unchanged)
+                continue
+        step += 1
+        if cfg.metrics_cb and (step % cfg.log_every == 0
+                               or step == cfg.total_steps):
+            cfg.metrics_cb(step, {k: float(v) for k, v in metrics.items()})
+        if cfg.ckpt_dir and step % cfg.ckpt_every == 0:
+            save_checkpoint(cfg.ckpt_dir, step, (params, opt_state))
+    if cfg.ckpt_dir and step > start and step % cfg.ckpt_every != 0:
+        save_checkpoint(cfg.ckpt_dir, step, (params, opt_state))
+    return params, opt_state

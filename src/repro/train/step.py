@@ -1,0 +1,78 @@
+"""Train-step builder: microbatched grad accumulation + AdamW update.
+
+``make_train_step`` turns a per-example ``loss_fn(params, batch)`` into the
+jit-able production step:
+
+    grads = (1/M) Σ_m grad(loss_fn)(params, microbatch_m)     (lax.scan)
+    params, opt = adamw.update(clip(grads), opt, params)
+
+Microbatch accumulation bounds activation memory (peak = one microbatch's
+activations + a params-shaped fp32 accumulator); the scan keeps HLO size
+independent of M. Optional int8 gradient compression with error feedback
+sits between accumulation and the optimizer.
+"""
+
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .grad_compress import compress_grads
+from .optimizer import AdamW
+
+
+def _split_microbatches(batch: dict, n: int) -> dict:
+    return jax.tree.map(
+        lambda x: x.reshape(n, x.shape[0] // n, *x.shape[1:]), batch)
+
+
+def make_train_step(loss_fn: Callable, optimizer: AdamW, *,
+                    n_microbatches: int = 1,
+                    compress: bool = False) -> Callable:
+    """Returns ``train_step(params, opt_state, batch) -> (params, opt, metrics)``.
+
+    ``opt_state`` carries {"m","v","step"} and, when ``compress``, an "ef"
+    error-feedback pytree.
+    """
+
+    def train_step(params, opt_state, batch):
+        if n_microbatches > 1:
+            mbs = _split_microbatches(batch, n_microbatches)
+
+            def body(acc, mb):
+                (loss, metrics), grads = jax.value_and_grad(
+                    loss_fn, has_aux=True)(params, mb)
+                acc = jax.tree.map(
+                    lambda a, g: a + g.astype(jnp.float32), acc, grads)
+                return acc, loss
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            grads, losses = jax.lax.scan(body, zeros, mbs)
+            grads = jax.tree.map(lambda g: g / n_microbatches, grads)
+            loss = losses.mean()
+        else:
+            (loss, _metrics), grads = jax.value_and_grad(
+                loss_fn, has_aux=True)(params, batch)
+
+        if compress:
+            grads, ef = compress_grads(grads, opt_state["ef"])
+
+        new_params, new_opt, om = optimizer.update(
+            grads, {k: opt_state[k] for k in ("m", "v", "step")}, params)
+        if compress:
+            new_opt["ef"] = ef
+        metrics = {"loss": loss, **om}
+        return new_params, new_opt, metrics
+
+    return train_step
+
+
+def init_train_state(params, optimizer: AdamW, *, compress: bool = False):
+    state = optimizer.init(params)
+    if compress:
+        from .grad_compress import init_error_feedback
+        state["ef"] = init_error_feedback(params)
+    return state

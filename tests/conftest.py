@@ -1,0 +1,16 @@
+"""Shared fixtures. NOTE: device count stays 1 here (the 512-device flag is
+set ONLY inside launch/dryrun.py); multi-device tests spawn subprocesses or
+use mesh-of-one."""
+
+import numpy as np
+import pytest
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)
+
+
+def make_corpus(rng, n_docs=60, n_vocab=50, max_len=30):
+    return [rng.integers(0, n_vocab, size=rng.integers(1, max_len)
+                         ).astype(np.int32) for _ in range(n_docs)]

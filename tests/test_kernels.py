@@ -1,0 +1,130 @@
+"""Every Pallas kernel vs its ref.py oracle: shape/dtype sweeps,
+interpret=True on CPU (the kernels target TPU)."""
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import ops, ref
+from repro.kernels.blockwise_topk import blockwise_topk_kernel
+from repro.kernels.bm25_block_score import bm25_block_score
+from repro.kernels.block_segment_sum import block_segment_sum
+from repro.kernels.embedding_bag import embedding_bag_kernel
+from repro.sparse.block_csr import (block_postings_from_index,
+                                    pack_query_batch)
+from repro.core import BM25Params, build_index, pad_queries
+
+
+@pytest.mark.parametrize("nb,p,tile,bs,u,b", [
+    (2, 128, 64, 32, 16, 4),
+    (3, 256, 128, 64, 32, 8),
+    (1, 512, 512, 128, 64, 16),
+])
+def test_bm25_block_score_shapes(nb, p, tile, bs, u, b, rng):
+    vocab = max(40, 2 * u)
+    tok = rng.integers(-1, vocab, size=(nb, p)).astype(np.int32)
+    loc = rng.integers(0, bs, size=(nb, p)).astype(np.int32)
+    sc = rng.normal(size=(nb, p)).astype(np.float32)
+    sc[tok < 0] = 0.0
+    uniq = np.sort(rng.choice(vocab, size=u, replace=False)).astype(np.int32)
+    w = rng.normal(size=(u, b)).astype(np.float32)
+    out = bm25_block_score(jnp.asarray(tok), jnp.asarray(loc),
+                           jnp.asarray(sc), jnp.asarray(uniq),
+                           jnp.asarray(w), block_size=bs, tile_p=tile)
+    expect = ref.bm25_block_score_ref(jnp.asarray(tok), jnp.asarray(loc),
+                                      jnp.asarray(sc), jnp.asarray(uniq),
+                                      jnp.asarray(w), block_size=bs)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("method", ["lucene", "bm25l"])
+def test_bm25_kernel_end_to_end_exact(method, rng):
+    """Blocked kernel path == dense oracle on a real index."""
+    from repro.core import dense_oracle_scores
+    corpus = [rng.integers(0, 64, size=rng.integers(1, 20)).astype(np.int32)
+              for _ in range(90)]
+    p = BM25Params(method=method)
+    idx = build_index(corpus, 64, params=p)
+    bp = block_postings_from_index(idx, block_size=32, tile=64)
+    queries = [rng.integers(0, 64, size=rng.integers(1, 6)).astype(np.int32)
+               for _ in range(4)]
+    toks, wts = pad_queries(queries, 8)
+    uniq, weights = pack_query_batch(toks, wts, u_max=32)
+    safe = np.where(toks >= 0, toks, 0)
+    shift = (wts * idx.nonoccurrence[safe] * (toks >= 0)).sum(-1)
+    out = ops.bm25_score_blocked(
+        jnp.asarray(bp.token_ids), jnp.asarray(bp.local_doc),
+        jnp.asarray(bp.scores), jnp.asarray(uniq), jnp.asarray(weights),
+        nonocc_shift=jnp.asarray(shift), block_size=bp.block_size,
+        n_docs=90, tile_p=64)
+    for i, q in enumerate(queries):
+        np.testing.assert_allclose(
+            np.asarray(out)[i], dense_oracle_scores(corpus, 64, q, p),
+            atol=1e-4)
+
+
+@pytest.mark.parametrize("dtype", [np.float32, np.float16])
+@pytest.mark.parametrize("nb,p,d,s", [(2, 128, 8, 16), (4, 256, 32, 64)])
+def test_block_segment_sum_sweep(nb, p, d, s, dtype, rng):
+    vals = rng.normal(size=(nb, p, d)).astype(dtype)
+    ids = rng.integers(0, s, size=(nb, p)).astype(np.int32)
+    out = block_segment_sum(jnp.asarray(vals), jnp.asarray(ids),
+                            num_segments=s, tile_p=p // 2)
+    expect = ref.block_segment_sum_ref(jnp.asarray(vals), jnp.asarray(ids),
+                                       num_segments=s)
+    tol = 1e-5 if dtype == np.float32 else 2e-2
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=tol, atol=tol)
+
+
+@pytest.mark.parametrize("v,d,b,f,tile_b", [
+    (100, 16, 32, 4, 16), (500, 64, 64, 9, 32),
+])
+def test_embedding_bag_kernel_sweep(v, d, b, f, tile_b, rng):
+    table = rng.normal(size=(v, d)).astype(np.float32)
+    idx = rng.integers(-1, v, size=(b, f)).astype(np.int32)
+    w = rng.normal(size=(b, f)).astype(np.float32)
+    out = embedding_bag_kernel(jnp.asarray(table), jnp.asarray(idx),
+                               jnp.asarray(w), tile_b=tile_b)
+    expect = ref.embedding_bag_ref(jnp.asarray(table), jnp.asarray(idx),
+                                   jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_embedding_bag_pads_batch(rng):
+    table = rng.normal(size=(50, 8)).astype(np.float32)
+    idx = rng.integers(0, 50, size=(13, 3)).astype(np.int32)   # 13 % tile != 0
+    out = ops.embedding_bag(jnp.asarray(table), jnp.asarray(idx), tile_b=8)
+    expect = ref.embedding_bag_ref(
+        jnp.asarray(table), jnp.asarray(idx), jnp.ones((13, 3), jnp.float32))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(expect),
+                               rtol=1e-5, atol=1e-5)
+
+
+@pytest.mark.parametrize("n,block,k", [(4096, 512, 7), (8192, 1024, 50)])
+def test_blockwise_topk_vs_full_sort(n, block, k, rng):
+    x = rng.normal(size=(2, n)).astype(np.float32)
+    vals, idx = ops.topk(jnp.asarray(x), k, block=block)
+    rv, ri = jax.lax.top_k(jnp.asarray(x), k)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rv), atol=1e-6)
+    np.testing.assert_allclose(
+        np.take_along_axis(x, np.asarray(idx), 1), np.asarray(rv), atol=1e-6)
+
+
+def test_blockwise_topk_kernel_matches_ref(rng):
+    x = rng.normal(size=(6, 256)).astype(np.float32)
+    vals, idx = blockwise_topk_kernel(jnp.asarray(x), k=5)
+    rvals, ridx = ref.blockwise_topk_ref(jnp.asarray(x).reshape(-1), k=5,
+                                         block=256)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rvals), atol=1e-6)
+
+
+def test_topk_with_duplicates():
+    x = jnp.zeros((1, 4096))
+    vals, idx = ops.topk(x, 5, block=1024)
+    np.testing.assert_allclose(np.asarray(vals), 0.0)
+    assert len(set(np.asarray(idx)[0].tolist())) == 5   # distinct positions

@@ -1,0 +1,108 @@
+"""Device-side scoring paths == oracles, incl. hypothesis property tests."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax.numpy as jnp
+
+from conftest import make_corpus
+from repro.core import (BM25Params, DeviceIndex, ScipyBM25, build_index,
+                        build_sharded_indexes, dense_oracle_scores,
+                        pad_queries, score_batch, suggest_p_max)
+
+
+@pytest.mark.parametrize("method", ["lucene", "bm25+"])
+def test_jax_gather_path_exact(method, rng):
+    corpus = make_corpus(rng)
+    p = BM25Params(method=method)
+    idx = build_index(corpus, 50, params=p)
+    di = DeviceIndex.from_host(idx)
+    queries = [rng.integers(0, 50, size=rng.integers(1, 7)).astype(np.int32)
+               for _ in range(6)]
+    toks, wts = pad_queries(queries, 8)
+    out = np.asarray(score_batch(di, toks, wts,
+                                 p_max=suggest_p_max(idx, 8)))
+    for i, q in enumerate(queries):
+        np.testing.assert_allclose(
+            out[i], dense_oracle_scores(corpus, 50, q, p), atol=1e-4)
+
+
+def test_duplicate_query_tokens_weighted(rng):
+    """A token occurring twice in the query contributes twice (weights)."""
+    corpus = make_corpus(rng)
+    idx = build_index(corpus, 50, params=BM25Params())
+    di = DeviceIndex.from_host(idx)
+    q1 = np.array([3, 3, 7], dtype=np.int32)
+    q2 = np.array([3, 7], dtype=np.int32)
+    toks, wts = pad_queries([q1, q2], 4)
+    out = np.asarray(score_batch(di, toks, wts, p_max=1024))
+    sc = ScipyBM25(idx)
+    np.testing.assert_allclose(out[0], sc.score(q1), atol=1e-4)
+    assert not np.allclose(out[0], out[1])
+
+
+def test_sharded_build_matches_single(rng):
+    corpus = make_corpus(rng, n_docs=80)
+    p = BM25Params(method="bm25l")
+    whole = build_index(corpus, 50, params=p)
+    shards = build_sharded_indexes(corpus, 50, 5, params=p)
+    # reassemble per-document scores from shards
+    q = rng.integers(0, 50, size=4).astype(np.int32)
+    ref = ScipyBM25(whole).score(q)
+    got = np.zeros_like(ref)
+    for sh in shards:
+        got[sh.doc_offset: sh.doc_offset + sh.doc_lens.size] = \
+            ScipyBM25(sh).score(q)
+    np.testing.assert_allclose(got, ref, atol=1e-4)
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.data())
+def test_property_eager_equals_lazy(data):
+    """Hypothesis: random corpora/queries/variants — eager == lazy oracle."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 31)))
+    n_vocab = data.draw(st.integers(5, 40))
+    n_docs = data.draw(st.integers(2, 30))
+    method = data.draw(st.sampled_from(
+        ["robertson", "atire", "lucene", "bm25l", "bm25+", "tfldp"]))
+    k1 = data.draw(st.floats(0.5, 2.0))
+    b = data.draw(st.floats(0.0, 1.0))
+    corpus = [rng.integers(0, n_vocab, size=rng.integers(1, 20)
+                           ).astype(np.int32) for _ in range(n_docs)]
+    p = BM25Params(method=method, k1=k1, b=b)
+    idx = build_index(corpus, n_vocab, params=p)
+    q = rng.integers(0, n_vocab, size=rng.integers(1, 5)).astype(np.int32)
+    np.testing.assert_allclose(
+        ScipyBM25(idx).score(q),
+        dense_oracle_scores(corpus, n_vocab, q, p), atol=1e-3)
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 31), n_new=st.integers(1, 6))
+def test_property_reshard_preserves_scores(seed, n_new):
+    from repro.core import reshard_index
+    rng = np.random.default_rng(seed)
+    corpus = [rng.integers(0, 30, size=rng.integers(1, 15)).astype(np.int32)
+              for _ in range(40)]
+    p = BM25Params(method="lucene")
+    shards = build_sharded_indexes(corpus, 30, 4, params=p)
+    new = reshard_index(shards, n_new)
+    q = rng.integers(0, 30, size=3).astype(np.int32)
+    ref = dense_oracle_scores(corpus, 30, q, p)
+    got = np.zeros_like(ref)
+    for sh in new:
+        got[sh.doc_offset: sh.doc_offset + sh.doc_lens.size] = \
+            ScipyBM25(sh).score(q)
+    np.testing.assert_allclose(got, ref, atol=1e-3)
+
+
+def test_index_save_load_roundtrip(tmp_path, rng):
+    corpus = make_corpus(rng)
+    idx = build_index(corpus, 50, params=BM25Params(method="bm25+"))
+    idx.save(str(tmp_path / "idx"))
+    from repro.core import BM25Index
+    idx2 = BM25Index.load(str(tmp_path / "idx"))
+    np.testing.assert_array_equal(idx.indptr, idx2.indptr)
+    np.testing.assert_array_equal(idx.scores, idx2.scores)
+    assert idx2.variant == "bm25+" and idx2.params.method == "bm25+"

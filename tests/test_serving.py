@@ -1,0 +1,114 @@
+"""Serving: hedged sharded retrieval, elastic re-shard, decode engine."""
+
+import time
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import BM25Params, build_sharded_indexes, topk_numpy, \
+    dense_oracle_scores
+from repro.data.corpus import zipf_corpus, zipf_queries
+from repro.serve import DecodeEngine, RetrievalEngine
+
+
+@pytest.fixture(scope="module")
+def corpus_and_shards():
+    corpus = zipf_corpus(300, 200, avg_len=30)
+    shards = build_sharded_indexes(corpus, 200, 4, params=BM25Params())
+    return corpus, shards
+
+
+def test_engine_exact_vs_oracle(corpus_and_shards):
+    corpus, shards = corpus_and_shards
+    eng = RetrievalEngine(shards, k=10, deadline_s=5.0)
+    for q in zipf_queries(5, 200):
+        r = eng.retrieve(q)
+        assert not r.degraded
+        oracle = dense_oracle_scores(corpus, 200, q, BM25Params())
+        _, ref_v = topk_numpy(oracle[None], 10)
+        np.testing.assert_allclose(np.sort(r.scores), np.sort(ref_v[0]),
+                                   atol=1e-3)
+
+
+def test_straggler_hedging_meets_deadline(corpus_and_shards):
+    _, shards = corpus_and_shards
+    eng = RetrievalEngine(
+        shards, k=5, deadline_s=0.2, quorum=0.5,
+        delay=lambda i: (lambda: 2.0) if i == 0 else None)
+    q = zipf_queries(1, 200)[0]
+    r = eng.retrieve(q)
+    assert r.degraded and r.shards_answered >= 2
+    assert r.latency_s < 1.0                       # did not wait 2s straggler
+
+
+def test_hedged_results_are_subset_exact(corpus_and_shards):
+    """Answered shards' winners keep exact scores (superset property)."""
+    corpus, shards = corpus_and_shards
+    eng = RetrievalEngine(
+        shards, k=5, deadline_s=0.2, quorum=0.5,
+        delay=lambda i: (lambda: 2.0) if i == 0 else None)
+    q = zipf_queries(1, 200)[0]
+    r = eng.retrieve(q)
+    oracle = dense_oracle_scores(corpus, 200, q, BM25Params())
+    for i, s in zip(r.ids, r.scores):
+        assert abs(oracle[i] - s) < 1e-3
+
+
+def test_elastic_rescale_preserves_results(corpus_and_shards):
+    corpus, shards = corpus_and_shards
+    eng = RetrievalEngine(shards, k=8, deadline_s=5.0)
+    q = zipf_queries(1, 200, seed=7)[0]
+    before = eng.retrieve(q)
+    eng.rescale(2)        # pool shrank 4 -> 2
+    after = eng.retrieve(q)
+    np.testing.assert_allclose(np.sort(before.scores),
+                               np.sort(after.scores), atol=1e-3)
+    eng.rescale(6)        # pool grew
+    again = eng.retrieve(q)
+    np.testing.assert_allclose(np.sort(before.scores),
+                               np.sort(again.scores), atol=1e-3)
+
+
+def test_decode_engine_continuous_batching():
+    from repro.models.transformer import LMConfig, init_params
+    cfg = LMConfig(name="t", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+                   d_ff=64, vocab_size=61, head_dim=8, sliding_window=16,
+                   seq_chunk=8, loss_chunk=8, dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(0), cfg)
+    eng = DecodeEngine(cfg, params, n_slots=2, max_seq=32)
+    rids = [eng.submit([1 + i, 2 + i], max_new=3 + i) for i in range(5)]
+    out = eng.run_until_done()
+    assert set(out) == set(rids)
+    for i, rid in enumerate(rids):
+        assert len(out[rid]) == 3 + i
+
+
+def test_decode_engine_matches_lockstep():
+    """Single request through the ragged engine == greedy lockstep decode."""
+    from repro.models import transformer
+    from repro.models.transformer import LMConfig, init_params
+    cfg = LMConfig(name="t", n_layers=2, d_model=32, n_heads=4, n_kv_heads=2,
+                   d_ff=64, vocab_size=61, head_dim=8, seq_chunk=8,
+                   loss_chunk=8, dtype=jnp.float32)
+    params = init_params(jax.random.PRNGKey(1), cfg)
+    prompt = [5, 9, 11]
+    eng = DecodeEngine(cfg, params, n_slots=1, max_seq=32)
+    rid = eng.submit(prompt, max_new=5)
+    got = eng.run_until_done()[rid]
+    # lockstep reference
+    cache = transformer.init_decode_cache(cfg, 1, 32)
+    cache["pos"] = jnp.asarray(0, jnp.int32)
+    toks = list(prompt)
+    ref = []
+    for t in range(len(prompt) + 4):
+        cur = jnp.asarray([toks[t]], jnp.int32)
+        logits, cache = transformer.decode_step(cfg, params, cache, cur)
+        if t >= len(prompt) - 1:
+            nxt = int(jnp.argmax(logits[0]))
+            ref.append(nxt)
+            if t + 1 >= len(toks):
+                toks.append(nxt)
+    assert got == ref

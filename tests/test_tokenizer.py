@@ -1,0 +1,72 @@
+"""Tokenizer: sklearn regex split, Elastic stopwords, Snowball stemming."""
+
+import numpy as np
+import pytest
+
+from repro.core import Tokenizer
+from repro.core.stemmer import snowball_stem
+from repro.core.stopwords import ENGLISH_STOPWORDS
+
+
+# Published Snowball english (Porter2) vocabulary samples
+SNOWBALL_SAMPLES = {
+    "consign": "consign", "consigned": "consign", "consigning": "consign",
+    "consignment": "consign",
+    "knack": "knack", "knackeries": "knackeri", "knavish": "knavish",
+    "kneel": "kneel", "knots": "knot",
+    "generate": "generat", "generates": "generat", "generating": "generat",
+    "general": "general", "generally": "general",
+    "skis": "ski", "skies": "sky", "dying": "die", "lying": "lie",
+    "news": "news", "inning": "inning", "proceed": "proceed",
+    "exceed": "exceed", "succeed": "succeed",
+    "happy": "happi", "happiness": "happi",
+    "relational": "relat", "conditional": "condit", "rational": "ration",
+    "national": "nation",
+}
+
+
+@pytest.mark.parametrize("word,stem", sorted(SNOWBALL_SAMPLES.items()))
+def test_snowball_published_samples(word, stem):
+    assert snowball_stem(word) == stem
+
+
+def test_regex_split_is_sklearn_pattern():
+    t = Tokenizer(stopwords=None, stemmer=None)
+    # \b\w\w+\b: single chars dropped, unicode words kept, punctuation split
+    assert t.split("a bc def, ghi! x yz") == ["bc", "def", "ghi", "yz"]
+    assert t.split("Café au lait") == ["café", "au", "lait"]
+
+
+def test_stopword_removal():
+    t = Tokenizer(stopwords="english", stemmer=None)
+    words = t.tokenize_words("the cat and the hat will be there")
+    assert "the" not in words and "and" not in words and "will" not in words
+    assert "cat" in words and "hat" in words
+    assert len(ENGLISH_STOPWORDS) == 33
+
+
+def test_vocab_stability_and_oov():
+    t = Tokenizer(stopwords=None, stemmer="snowball")
+    corpus_ids = t.tokenize_corpus(["running runs runner", "jumping jumps"])
+    v = t.vocab_size
+    # queries must not grow the vocab; OOV words are dropped
+    q = t.tokenize_queries(["running zzzzunknownzzzz"])[0]
+    assert t.vocab_size == v
+    assert q.size == 1   # "running" -> known stem; unknown dropped
+    assert all(i < v for i in q)
+
+
+def test_stemming_applied_to_vocabulary_not_occurrences():
+    """'runs' and 'running' share one stem ⇒ one vocabulary id."""
+    t = Tokenizer(stopwords=None, stemmer="snowball")
+    ids = t.tokenize_ids("runs running run")
+    assert len(set(ids.tolist())) == 1
+
+
+def test_table2_ablation_axes():
+    """The four Table-2 tokenizer configurations are constructible."""
+    for stop in ("english", None):
+        for stem in ("snowball", None):
+            t = Tokenizer(stopwords=stop, stemmer=stem)
+            ids = t.tokenize_ids("the quick brown foxes are jumping")
+            assert ids.size > 0

@@ -1,0 +1,39 @@
+"""Top-k selection: paper's argpartition path, XLA path, two-stage merges."""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import blockwise_topk, topk_jax, topk_numpy
+
+
+def test_numpy_vs_jax_topk(rng):
+    x = rng.normal(size=(4, 1000)).astype(np.float32)
+    ni, nv = topk_numpy(x, 10)
+    ji, jv = topk_jax(jnp.asarray(x), 10)
+    np.testing.assert_allclose(nv, np.asarray(jv), atol=1e-6)
+
+
+@settings(max_examples=30, deadline=None)
+@given(seed=st.integers(0, 2 ** 31), k=st.integers(1, 64),
+       logn=st.integers(7, 12))
+def test_property_blockwise_equals_sort(seed, k, logn):
+    """Two-stage top-k is lossless for any (n, block, k)."""
+    rng = np.random.default_rng(seed)
+    n = 2 ** logn
+    block = 2 ** max(3, logn - 3)
+    k = min(k, block)
+    x = rng.normal(size=n).astype(np.float32)
+    idx, vals = blockwise_topk(jnp.asarray(x), k, block=block)
+    ref = np.sort(x)[::-1][:k]
+    np.testing.assert_allclose(np.asarray(vals), ref, atol=1e-6)
+
+
+def test_topk_numpy_sorted_descending(rng):
+    x = rng.normal(size=500).astype(np.float32)
+    idx, vals = topk_numpy(x[None], 20)
+    assert (np.diff(vals[0]) <= 1e-7).all()
+    np.testing.assert_allclose(x[idx[0]], vals[0])

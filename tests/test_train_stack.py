@@ -1,0 +1,144 @@
+"""Training stack: optimizer, schedules, microbatching, compression,
+checkpointing, fault tolerance, convergence."""
+
+import functools
+import os
+
+import numpy as np
+import pytest
+
+import jax
+import jax.numpy as jnp
+
+from repro.train import AdamW, cosine_schedule, init_train_state, \
+    make_train_step
+from repro.train.checkpoint import (latest_complete_step, load_checkpoint,
+                                    save_checkpoint)
+from repro.train.loop import LoopConfig, run_training
+
+
+def _quadratic_loss(params, batch):
+    err = params["w"] - batch["target"]
+    return jnp.sum(err * err), {}
+
+
+def test_adamw_minimizes_quadratic():
+    params = {"w": jnp.ones((8,)) * 5.0}
+    opt = AdamW(lr=0.2, weight_decay=0.0)
+    step = jax.jit(make_train_step(_quadratic_loss, opt))
+    state = init_train_state(params, opt)
+    batch = {"target": jnp.zeros((8,))}
+    for _ in range(100):
+        params, state, m = step(params, state, batch)
+    assert float(jnp.abs(params["w"]).max()) < 0.1
+
+
+def test_cosine_schedule_shape():
+    lr = cosine_schedule(peak_lr=1.0, warmup_steps=10, total_steps=100)
+    assert float(lr(jnp.asarray(0))) < 0.2
+    assert float(lr(jnp.asarray(10))) == pytest.approx(1.0, abs=0.1)
+    assert float(lr(jnp.asarray(100))) == pytest.approx(0.1, abs=0.02)
+
+
+def test_grad_clipping_bounds_update():
+    params = {"w": jnp.zeros((4,))}
+    opt = AdamW(lr=1.0, clip_norm=1e-3, weight_decay=0.0)
+    step = jax.jit(make_train_step(_quadratic_loss, opt))
+    state = init_train_state(params, opt)
+    _, _, m = step(params, state, {"target": jnp.ones((4,)) * 1e6})
+    assert float(m["grad_norm"]) > 1.0   # pre-clip norm reported
+
+
+def test_microbatch_equals_full_batch():
+    """Grad accumulation over M microbatches == one big batch (linear loss)."""
+    def loss_fn(params, batch):
+        pred = batch["x"] @ params["w"]
+        return jnp.mean((pred - batch["y"]) ** 2), {}
+
+    rng = np.random.default_rng(0)
+    params = {"w": jnp.asarray(rng.normal(size=(4,)).astype(np.float32))}
+    batch = {"x": jnp.asarray(rng.normal(size=(16, 4)).astype(np.float32)),
+             "y": jnp.asarray(rng.normal(size=(16,)).astype(np.float32))}
+    opt = AdamW(lr=0.01, weight_decay=0.0, clip_norm=None)
+    outs = {}
+    for m in (1, 4):
+        step = jax.jit(make_train_step(loss_fn, opt, n_microbatches=m))
+        state = init_train_state(params, opt)
+        p, _, _ = step(params, state, batch)
+        outs[m] = np.asarray(p["w"])
+    # microbatch mean-of-means == full mean for equal-size microbatches
+    np.testing.assert_allclose(outs[1], outs[4], rtol=1e-5, atol=1e-6)
+
+
+def test_int8_compression_tracks_fp32():
+    """Compressed training converges to the same loss region on a tiny LM."""
+    from repro.data.lm import lm_batches
+    from repro.models import transformer
+    cfg = transformer.LMConfig(name="t", n_layers=2, d_model=32, n_heads=4,
+                               n_kv_heads=2, d_ff=64, vocab_size=64,
+                               head_dim=8, seq_chunk=16, loss_chunk=16,
+                               dtype=jnp.float32)
+    params0 = transformer.init_params(jax.random.PRNGKey(0), cfg)
+    opt = AdamW(lr=1e-2)
+    gen = lm_batches(vocab_size=64, batch=8, seq_len=16, seed=0)
+    batches = [next(gen) for _ in range(25)]
+    finals = {}
+    for compress in (False, True):
+        step = jax.jit(make_train_step(
+            functools.partial(transformer.loss_fn, cfg), opt,
+            compress=compress))
+        params = jax.tree.map(jnp.copy, params0)
+        state = init_train_state(params, opt, compress=compress)
+        losses = []
+        for b in batches:
+            params, state, m = step(params, state,
+                                    jax.tree.map(jnp.asarray, b))
+            losses.append(float(m["loss"]))
+        finals[compress] = losses
+    assert finals[True][-1] < 0.8 * finals[True][0]          # it learns
+    assert abs(finals[True][-1] - finals[False][-1]) < \
+        0.15 * finals[False][-1]                             # tracks fp32
+
+
+def test_checkpoint_roundtrip_and_corruption_fallback(tmp_path):
+    state = ({"w": jnp.arange(4.0)}, {"m": jnp.ones((2, 2))})
+    d = str(tmp_path)
+    save_checkpoint(d, 10, state)
+    save_checkpoint(d, 20, state)
+    assert latest_complete_step(d) == 20
+    # corrupt newest: truncate the data file
+    f = os.path.join(d, "step_000020", "host_000.npz")
+    with open(f, "r+b") as fh:
+        fh.truncate(10)
+    assert latest_complete_step(d) == 10                     # falls back
+    restored = load_checkpoint(d, 10, state)
+    np.testing.assert_array_equal(np.asarray(restored[0]["w"]),
+                                  np.arange(4.0))
+
+
+def test_loop_auto_resume_and_fault_retry(tmp_path):
+    params = {"w": jnp.ones((4,)) * 3.0}
+    opt = AdamW(lr=0.1, weight_decay=0.0)
+    step = jax.jit(make_train_step(_quadratic_loss, opt))
+    batches = iter(lambda: {"target": jnp.zeros((4,))}, None)
+
+    faults = {"n": 0}
+
+    def fault_hook(s):
+        if s == 7 and faults["n"] < 1:       # one transient failure at step 7
+            faults["n"] += 1
+            raise RuntimeError("injected preemption")
+
+    seen = []
+    cfg = LoopConfig(total_steps=10, ckpt_every=4, ckpt_dir=str(tmp_path),
+                     metrics_cb=lambda s, m: seen.append(s),
+                     fault_hook=fault_hook, log_every=1)
+    state = init_train_state(params, opt)
+    p1, s1 = run_training(step, (params, state), batches, cfg)
+    assert faults["n"] == 1                  # fault happened and was retried
+    assert latest_complete_step(str(tmp_path)) == 10
+    # resume: raising total_steps continues from step 10, not 0
+    cfg2 = LoopConfig(total_steps=12, ckpt_every=4, ckpt_dir=str(tmp_path),
+                      metrics_cb=lambda s, m: seen.append(s), log_every=1)
+    run_training(step, (params, state), batches, cfg2)
+    assert min(s for s in seen if s > 10) == 11   # continued, didn't restart

@@ -1,0 +1,89 @@
+"""Exact reproduction of the five Kamphuis et al. (2020) BM25 variants +
+the §2.1 score-shifting identity, pinned against the brute-force oracle."""
+
+import numpy as np
+import pytest
+
+from conftest import make_corpus
+from repro.core import (BM25Params, ScipyBM25, build_index,
+                        dense_oracle_scores, get_variant)
+from repro.core.variants import VARIANTS, dense_score_matrix
+
+METHODS = ["robertson", "atire", "lucene", "bm25l", "bm25+", "tfldp"]
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_eager_index_matches_lazy_oracle(method, rng):
+    corpus = make_corpus(rng)
+    n_vocab = 50
+    p = BM25Params(method=method)
+    idx = build_index(corpus, n_vocab, params=p)
+    scorer = ScipyBM25(idx)
+    for _ in range(5):
+        q = rng.integers(0, n_vocab, size=rng.integers(1, 6)).astype(np.int32)
+        oracle = dense_oracle_scores(corpus, n_vocab, q, p)
+        np.testing.assert_allclose(scorer.score(q), oracle, atol=1e-4)
+
+
+@pytest.mark.parametrize("method", ["bm25l", "bm25+", "tfldp"])
+def test_shifted_variants_store_differential(method, rng):
+    """Shifted variants: stored matrix is SΔ = S − S⁰ (sparse), and the
+    nonoccurrence vector is nonzero (the whole point of §2.1)."""
+    corpus = make_corpus(rng)
+    p = BM25Params(method=method)
+    idx = build_index(corpus, 50, params=p)
+    assert idx.is_shifted
+    assert (idx.nonoccurrence != 0).any()
+
+
+@pytest.mark.parametrize("method", ["robertson", "atire", "lucene"])
+def test_sparse_variants_have_zero_shift(method, rng):
+    corpus = make_corpus(rng)
+    idx = build_index(corpus, 50, params=BM25Params(method=method))
+    assert not idx.is_shifted
+    np.testing.assert_array_equal(idx.nonoccurrence, 0.0)
+
+
+@pytest.mark.parametrize("method", METHODS)
+def test_score_shift_identity_vs_dense_matrix(method, rng):
+    """S(t,D) == SΔ(t,D) + S⁰(t) for every (t, D), via the dense oracle."""
+    corpus = make_corpus(rng, n_docs=25, n_vocab=30, max_len=15)
+    n_vocab = 30
+    p = BM25Params(method=method)
+    variant = get_variant(method)
+    tf = np.zeros((n_vocab, len(corpus)))
+    for d, toks in enumerate(corpus):
+        np.add.at(tf[:, d], toks, 1)
+    dl = np.array([t.size for t in corpus], dtype=np.float64)
+    dense = dense_score_matrix(tf, len(corpus), dl, variant, p)
+
+    idx = build_index(corpus, n_vocab, params=p)
+    recon = np.zeros_like(dense)
+    df = np.diff(idx.indptr)
+    tok_of = np.repeat(np.arange(n_vocab), df)
+    recon[tok_of, idx.doc_ids] = idx.scores            # SΔ
+    recon += np.where(df[:, None] > 0, idx.nonoccurrence[:, None], 0.0)
+    np.testing.assert_allclose(recon, dense, atol=1e-4)
+
+
+def test_atire_bm25plus_equal_ranks(rng):
+    """Table 3: ATIRE and BM25+ produce near-identical rankings at k1=1.2."""
+    corpus = make_corpus(rng, n_docs=100)
+    q = rng.integers(0, 50, size=5).astype(np.int32)
+    outs = {}
+    for m in ("atire", "bm25+"):
+        p = BM25Params(method=m, k1=1.2, b=0.75, delta=1.0)
+        outs[m] = dense_oracle_scores(corpus, 50, q, p)
+    ra = np.argsort(-outs["atire"], kind="stable")[:10]
+    rb = np.argsort(-outs["bm25+"], kind="stable")[:10]
+    assert len(set(ra[:5]) & set(rb[:5])) >= 4
+
+
+def test_unknown_variant_raises():
+    with pytest.raises(ValueError):
+        get_variant("bm42")
+
+
+def test_all_variants_registered():
+    assert {"robertson", "atire", "lucene", "bm25l", "bm25+",
+            "tfldp"} <= set(VARIANTS)
