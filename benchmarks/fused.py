@@ -1,0 +1,164 @@
+"""BENCH_1 — the fused score→top-k pipeline and the vectorized index build.
+
+Three sections, written to ``BENCH_1.json`` by ``benchmarks/run.py``:
+
+* ``indexing``  — documents/second through ``build_index`` with the
+  vectorized single-pass ``_corpus_coo`` vs the seed's per-document
+  ``np.unique`` loop (re-implemented here as the baseline), on a ≥50k-doc
+  Zipf corpus. The acceptance bar is ≥5x.
+* ``retrieval`` — per-batch latency of the fused blocked pipeline
+  (``bm25_retrieve_blocked``: per-block top-k out of the accumulator, tiny
+  merge) vs the unfused two-pass path (dense ``bm25_score_blocked`` +
+  global top-k) and the paper's host/scipy + device/gather paths. CPU
+  numbers (kernels run in interpret mode) — relative, not TPU-projected.
+* ``intermediate_bytes`` — peak HBM bytes of the score intermediate:
+  dense ``[nb, block_size, B]·4`` vs fused ``[nb, k, B]·8`` (ids+values),
+  the bandwidth argument for the fusion.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import BM25Params, build_index
+from repro.core.index import CorpusStats
+from repro.data.corpus import zipf_corpus, zipf_queries
+from repro.core import pad_queries
+from repro.sparse.block_csr import (block_postings_from_index,
+                                    pack_query_batch,
+                                    query_nonoccurrence_shift)
+
+
+# -- seed baseline: the per-document loop the vectorized path replaced ------
+
+def _corpus_coo_loop(doc_tokens):
+    tok_c, doc_c, tf_c = [], [], []
+    doc_lens = np.zeros(len(doc_tokens), dtype=np.int32)
+    for d, toks in enumerate(doc_tokens):
+        doc_lens[d] = toks.size
+        if toks.size == 0:
+            continue
+        uniq, counts = np.unique(toks, return_counts=True)
+        tok_c.append(uniq.astype(np.int64))
+        doc_c.append(np.full(uniq.size, d, dtype=np.int64))
+        tf_c.append(counts.astype(np.float64))
+    return (np.concatenate(tok_c), np.concatenate(doc_c),
+            np.concatenate(tf_c), doc_lens)
+
+
+def _stats_loop(doc_tokens, n_vocab):
+    df = np.zeros(n_vocab, dtype=np.int64)
+    total = 0
+    for toks in doc_tokens:
+        total += int(toks.size)
+        if toks.size:
+            df[np.unique(toks)] += 1
+    return df, total / max(len(doc_tokens), 1)
+
+
+def bench_indexing(n_docs: int = 50_000, n_vocab: int = 30_000,
+                   avg_len: int = 60) -> dict:
+    from repro.core.index import _corpus_coo
+    corpus = zipf_corpus(n_docs, n_vocab, avg_len=avg_len)
+
+    # seed pipeline: a df/length loop (CorpusStats) + a per-doc COO loop
+    t0 = time.perf_counter()
+    _stats_loop(corpus, n_vocab)
+    _corpus_coo_loop(corpus)
+    t_loop = time.perf_counter() - t0
+
+    # vectorized pipeline: ONE flattened np.unique pass feeds both
+    t0 = time.perf_counter()
+    tok, _doc, _tf, doc_lens = _corpus_coo(corpus, n_vocab)
+    CorpusStats.from_coo(tok, doc_lens, n_docs, n_vocab)
+    t_vec = time.perf_counter() - t0
+
+    # and the full eager build end-to-end (vectorized path only)
+    t0 = time.perf_counter()
+    build_index(corpus, n_vocab, params=BM25Params())
+    t_build = time.perf_counter() - t0
+
+    return {
+        "n_docs": n_docs, "n_vocab": n_vocab, "avg_len": avg_len,
+        "coo_loop_s": round(t_loop, 4),
+        "coo_vectorized_s": round(t_vec, 4),
+        "coo_speedup": round(t_loop / t_vec, 2),
+        "docs_per_s_loop": round(n_docs / t_loop, 1),
+        "docs_per_s_vectorized": round(n_docs / t_vec, 1),
+        "full_build_s": round(t_build, 4),
+        "full_build_docs_per_s": round(n_docs / t_build, 1),
+    }
+
+
+def bench_retrieval(n_docs: int = 2048, n_vocab: int = 2000,
+                    batch: int = 8, k: int = 10, block_size: int = 256,
+                    repeats: int = 3) -> dict:
+    import jax.numpy as jnp
+
+    from repro.core import (DeviceIndex, ScipyBM25, score_batch,
+                            suggest_p_max, topk_jax)
+    from repro.kernels import ops
+
+    corpus = zipf_corpus(n_docs, n_vocab, avg_len=60)
+    idx = build_index(corpus, n_vocab, params=BM25Params())
+    bp = block_postings_from_index(idx, block_size=block_size,
+                                   tile=block_size)
+    queries = zipf_queries(batch, n_vocab, q_len=5)
+    toks, wts = pad_queries(queries, 8)
+    uniq, weights = pack_query_batch(toks, wts, u_max=256)
+    shift = query_nonoccurrence_shift(idx.nonoccurrence, toks, wts)
+    args = (jnp.asarray(bp.token_ids), jnp.asarray(bp.local_doc),
+            jnp.asarray(bp.scores), jnp.asarray(uniq),
+            jnp.asarray(weights), jnp.asarray(shift))
+    kw = dict(block_size=bp.block_size, n_docs=n_docs,
+              tile_p=min(block_size, bp.nnz_pad))
+
+    def timed(fn):
+        fn()                                     # compile/warmup
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            fn()
+        return (time.perf_counter() - t0) / repeats
+
+    t_fused = timed(lambda: ops.bm25_retrieve_blocked(*args, k=k, **kw)[
+        0].block_until_ready())
+    t_unfused = timed(lambda: ops.topk(
+        ops.bm25_score_blocked(*args, **kw), k)[0].block_until_ready())
+
+    di = DeviceIndex.from_host(idx)
+    jt, jw = jnp.asarray(toks), jnp.asarray(wts)
+    p_max = suggest_p_max(idx, 8)
+    t_gather = timed(lambda: topk_jax(
+        score_batch(di, jt, jw, p_max=p_max), k)[0].block_until_ready())
+
+    sc = ScipyBM25(idx)
+    t_scipy = timed(lambda: [sc.retrieve(q, k) for q in queries])
+
+    nb = bp.n_blocks
+    dense_bytes = nb * bp.block_size * batch * 4
+    fused_bytes = nb * k * batch * (4 + 4)
+    return {
+        "n_docs": n_docs, "n_vocab": n_vocab, "batch": batch, "k": k,
+        "block_size": bp.block_size, "n_blocks": nb,
+        "fused_batch_s": round(t_fused, 4),
+        "unfused_dense_batch_s": round(t_unfused, 4),
+        "gather_segment_sum_batch_s": round(t_gather, 4),
+        "scipy_batch_s": round(t_scipy, 4),
+        "dense_intermediate_bytes": dense_bytes,
+        "fused_intermediate_bytes": fused_bytes,
+        "intermediate_bytes_ratio": round(dense_bytes / fused_bytes, 1),
+        "note": "CPU wall times; Pallas kernels run in interpret mode — "
+                "compare paths relatively, bytes are the TPU argument",
+    }
+
+
+def run(*, fast: bool = False) -> dict:
+    return {
+        # the acceptance corpus stays >= 50k docs even in --fast
+        "indexing": bench_indexing(n_docs=50_000,
+                                   n_vocab=10_000 if fast else 30_000),
+        "retrieval": bench_retrieval(n_docs=1024 if fast else 2048,
+                                     n_vocab=1000 if fast else 2000),
+    }

@@ -3,7 +3,8 @@
     PYTHONPATH=src python -m benchmarks.run [--fast]
 
 Emits CSV-ish lines ``table,key=value,...`` and writes
-benchmarks/out/results.json.
+benchmarks/out/results.json plus BENCH_1.json (fused pipeline + vectorized
+indexing — the PR-1 perf trajectory numbers) at the repo root.
 """
 
 from __future__ import annotations
@@ -20,10 +21,17 @@ def main() -> None:
                     help="smaller corpora (CI-sized)")
     args = ap.parse_args()
 
-    from . import kernels_bench, throughput, tokenization, variants
+    from . import fused, kernels_bench, throughput, tokenization, variants
 
     results = {}
     t0 = time.time()
+
+    results["bench1_fused"] = fused.run(fast=args.fast)
+    for section, r in results["bench1_fused"].items():
+        print(f"bench1_{section}," + ",".join(
+            f"{k}={v}" for k, v in r.items()), flush=True)
+    with open("BENCH_1.json", "w") as f:
+        json.dump(results["bench1_fused"], f, indent=1)
 
     sizes = ((1000, 3000), (5000, 10000)) if args.fast else \
         ((2000, 5000), (10000, 20000), (50000, 50000))

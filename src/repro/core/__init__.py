@@ -2,7 +2,7 @@
 
 from .index import BM25Index, CorpusStats, build_index, build_sharded_indexes, reshard_index
 from .reference import RankBM25Baseline, ScipyBM25, dense_oracle_scores
-from .retrieval import blockwise_topk, topk_jax, topk_numpy
+from .retrieval import blockwise_topk, merge_topk, topk_jax, topk_numpy
 from .scoring import DeviceIndex, pad_queries, score_batch, suggest_p_max
 from .tokenizer import Tokenizer, Vocabulary
 from .variants import BM25Params, VARIANTS, get_variant
@@ -11,8 +11,9 @@ __all__ = [
     "BM25Index", "BM25Params", "BM25Retriever", "CorpusStats", "DeviceIndex",
     "RankBM25Baseline", "ScipyBM25", "Tokenizer", "VARIANTS", "Vocabulary",
     "blockwise_topk", "build_index", "build_sharded_indexes",
-    "dense_oracle_scores", "get_variant", "pad_queries", "reshard_index",
-    "score_batch", "suggest_p_max", "topk_jax", "topk_numpy",
+    "dense_oracle_scores", "get_variant", "merge_topk", "pad_queries",
+    "reshard_index", "score_batch", "suggest_p_max", "topk_jax",
+    "topk_numpy",
 ]
 
 
@@ -46,6 +47,15 @@ class BM25Retriever:
         toks, wts = pad_queries(q_tokens, q_max)
         if p_max is None:
             p_max = suggest_p_max(self.bm25_index, q_max)
-        scores = score_batch(self._device_index, toks, wts, p_max=p_max)
+        scores, overflow = score_batch(self._device_index, toks, wts,
+                                       p_max=p_max, return_overflow=True)
+        import numpy as _np
+        n_over = int(_np.asarray(overflow).sum())
+        if n_over:
+            import warnings
+            warnings.warn(
+                f"{n_over}/{len(queries)} queries overflowed the posting "
+                f"budget p_max={p_max}; their scores miss postings — "
+                f"retry with a larger p_max", RuntimeWarning, stacklevel=2)
         idx, vals = topk_jax(scores, min(k, self.bm25_index.doc_lens.size))
         return idx, vals

@@ -18,6 +18,7 @@ over document shards (each shard indexes its own documents given global
 
 from __future__ import annotations
 
+import functools
 import json
 import os
 from dataclasses import dataclass, replace
@@ -39,15 +40,20 @@ class CorpusStats:
 
     @staticmethod
     def from_corpus(doc_tokens: Sequence[np.ndarray], n_vocab: int) -> "CorpusStats":
-        df = np.zeros(n_vocab, dtype=np.int64)
-        total_len = 0
-        for toks in doc_tokens:
-            total_len += int(toks.size)
-            if toks.size:
-                df[np.unique(toks)] += 1
-        n_docs = len(doc_tokens)
-        l_avg = total_len / max(n_docs, 1)
-        return CorpusStats(n_docs=n_docs, n_vocab=n_vocab, df=df, l_avg=l_avg)
+        tok, _doc, _tf, doc_lens = _corpus_coo(doc_tokens, n_vocab)
+        return CorpusStats.from_coo(tok, doc_lens, len(doc_tokens), n_vocab)
+
+    @staticmethod
+    def from_coo(tok: np.ndarray, doc_lens: np.ndarray, n_docs: int,
+                 n_vocab: int) -> "CorpusStats":
+        """Stats straight from a ``_corpus_coo`` result — each (doc, token)
+        pair appears once there, so ``df`` is a bincount of the token
+        column. Lets ``build_index`` share one COO pass for stats + scores.
+        """
+        df = np.bincount(tok, minlength=n_vocab).astype(np.int64)
+        l_avg = float(doc_lens.sum()) / max(n_docs, 1)
+        return CorpusStats(n_docs=n_docs, n_vocab=n_vocab, df=df,
+                           l_avg=l_avg)
 
 
 @dataclass
@@ -75,8 +81,11 @@ class BM25Index:
     def nnz(self) -> int:
         return int(self.doc_ids.size)
 
-    @property
+    @functools.cached_property
     def is_shifted(self) -> bool:
+        # cached: the O(V) scan runs once per index, not per property access
+        # (dataclasses.replace builds a fresh instance, so shard/reshard
+        # copies re-derive it from their own nonoccurrence array).
         return bool(np.any(self.nonoccurrence != 0.0))
 
     def token_df(self) -> np.ndarray:
@@ -117,23 +126,45 @@ class BM25Index:
         )
 
 
-def _corpus_coo(doc_tokens: Sequence[np.ndarray]) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
-    """(token_ids, doc_ids, tf) postings + doc lengths for a corpus shard."""
-    tok_chunks, doc_chunks, tf_chunks = [], [], []
-    doc_lens = np.zeros(len(doc_tokens), dtype=np.int32)
-    for d, toks in enumerate(doc_tokens):
-        doc_lens[d] = toks.size
-        if toks.size == 0:
-            continue
-        uniq, counts = np.unique(toks, return_counts=True)
-        tok_chunks.append(uniq.astype(np.int64))
-        doc_chunks.append(np.full(uniq.size, d, dtype=np.int64))
-        tf_chunks.append(counts.astype(np.float64))
-    if not tok_chunks:
+def _corpus_coo(doc_tokens: Sequence[np.ndarray], n_vocab: int
+                ) -> tuple[np.ndarray, np.ndarray, np.ndarray, np.ndarray]:
+    """(token_ids, doc_ids, tf) postings + doc lengths for a corpus shard.
+
+    One flattened pass: concatenate all documents, encode each occurrence as
+    the scalar key ``doc·V + token``, and let a single ``np.unique`` produce
+    the distinct (doc, token) pairs with their term frequencies — no
+    per-document Python loop, no per-document ``np.unique`` call overhead.
+    Keys stay int32 when ``n_docs·V`` fits (the sort is ~2x faster there).
+    Output is sorted by (doc, token); ``build_index`` re-sorts CSC-by-token.
+    """
+    n = len(doc_tokens)
+    doc_lens = np.fromiter((t.size for t in doc_tokens), dtype=np.int64,
+                           count=n).astype(np.int32)
+    nnz_total = int(doc_lens.sum())
+    if n == 0 or nnz_total == 0:
         z64, zf = np.zeros(0, np.int64), np.zeros(0, np.float64)
         return z64, z64.copy(), zf, doc_lens
-    return (np.concatenate(tok_chunks), np.concatenate(doc_chunks),
-            np.concatenate(tf_chunks), doc_lens)
+    flat = np.concatenate(doc_tokens)
+    lo, hi = int(flat.min()), int(flat.max())
+    if lo < 0 or hi >= n_vocab:
+        # the key encoding would silently wrap an out-of-range token into a
+        # neighboring document's postings — fail loudly instead (the seed's
+        # per-doc path raised IndexError here).
+        raise ValueError(
+            f"token ids must be in [0, {n_vocab}); corpus has [{lo}, {hi}]")
+    if n * n_vocab < 2 ** 31:
+        flat_tok = flat.astype(np.int32, copy=False)
+        flat_doc = np.repeat(np.arange(n, dtype=np.int32), doc_lens)
+        key = flat_doc * np.int32(n_vocab) + flat_tok
+    else:
+        flat_tok = flat.astype(np.int64, copy=False)
+        flat_doc = np.repeat(np.arange(n, dtype=np.int64),
+                             doc_lens.astype(np.int64))
+        key = flat_doc * n_vocab + flat_tok
+    uniq_key, tf = np.unique(key, return_counts=True)
+    tok = (uniq_key % n_vocab).astype(np.int64)
+    doc = (uniq_key // n_vocab).astype(np.int64)
+    return tok, doc, tf.astype(np.float64), doc_lens
 
 
 def build_index(
@@ -154,10 +185,11 @@ def build_index(
     """
     params = params or BM25Params()
     variant: BM25Variant = get_variant(params.method)
+    tok, doc, tf, doc_lens = _corpus_coo(doc_tokens, n_vocab)
     if stats is None:
-        stats = CorpusStats.from_corpus(doc_tokens, n_vocab)
-
-    tok, doc, tf, doc_lens = _corpus_coo(doc_tokens)
+        # single-shard build: stats come from the same COO pass (the seed
+        # walked the corpus twice — once for df, once for postings)
+        stats = CorpusStats.from_coo(tok, doc_lens, len(doc_tokens), n_vocab)
 
     df_per_posting = stats.df[tok].astype(np.float64)
     dl_per_posting = doc_lens[doc].astype(np.float64)
@@ -226,40 +258,44 @@ def build_sharded_indexes(
 def reshard_index(shards: list[BM25Index], n_new: int) -> list[BM25Index]:
     """Elastically re-balance shards to a new shard count.
 
-    Pure host-side re-slicing: postings are re-bucketed by global doc id.
-    Used when the device pool shrinks/grows (see serve/engine.py).
+    Pure host-side re-slicing: postings are re-bucketed by global doc id
+    with ONE global sort. Each posting's destination shard comes from a
+    ``searchsorted`` against the new shard bounds; a single
+    ``lexsort((doc, token, shard))`` then makes every new shard a contiguous
+    slice already in CSC (token-major) order — no per-shard boolean masks
+    over the full posting set, no per-shard re-sorts. Used when the device
+    pool shrinks/grows (see serve/engine.py).
     """
     if not shards:
         raise ValueError("no shards to reshard")
     # reconstruct global COO
-    toks, docs, scs, lens_parts = [], [], [], []
     v = shards[0].n_vocab
-    for sh in shards:
-        tok = np.repeat(np.arange(v, dtype=np.int64), np.diff(sh.indptr))
-        toks.append(tok)
-        docs.append(sh.doc_ids.astype(np.int64) + sh.doc_offset)
-        scs.append(sh.scores)
-        lens_parts.append((sh.doc_offset, sh.doc_lens))
-    tok = np.concatenate(toks)
-    doc = np.concatenate(docs)
-    sc = np.concatenate(scs)
-    n_docs_total = max(off + dl.size for off, dl in lens_parts)
+    tok = np.concatenate([
+        np.repeat(np.arange(v, dtype=np.int64), np.diff(sh.indptr))
+        for sh in shards])
+    doc = np.concatenate([sh.doc_ids.astype(np.int64) + sh.doc_offset
+                          for sh in shards])
+    sc = np.concatenate([sh.scores for sh in shards])
+    n_docs_total = max(sh.doc_offset + sh.doc_lens.size for sh in shards)
     doc_lens = np.zeros(n_docs_total, dtype=np.int32)
-    for off, dl in lens_parts:
-        doc_lens[off:off + dl.size] = dl
+    for sh in shards:
+        doc_lens[sh.doc_offset: sh.doc_offset + sh.doc_lens.size] = sh.doc_lens
+
+    bounds = np.linspace(0, n_docs_total, n_new + 1).astype(np.int64)
+    shard_of = np.searchsorted(bounds, doc, side="right") - 1
+    order = np.lexsort((doc, tok, shard_of))
+    tok, doc, sc, shard_of = (tok[order], doc[order], sc[order],
+                              shard_of[order])
+    starts = np.searchsorted(shard_of, np.arange(n_new + 1, dtype=np.int64))
 
     proto = shards[0]
-    bounds = np.linspace(0, n_docs_total, n_new + 1).astype(int)
     out = []
     for s in range(n_new):
         lo, hi = int(bounds[s]), int(bounds[s + 1])
-        sel = (doc >= lo) & (doc < hi)
-        t_s, d_s, s_s = tok[sel], doc[sel] - lo, sc[sel]
-        order = np.lexsort((d_s, t_s))
-        t_s, d_s, s_s = t_s[order], d_s[order], s_s[order]
+        p0, p1 = int(starts[s]), int(starts[s + 1])
+        t_s, d_s, s_s = tok[p0:p1], doc[p0:p1] - lo, sc[p0:p1]
         indptr = np.zeros(v + 1, dtype=np.int64)
-        np.add.at(indptr, t_s + 1, 1)
-        np.cumsum(indptr, out=indptr)
+        np.cumsum(np.bincount(t_s, minlength=v), out=indptr[1:])
         out.append(replace(
             proto,
             indptr=indptr, doc_ids=d_s.astype(np.int32),

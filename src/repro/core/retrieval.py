@@ -35,6 +35,29 @@ def topk_numpy(scores: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
     return idx, np.take_along_axis(scores, idx, axis=-1)
 
 
+def merge_topk(parts, k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Host-side global merge of per-shard candidate lists (the paper's
+    two-stage top-k, stage 2).
+
+    ``parts`` is an iterable of ``(ids, scores)`` arrays — each a shard's
+    local top-k. One concatenate + ``argpartition`` (average-O(n) selection)
+    replaces the per-candidate Python heap: the candidate count is
+    ``shards × k``, tiny, but the vectorized path keeps the serving engine's
+    merge off the interpreter even at large fan-in.
+    """
+    pairs = [(np.asarray(i), np.asarray(s)) for i, s in parts]
+    if k <= 0 or not pairs or sum(i.size for i, _ in pairs) == 0:
+        return (np.zeros(0, dtype=np.int64), np.zeros(0, dtype=np.float32))
+    ids = np.concatenate([i.astype(np.int64, copy=False) for i, _ in pairs])
+    scores = np.concatenate([s for _, s in pairs]).astype(np.float64,
+                                                          copy=False)
+    k = min(k, ids.size)
+    part = np.argpartition(scores, -k)[-k:]
+    order = np.argsort(-scores[part], kind="stable")
+    sel = part[order]
+    return ids[sel], scores[sel].astype(np.float32)
+
+
 @partial(jax.jit, static_argnames=("k",))
 def topk_jax(scores: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
     """XLA top_k (the paper's preferred backend). Returns (indices, values)."""
@@ -64,13 +87,17 @@ def blockwise_topk(scores: jax.Array, k: int, block: int
 
 
 def make_sharded_retrieve(mesh: Mesh, shard_axes: tuple[str, ...], *,
-                          p_max: int, k: int, n_docs_per_shard: int):
+                          p_max: int, k: int, n_docs_per_shard: int,
+                          return_overflow: bool = False):
     """Build the pod-scale retrieval step: shard-local score+topk, global merge.
 
     The device index arrays are sharded over ``shard_axes`` (leading dim =
     shard id); queries are replicated. Returns a jit-able
     ``retrieve(stacked_index, q_tokens[B,Q], q_weights[B,Q])``
-    -> (global doc ids [B,k], scores [B,k]).
+    -> (global doc ids [B,k], scores [B,k]). With ``return_overflow=True``
+    a third ``[B]`` bool output marks queries whose posting demand exceeded
+    ``p_max`` on ANY shard (their scores are lower bounds — mirror of
+    ``score_batch(..., return_overflow=True)``).
     """
     n_shards = int(np.prod([mesh.shape[a] for a in shard_axes]))
 
@@ -79,27 +106,31 @@ def make_sharded_retrieve(mesh: Mesh, shard_axes: tuple[str, ...], *,
         indptr, doc_ids, scores, nonocc, offsets = (x[0] for x in idx_arrays)
         dindex = DeviceIndex(indptr, doc_ids, scores, nonocc,
                              n_docs=n_docs_per_shard, doc_offset=0)
-        s = jax.vmap(lambda t, w: score_query(dindex, t, w, p_max=p_max))(
-            q_tokens, q_weights)                        # [B, n_local]
+        s, over = jax.vmap(
+            lambda t, w: score_query(dindex, t, w, p_max=p_max))(
+            q_tokens, q_weights)                        # [B, n_local], [B]
         vals, local_idx = jax.lax.top_k(s, min(k, n_docs_per_shard))
         gidx = local_idx + offsets.astype(jnp.int32)
-        return gidx[None], vals[None]                   # keep shard dim
+        return gidx[None], vals[None], over[None]       # keep shard dim
 
     spec_idx = tuple(P(shard_axes) for _ in range(5))
 
     @jax.jit
     def retrieve(idx_arrays, q_tokens, q_weights):
-        gidx, gvals = shard_map(
+        gidx, gvals, gover = shard_map(
             local_score_topk, mesh=mesh,
             in_specs=(spec_idx, P(), P()),
-            out_specs=(P(shard_axes), P(shard_axes)),
+            out_specs=(P(shard_axes), P(shard_axes), P(shard_axes)),
         )(idx_arrays, q_tokens, q_weights)
         # [n_shards, B, k] -> [B, n_shards*k] -> global top-k (the merge)
         b = q_tokens.shape[0]
         allv = jnp.swapaxes(gvals, 0, 1).reshape(b, -1)
         alli = jnp.swapaxes(gidx, 0, 1).reshape(b, -1)
         mvals, midx = jax.lax.top_k(allv, k)
-        return jnp.take_along_axis(alli, midx, axis=-1), mvals
+        ids = jnp.take_along_axis(alli, midx, axis=-1)
+        if return_overflow:
+            return ids, mvals, jnp.any(gover, axis=0)
+        return ids, mvals
 
     return retrieve
 

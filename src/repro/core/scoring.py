@@ -92,7 +92,12 @@ def _flatten_postings(indptr: jax.Array, q_tokens: jax.Array,
                       q_weights: jax.Array, p_max: int):
     """Ragged-gather bookkeeping: map flat slot j -> (query token i, posting).
 
-    Returns (positions [p_max], weight-per-slot [p_max], valid mask [p_max]).
+    Returns (positions [p_max], weight-per-slot [p_max], valid mask [p_max],
+    total postings requested). When ``total > p_max`` the trailing
+    ``total - p_max`` postings DO NOT FIT and are silently dropped by the
+    static budget — callers must surface ``total > p_max`` as an overflow
+    flag (see :func:`score_query` / :func:`score_batch`), otherwise the
+    truncation is undetectable score corruption.
     """
     valid_q = q_tokens >= 0
     safe_q = jnp.where(valid_q, q_tokens, 0)
@@ -107,17 +112,20 @@ def _flatten_postings(indptr: jax.Array, q_tokens: jax.Array,
     offset_excl = cum[i] - lens[i]
     pos = starts[i] + (j - offset_excl)
     ok = j < total
-    return jnp.where(ok, pos, 0), jnp.where(ok, q_weights[i], 0.0), ok
+    return jnp.where(ok, pos, 0), jnp.where(ok, q_weights[i], 0.0), ok, total
 
 
 def score_query(index: DeviceIndex, q_tokens: jax.Array, q_weights: jax.Array,
-                *, p_max: int) -> jax.Array:
+                *, p_max: int) -> tuple[jax.Array, jax.Array]:
     """Exact BM25 scores of one query against this shard's documents.
 
     The eager path: gather the precomputed postings scores, segment-sum per
-    document, add the §2.1 nonoccurrence shift.
+    document, add the §2.1 nonoccurrence shift. Returns ``(scores [n_docs],
+    overflow [] bool)`` — overflow is True iff ``Σᵢ df(qᵢ) > p_max``, i.e.
+    the static budget truncated postings and the scores are lower bounds.
     """
-    pos, w, ok = _flatten_postings(index.indptr, q_tokens, q_weights, p_max)
+    pos, w, ok, total = _flatten_postings(index.indptr, q_tokens, q_weights,
+                                          p_max)
     g_scores = index.scores[pos] * w
     g_docs = jnp.where(ok, index.doc_ids[pos], index.n_docs)
     dense = jax.ops.segment_sum(
@@ -128,16 +136,26 @@ def score_query(index: DeviceIndex, q_tokens: jax.Array, q_weights: jax.Array,
         jnp.where(valid_q, index.nonoccurrence[jnp.where(valid_q, q_tokens, 0)], 0.0)
         * q_weights
     )
-    return dense + shift
+    return dense + shift, total > p_max
 
 
-@partial(jax.jit, static_argnames=("p_max",))
+@partial(jax.jit, static_argnames=("p_max", "return_overflow"))
 def score_batch(index: DeviceIndex, q_tokens: jax.Array, q_weights: jax.Array,
-                *, p_max: int) -> jax.Array:
-    """Batched exact scoring: ``[B, Q_max] -> [B, n_docs]``."""
-    return jax.vmap(lambda t, w: score_query(index, t, w, p_max=p_max))(
+                *, p_max: int, return_overflow: bool = False):
+    """Batched exact scoring: ``[B, Q_max] -> [B, n_docs]``.
+
+    With ``return_overflow=True`` also returns a ``[B]`` bool flag marking
+    queries whose posting demand exceeded the static ``p_max`` budget (their
+    scores silently miss the dropped postings — re-run with a larger budget
+    or log the degradation; see ``BM25Retriever.retrieve``).
+    """
+    scores, overflow = jax.vmap(
+        lambda t, w: score_query(index, t, w, p_max=p_max))(
         q_tokens, q_weights
     )
+    if return_overflow:
+        return scores, overflow
+    return scores
 
 
 def query_posting_budget(index: BM25Index, q_tokens: np.ndarray) -> int:

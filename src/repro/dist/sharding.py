@@ -1,0 +1,139 @@
+"""Logical-axis sharding: models annotate, meshes decide.
+
+Model code names *logical* axes — ``"dp"`` (all data-parallel mesh axes:
+``"pod"`` and/or ``"data"``) and ``"model"`` (tensor parallelism) — and this
+module resolves them against whatever physical mesh is active:
+
+* :func:`activation_sharding` pushes a mesh onto a stack for the duration of
+  a ``with`` block; :func:`constrain` is a NO-OP outside any such block, so
+  the exact same model code traces on a laptop CPU and on a 512-chip pod.
+* Resolution is divisibility-checked per dimension: an axis whose size does
+  not divide the dimension is silently dropped (replicated) instead of
+  failing, which is what makes elastic meshes (6 devices, 4 heads on an
+  8-way model axis, ...) Just Work.
+
+``batch_pspec`` / ``param_pspecs`` are the generic placement rules used by
+cells that have no architecture-specific sharding (the LM family overrides
+them with ``configs.common.lm_param_pspecs``).
+"""
+
+from __future__ import annotations
+
+import contextlib
+import math
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# Data-parallel logical axis -> these physical axes (in mesh-major order).
+_DP_AXES = ("pod", "data")
+
+_MESH_STACK: list[Mesh] = []
+
+
+@contextlib.contextmanager
+def activation_sharding(mesh: Mesh):
+    """Activate ``mesh`` for :func:`constrain` / :func:`dp_spmd_axes`."""
+    _MESH_STACK.append(mesh)
+    try:
+        yield mesh
+    finally:
+        _MESH_STACK.pop()
+
+
+def _active_mesh() -> Mesh | None:
+    return _MESH_STACK[-1] if _MESH_STACK else None
+
+
+def data_axes(mesh: Mesh) -> tuple[str, ...]:
+    """The mesh's non-trivial data-parallel axes (subset of pod/data)."""
+    return tuple(a for a in _DP_AXES if mesh.shape.get(a, 1) > 1)
+
+
+def _axes_size(mesh: Mesh, axes: tuple[str, ...]) -> int:
+    return int(math.prod(mesh.shape[a] for a in axes)) if axes else 1
+
+
+def _dp_entry(mesh: Mesh) -> str | tuple[str, ...] | None:
+    axes = data_axes(mesh)
+    if not axes:
+        return None
+    return axes[0] if len(axes) == 1 else axes
+
+
+def dp_spmd_axes() -> str | tuple[str, ...] | None:
+    """``spmd_axis_name`` for ``jax.vmap`` over the data-parallel axes.
+
+    ``None`` when no mesh is active or the active mesh has no data axes —
+    ``vmap(spmd_axis_name=None)`` is the ordinary unsharded vmap.
+    """
+    mesh = _active_mesh()
+    if mesh is None:
+        return None
+    return _dp_entry(mesh)
+
+
+def _resolve(mesh: Mesh, dim: int, name: str | None):
+    """Logical axis name -> physical spec entry, divisibility-checked."""
+    if name is None:
+        return None
+    if name == "dp":
+        axes = data_axes(mesh)
+        if not axes or dim % _axes_size(mesh, axes) != 0:
+            return None
+        return axes[0] if len(axes) == 1 else axes
+    size = mesh.shape.get(name, 1)
+    return name if size > 1 and dim % size == 0 else None
+
+
+def constrain(x: jax.Array, *axes: str | None) -> jax.Array:
+    """``with_sharding_constraint`` by logical axis names, one per dim.
+
+    No-op outside an :func:`activation_sharding` block. Unresolvable axes
+    (absent from the mesh, size 1, or not dividing the dimension) become
+    ``None`` (replicated) rather than errors.
+    """
+    mesh = _active_mesh()
+    if mesh is None:
+        return x
+    if len(axes) != x.ndim:
+        raise ValueError(
+            f"constrain got {len(axes)} axis names for rank-{x.ndim} array")
+    spec = P(*(_resolve(mesh, d, a) for d, a in zip(x.shape, axes)))
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def batch_pspec(shape, mesh: Mesh) -> P:
+    """Batch placement: leading dim over the data axes when divisible."""
+    shape = tuple(shape)
+    axes = data_axes(mesh)
+    if not shape or not axes:
+        return P()
+    n = _axes_size(mesh, axes)
+    if shape[0] > 0 and shape[0] % n == 0:
+        return P(_dp_entry(mesh), *([None] * (len(shape) - 1)))
+    return P()
+
+
+def param_pspecs(params_shapes, mesh: Mesh):
+    """Generic ZeRO-ish parameter placement for architecture-less cells.
+
+    Shards the first dimension divisible by the data-axes size; everything
+    else replicates. Any placement is numerically correct — this one just
+    bounds per-device parameter memory for the non-LM cells.
+    """
+    axes = data_axes(mesh)
+    n = _axes_size(mesh, axes)
+    entry = _dp_entry(mesh)
+
+    def one(leaf) -> P:
+        shape = tuple(getattr(leaf, "shape", ()))
+        spec: list = [None] * len(shape)
+        if entry is not None:
+            for i, d in enumerate(shape):
+                if d >= n and d % n == 0:
+                    spec[i] = entry
+                    break
+        return P(*spec)
+
+    return jax.tree.map(one, params_shapes)

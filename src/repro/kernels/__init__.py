@@ -11,8 +11,9 @@ Kernels:
   blockwise_topk    — per-block iterative-max selection (2-stage top-k)
 """
 
-from .ops import bm25_score_blocked, embedding_bag, segment_sum_blocked, topk
+from .ops import (bm25_retrieve_blocked, bm25_score_blocked, embedding_bag,
+                  segment_sum_blocked, topk)
 from . import ref
 
-__all__ = ["bm25_score_blocked", "embedding_bag", "segment_sum_blocked",
-           "topk", "ref"]
+__all__ = ["bm25_retrieve_blocked", "bm25_score_blocked", "embedding_bag",
+           "segment_sum_blocked", "topk", "ref"]

@@ -9,11 +9,17 @@ merge is ~``nb·k`` elements and runs as a plain ``lax.top_k`` (ops.py).
 Each grid step owns one block and performs k rounds of
 (max, argmax, mask-out) — k·O(block) work, all VPU-friendly 2D reductions.
 For the k ≪ block regime this matches the paper's O(n) average contract.
+
+``select_topk`` is the reusable reduction core: the fused score→top-k
+kernel (``bm25_block_score.bm25_block_score_topk``) runs the same k rounds
+column-wise over its VMEM accumulator, which is how the dense score matrix
+never reaches HBM.
 """
 
 from __future__ import annotations
 
 import functools
+from typing import Callable
 
 import jax
 import jax.numpy as jnp
@@ -21,18 +27,34 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu  # noqa: F401
 
 
-def _kernel(x_ref, vals_ref, idx_ref, *, k: int):
-    neg = jnp.finfo(x_ref.dtype).min
-    iota = jax.lax.broadcasted_iota(jnp.int32, x_ref.shape, 1)   # [1, BLK]
+def select_topk(acc: jax.Array, k: int, *, axis: int,
+                emit: Callable[[jax.Array, jax.Array, jax.Array], None]
+                ) -> None:
+    """k rounds of (max, argmax, mask-out) along ``axis`` of ``acc``.
+
+    ``emit(i, vals, idxs)`` is called once per round with the round index
+    and the selected values/indices (``acc``'s shape minus ``axis``); it is
+    expected to store into output refs. VPU-only: reductions + a compare
+    mask, no sorts.
+    """
+    neg = jnp.finfo(acc.dtype).min
+    iota = jax.lax.broadcasted_iota(jnp.int32, acc.shape, axis)
 
     def body(i, cur):
-        m = jnp.max(cur)
-        am = jnp.argmax(cur[0, :]).astype(jnp.int32)
-        pl.store(vals_ref, (pl.ds(0, 1), pl.ds(i, 1)), m[None, None])
-        pl.store(idx_ref, (pl.ds(0, 1), pl.ds(i, 1)), am[None, None])
-        return jnp.where(iota == am, neg, cur)
+        m = jnp.max(cur, axis=axis)
+        am = jnp.argmax(cur, axis=axis).astype(jnp.int32)
+        emit(i, m, am)
+        return jnp.where(iota == jnp.expand_dims(am, axis), neg, cur)
 
-    jax.lax.fori_loop(0, k, body, x_ref[...])
+    jax.lax.fori_loop(0, k, body, acc)
+
+
+def _kernel(x_ref, vals_ref, idx_ref, *, k: int):
+    def emit(i, m, am):
+        pl.store(vals_ref, (pl.ds(0, 1), pl.ds(i, 1)), m[:, None])
+        pl.store(idx_ref, (pl.ds(0, 1), pl.ds(i, 1)), am[:, None])
+
+    select_topk(x_ref[...], k, axis=1, emit=emit)
 
 
 @functools.partial(jax.jit, static_argnames=("k", "interpret"))

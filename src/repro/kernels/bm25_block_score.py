@@ -18,6 +18,18 @@ Grid: ``(n_blocks, nnz_pad // tile_p)``. The inner (posting-tile) dimension
 revisits the same output block, accumulating; program 0 zero-initializes.
 Arithmetic intensity grows with the query batch B, which is what turns the
 paper's memory-bound slice-and-sum into a compute-bound GEMM (§Perf).
+
+Two entry points share the scoring tile:
+
+* ``bm25_block_score``       — dense ``[nb, block_size, B]`` scores. Oracle /
+  debug path only; at realistic corpus sizes this round-trips the whole
+  score matrix through HBM.
+* ``bm25_block_score_topk``  — the FUSED retrieval path. The accumulator
+  lives in VMEM scratch; the last posting tile of each doc-block reduces it
+  to per-block top-k (``select_topk`` rounds of max/argmax/mask, the
+  ``blockwise_topk`` reduction run column-wise) and only ``[nb, k, B]``
+  ids+values ever reach HBM — ``block_size/k`` less traffic, and no second
+  kernel launch to re-read the scores.
 """
 
 from __future__ import annotations
@@ -27,18 +39,14 @@ import functools
 import jax
 import jax.numpy as jnp
 from jax.experimental import pallas as pl
-from jax.experimental.pallas import tpu as pltpu  # noqa: F401  (TPU target)
+from jax.experimental.pallas import tpu as pltpu
+
+from .blockwise_topk import select_topk
 
 
-def _kernel(tok_ref, loc_ref, sc_ref, uniq_ref, w_ref, out_ref, *,
-            block_size: int):
-    """One (doc-block, posting-tile) grid step."""
-    pj = pl.program_id(1)
-
-    @pl.when(pj == 0)
-    def _init():
-        out_ref[...] = jnp.zeros_like(out_ref)
-
+def _score_tile(tok_ref, loc_ref, sc_ref, uniq_ref, w_ref, *,
+                block_size: int) -> jax.Array:
+    """One posting tile's ``[block_size, B]`` score contribution."""
     tok = tok_ref[0, :]                                   # [PT] int32
     loc = loc_ref[0, :]                                   # [PT] int32
     sc = sc_ref[0, :]                                     # [PT] f32
@@ -59,7 +67,61 @@ def _kernel(tok_ref, loc_ref, sc_ref, uniq_ref, w_ref, out_ref, *,
     # scatter -> one-hot matmul: oneh[d, p] = (loc[p] == d)
     d_iota = jax.lax.broadcasted_iota(jnp.int32, (block_size, loc.shape[0]), 0)
     oneh = (d_iota == loc[None, :]).astype(weights.dtype)        # [BS, PT]
-    out_ref[0, :, :] += oneh @ contrib                           # [BS, B] MXU
+    return oneh @ contrib                                        # [BS, B] MXU
+
+
+def _kernel(tok_ref, loc_ref, sc_ref, uniq_ref, w_ref, out_ref, *,
+            block_size: int):
+    """Dense variant: one (doc-block, posting-tile) grid step."""
+    pj = pl.program_id(1)
+
+    @pl.when(pj == 0)
+    def _init():
+        out_ref[...] = jnp.zeros_like(out_ref)
+
+    out_ref[0, :, :] += _score_tile(tok_ref, loc_ref, sc_ref, uniq_ref,
+                                    w_ref, block_size=block_size)
+
+
+def _fused_kernel(tok_ref, loc_ref, sc_ref, uniq_ref, w_ref,
+                  vals_ref, idx_ref, acc_ref, *,
+                  block_size: int, k: int, n_docs: int):
+    """Fused variant: accumulate in VMEM scratch, emit only top-k.
+
+    The ``[block_size, B]`` accumulator never leaves VMEM; the final posting
+    tile of each doc-block masks the tail-padding documents and runs k
+    select-and-mask rounds column-wise (one winner per query per round).
+    """
+    # program ids are read at the top level: pl.program_id may not appear
+    # inside a pl.when branch (interpret-mode lowering rejects it there).
+    pi = pl.program_id(0)
+    pj = pl.program_id(1)
+
+    @pl.when(pj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += _score_tile(tok_ref, loc_ref, sc_ref, uniq_ref, w_ref,
+                                block_size=block_size)
+
+    @pl.when(pj == pl.num_programs(1) - 1)
+    def _reduce():
+        acc = acc_ref[...]                                       # [BS, B]
+        # docs past n_docs exist only as block padding; a padded doc's
+        # accumulator is 0.0 which would outrank real negative scores
+        # (robertson IDF can go negative), so mask before selecting.
+        row = jax.lax.broadcasted_iota(jnp.int32, acc.shape, 0)
+        gdoc = pi * block_size + row
+        acc = jnp.where(gdoc < n_docs, acc, jnp.finfo(acc.dtype).min)
+
+        def emit(i, m, am):                                      # m, am: [B]
+            b = m.shape[0]
+            pl.store(vals_ref, (pl.ds(0, 1), pl.ds(i, 1), pl.ds(0, b)),
+                     m[None, None, :])
+            pl.store(idx_ref, (pl.ds(0, 1), pl.ds(i, 1), pl.ds(0, b)),
+                     am[None, None, :])
+
+        select_topk(acc, k, axis=0, emit=emit)
 
 
 @functools.partial(
@@ -71,7 +133,11 @@ def bm25_block_score(token_ids: jax.Array, local_doc: jax.Array,
                      weights: jax.Array, *, block_size: int,
                      tile_p: int = 512, interpret: bool | None = None
                      ) -> jax.Array:
-    """[nb, P] blocked postings x [U, B] query table -> [nb, block_size, B]."""
+    """[nb, P] blocked postings x [U, B] query table -> [nb, block_size, B].
+
+    Dense scores for oracle tests and full-score consumers; the retrieval
+    path uses :func:`bm25_block_score_topk` instead.
+    """
     nb, p = token_ids.shape
     u, b = weights.shape
     assert p % tile_p == 0, (p, tile_p)
@@ -93,4 +159,55 @@ def bm25_block_score(token_ids: jax.Array, local_doc: jax.Array,
         out_shape=jax.ShapeDtypeStruct((nb, block_size, b), weights.dtype),
         interpret=interpret,
         name="bm25_block_score",
+    )(token_ids, local_doc, scores, uniq_tokens, weights)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_size", "k", "n_docs", "tile_p", "interpret"),
+)
+def bm25_block_score_topk(token_ids: jax.Array, local_doc: jax.Array,
+                          scores: jax.Array, uniq_tokens: jax.Array,
+                          weights: jax.Array, *, block_size: int, k: int,
+                          n_docs: int, tile_p: int = 512,
+                          interpret: bool | None = None
+                          ) -> tuple[jax.Array, jax.Array]:
+    """Fused score→top-k: blocked postings -> (values, local ids) [nb, k, B].
+
+    HBM sees only the ``[nb, k, B]`` winners — the dense
+    ``[nb, block_size, B]`` matrix stays in a VMEM scratch accumulator.
+    Padded documents (global id ≥ ``n_docs``) are masked to -inf before
+    selection, so they can only surface when a block holds fewer than ``k``
+    real documents. Ids are block-local; the merge adds ``block·block_size``.
+    """
+    nb, p = token_ids.shape
+    u, b = weights.shape
+    assert p % tile_p == 0, (p, tile_p)
+    assert k <= block_size, (k, block_size)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    grid = (nb, p // tile_p)
+    return pl.pallas_call(
+        functools.partial(_fused_kernel, block_size=block_size, k=k,
+                          n_docs=n_docs),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile_p), lambda i, j: (i, j)),       # token_ids
+            pl.BlockSpec((1, tile_p), lambda i, j: (i, j)),       # local_doc
+            pl.BlockSpec((1, tile_p), lambda i, j: (i, j)),       # scores
+            pl.BlockSpec((u,), lambda i, j: (0,)),                # uniq table
+            pl.BlockSpec((u, b), lambda i, j: (0, 0)),            # weights
+        ],
+        out_specs=(
+            pl.BlockSpec((1, k, b), lambda i, j: (i, 0, 0)),      # values
+            pl.BlockSpec((1, k, b), lambda i, j: (i, 0, 0)),      # local ids
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((nb, k, b), weights.dtype),
+            jax.ShapeDtypeStruct((nb, k, b), jnp.int32),
+        ),
+        scratch_shapes=[pltpu.VMEM((block_size, b), weights.dtype)],
+        interpret=interpret,
+        name="bm25_block_score_topk",
     )(token_ids, local_doc, scores, uniq_tokens, weights)

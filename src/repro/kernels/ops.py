@@ -8,11 +8,13 @@ global top-k merge).
 
 from __future__ import annotations
 
+import functools
+
 import jax
 import jax.numpy as jnp
 
 from .blockwise_topk import blockwise_topk_kernel
-from .bm25_block_score import bm25_block_score
+from .bm25_block_score import bm25_block_score, bm25_block_score_topk
 from .block_segment_sum import block_segment_sum
 from .embedding_bag import embedding_bag_kernel
 
@@ -26,12 +28,46 @@ def bm25_score_blocked(token_ids: jax.Array, local_doc: jax.Array,
 
     ``nonocc_shift`` is the per-query ``Σᵢ wᵢ·S⁰(qᵢ)`` constant ([B]) — zero
     for the sparse variants, the §2.1 shift for BM25L/BM25+/TFldp.
+
+    Materializes the full dense score matrix — oracle / full-score consumers
+    only. Retrieval goes through :func:`bm25_retrieve_blocked`, which never
+    writes the dense matrix to HBM.
     """
     out = bm25_block_score(token_ids, local_doc, scores, uniq_tokens,
                            weights, block_size=block_size, tile_p=tile_p)
     nb, bs, b = out.shape
     flat = jnp.transpose(out, (2, 0, 1)).reshape(b, nb * bs)[:, :n_docs]
     return flat + nonocc_shift[:, None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_size", "n_docs", "k", "tile_p"))
+def bm25_retrieve_blocked(token_ids: jax.Array, local_doc: jax.Array,
+                          scores: jax.Array, uniq_tokens: jax.Array,
+                          weights: jax.Array, nonocc_shift: jax.Array, *,
+                          block_size: int, n_docs: int, k: int,
+                          tile_p: int = 512
+                          ) -> tuple[jax.Array, jax.Array]:
+    """Fused end-to-end retrieval: blocked postings -> (ids, scores) [B, k].
+
+    Stage 1 is the fused score→top-k kernel (``[nb, k, B]`` winners straight
+    out of VMEM, the dense ``[nb, block_size, B]`` matrix never reaches
+    HBM). Stage 2 is the tiny global merge over ``nb·k`` candidates per
+    query — lossless because every global winner wins its own block.
+    The §2.1 nonoccurrence shift is a per-query constant, so it is
+    rank-invariant and added after the merge; returned scores are exact.
+    """
+    kb = min(k, block_size, n_docs)
+    vals, loc = bm25_block_score_topk(
+        token_ids, local_doc, scores, uniq_tokens, weights,
+        block_size=block_size, k=kb, n_docs=n_docs, tile_p=tile_p)
+    nb, _, b = vals.shape
+    gids = loc + (jnp.arange(nb, dtype=jnp.int32) * block_size)[:, None, None]
+    flat_v = jnp.transpose(vals, (2, 0, 1)).reshape(b, nb * kb)
+    flat_i = jnp.transpose(gids, (2, 0, 1)).reshape(b, nb * kb)
+    mvals, midx = jax.lax.top_k(flat_v, min(k, n_docs, nb * kb))
+    ids = jnp.take_along_axis(flat_i, midx, axis=-1)
+    return ids, mvals + nonocc_shift[:, None]
 
 
 def segment_sum_blocked(values: jax.Array, segment_ids: jax.Array, *,

@@ -38,6 +38,27 @@ def bm25_block_score_ref(token_ids: jax.Array, local_doc: jax.Array,
         token_ids, local_doc, scores)
 
 
+def bm25_block_topk_ref(token_ids: jax.Array, local_doc: jax.Array,
+                        scores: jax.Array, uniq_tokens: jax.Array,
+                        weights: jax.Array, *, block_size: int, k: int,
+                        n_docs: int) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the fused kernel: dense block scores, then per-block top-k.
+
+    Documents past ``n_docs`` (tail-of-last-block padding) are masked to
+    -inf before selection, matching the fused kernel's contract.
+    """
+    dense = bm25_block_score_ref(token_ids, local_doc, scores, uniq_tokens,
+                                 weights, block_size=block_size)
+    nb = dense.shape[0]
+    gdoc = (jnp.arange(nb)[:, None] * block_size
+            + jnp.arange(block_size)[None, :])
+    masked = jnp.where((gdoc < n_docs)[:, :, None], dense,
+                       jnp.finfo(dense.dtype).min)
+    vals, idx = jax.lax.top_k(jnp.swapaxes(masked, 1, 2), k)   # [nb, B, k]
+    return (jnp.swapaxes(vals, 1, 2),
+            jnp.swapaxes(idx, 1, 2).astype(jnp.int32))         # [nb, k, B]
+
+
 def block_segment_sum_ref(values: jax.Array, segment_ids: jax.Array,
                           *, num_segments: int) -> jax.Array:
     """[nb, P, D] values + [nb, P] local ids -> [nb, num_segments, D].

@@ -1,6 +1,7 @@
 """Serving stack: sharded retrieval engine with hedging, LM decode engine."""
 
-from .retrieval_engine import RetrievalEngine, ShardRuntime
+from .retrieval_engine import BlockedRetriever, RetrievalEngine, ShardRuntime
 from .decode_engine import DecodeEngine
 
-__all__ = ["RetrievalEngine", "ShardRuntime", "DecodeEngine"]
+__all__ = ["BlockedRetriever", "RetrievalEngine", "ShardRuntime",
+           "DecodeEngine"]

@@ -12,6 +12,13 @@ layer over document shards, and the operational concerns become:
 * elasticity — ``rescale(n_shards)`` re-buckets the postings (pure host
   re-slicing, ``core.index.reshard_index``) when the pool grows/shrinks.
 
+* device offload — each ``ShardRuntime`` scores either host-side
+  (``scorer="scipy"``, the paper's CSC slice+sum) or through the fused
+  Pallas score→top-k pipeline (``scorer="blocked"``,
+  :class:`BlockedRetriever`): postings are re-blocked once at runtime
+  build, and every query runs gather→accumulate→per-block-top-k→merge on
+  device without materializing the dense score vector.
+
 ``ShardRuntime`` is process-local here (threads simulate shard servers; a
 ``delay`` hook lets tests inject stragglers), but the engine logic —
 quorum, deadline, merge, re-shard — is exactly the production control
@@ -20,7 +27,6 @@ plane.
 
 from __future__ import annotations
 
-import heapq
 import time
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
@@ -30,6 +36,64 @@ import numpy as np
 
 from ..core.index import BM25Index, reshard_index
 from ..core.reference import ScipyBM25
+from ..core.retrieval import merge_topk
+
+
+class BlockedRetriever:
+    """Fused-kernel scorer for one shard (drop-in for :class:`ScipyBM25`).
+
+    Blocks the shard's postings once (``sparse.block_csr``) and serves
+    ``retrieve`` via ``kernels.ops.bm25_retrieve_blocked``: the dense
+    per-document score vector never exists anywhere — scores stream from
+    the posting tiles into a VMEM accumulator and leave as ``[k]`` winners.
+    """
+
+    def __init__(self, index: BM25Index, *, block_size: int = 512,
+                 tile: int = 512, q_max: int = 32):
+        import jax.numpy as jnp
+
+        from ..sparse.block_csr import block_postings_from_index
+        self.index = index
+        self.q_max = q_max                       # bucket floor, not a cap
+        self.n_docs = int(index.doc_lens.size)
+        bp = block_postings_from_index(index, block_size=block_size,
+                                       tile=tile)
+        self.block_size = bp.block_size
+        self.tile_p = min(tile, bp.nnz_pad)
+        self._tok = jnp.asarray(bp.token_ids)
+        self._loc = jnp.asarray(bp.local_doc)
+        self._sc = jnp.asarray(bp.scores)
+
+    def retrieve(self, query_tokens: np.ndarray, k: int
+                 ) -> tuple[np.ndarray, np.ndarray]:
+        import jax.numpy as jnp
+
+        from ..core.scoring import pad_queries
+        from ..kernels import ops
+        from ..sparse.block_csr import (pack_query_batch,
+                                        query_nonoccurrence_shift)
+        if self.n_docs == 0 or k <= 0:           # empty shard post-rescale
+            return (np.zeros(0, dtype=np.int64), np.zeros(0, np.float32))
+        query_tokens = np.asarray(query_tokens)
+        # size the unique-token table to THIS query (bucketed to limit
+        # recompiles) — a fixed q_max would silently truncate long queries
+        # to their highest-count tokens, unlike the exact scipy scorer.
+        n_uniq = np.unique(query_tokens[query_tokens >= 0]).size
+        q_max = max(self.q_max, -(-max(n_uniq, 1) // 32) * 32)
+        toks, wts = pad_queries([query_tokens], q_max)
+        uniq, weights = pack_query_batch(toks, wts, u_max=q_max)
+        shift = query_nonoccurrence_shift(self.index.nonoccurrence, toks,
+                                          wts)
+        ids, vals = ops.bm25_retrieve_blocked(
+            self._tok, self._loc, self._sc, jnp.asarray(uniq),
+            jnp.asarray(weights), jnp.asarray(shift),
+            block_size=self.block_size, n_docs=self.n_docs,
+            k=min(k, self.n_docs), tile_p=self.tile_p)
+        return (np.asarray(ids[0]).astype(np.int64)
+                + self.index.doc_offset, np.asarray(vals[0]))
+
+
+_SCORERS = {"scipy": ScipyBM25, "blocked": BlockedRetriever}
 
 
 @dataclass
@@ -38,9 +102,13 @@ class ShardRuntime:
 
     index: BM25Index
     delay: Callable[[], float] | None = None     # test hook: seconds to sleep
+    scorer: str = "scipy"                        # "scipy" | "blocked"
 
     def __post_init__(self):
-        self._scorer = ScipyBM25(self.index)
+        if self.scorer not in _SCORERS:
+            raise ValueError(f"unknown scorer {self.scorer!r}; "
+                             f"available: {sorted(_SCORERS)}")
+        self._scorer = _SCORERS[self.scorer](self.index)
 
     def topk(self, query_tokens: np.ndarray, k: int
              ) -> tuple[np.ndarray, np.ndarray]:
@@ -62,10 +130,12 @@ class RetrievalEngine:
     def __init__(self, shards: Sequence[BM25Index], *, k: int = 10,
                  deadline_s: float = 0.5, quorum: float = 0.75,
                  max_workers: int = 8,
-                 delay: Callable[[int], Callable[[], float] | None] = None):
+                 delay: Callable[[int], Callable[[], float] | None] = None,
+                 scorer: str = "scipy"):
         self.k = k
         self.deadline_s = deadline_s
         self.quorum = quorum
+        self.scorer = scorer
         self._delay_factory = delay
         self._pool = ThreadPoolExecutor(max_workers=max_workers)
         self._build_runtimes(list(shards))
@@ -74,7 +144,8 @@ class RetrievalEngine:
         self.shards = shards
         self.runtimes = [
             ShardRuntime(s, delay=self._delay_factory(i)
-                         if self._delay_factory else None)
+                         if self._delay_factory else None,
+                         scorer=self.scorer)
             for i, s in enumerate(shards)
         ]
 
@@ -117,13 +188,6 @@ class RetrievalEngine:
 
     @staticmethod
     def _merge(parts, k: int) -> tuple[np.ndarray, np.ndarray]:
-        heap: list[tuple[float, int]] = []
-        for ids, scores in parts:
-            for i, s in zip(ids.tolist(), scores.tolist()):
-                if len(heap) < k:
-                    heapq.heappush(heap, (s, i))
-                elif s > heap[0][0]:
-                    heapq.heapreplace(heap, (s, i))
-        heap.sort(reverse=True)
-        return (np.asarray([i for _, i in heap], dtype=np.int64),
-                np.asarray([s for s, _ in heap], dtype=np.float32))
+        # stage-2 of the paper's two-stage top-k, vectorized in
+        # core.retrieval.merge_topk (concatenate + argpartition).
+        return merge_topk(parts, k)

@@ -76,6 +76,11 @@ def block_postings_from_coo(
     shared by all blocks so the arrays are rectangular). Within a block
     postings are sorted by token id (the membership-lookup kernel exploits
     locality, and determinism helps tests).
+
+    Fully vectorized: one ``lexsort`` by (block, token) makes each block a
+    contiguous run, the within-block column of every posting is
+    ``rank - block_start``, and a single fancy-indexed scatter fills the
+    rectangular arrays — no per-block Python loop.
     """
     n_blocks = max(1, -(-n_docs // block_size))
     blk = doc_ids // block_size
@@ -86,23 +91,16 @@ def block_postings_from_coo(
     loc = np.zeros((n_blocks, nnz_pad), dtype=np.int32)
     sc = np.zeros((n_blocks, nnz_pad), dtype=np.float32)
 
-    order = np.argsort(blk, kind="stable")
+    order = (np.lexsort((token_ids, blk)) if sort_tokens
+             else np.argsort(blk, kind="stable"))
     token_ids, doc_ids, scores, blk = (
         token_ids[order], doc_ids[order], scores[order], blk[order])
     starts = np.zeros(n_blocks + 1, dtype=np.int64)
-    np.add.at(starts, blk + 1, 1)
-    np.cumsum(starts, out=starts)
-    for i in range(n_blocks):
-        lo, hi = int(starts[i]), int(starts[i + 1])
-        t = token_ids[lo:hi]
-        d = doc_ids[lo:hi] - i * block_size
-        s = scores[lo:hi]
-        if sort_tokens and t.size:
-            o = np.argsort(t, kind="stable")
-            t, d, s = t[o], d[o], s[o]
-        tok[i, : t.size] = t
-        loc[i, : t.size] = d
-        sc[i, : t.size] = s
+    np.cumsum(counts, out=starts[1:])
+    col = np.arange(blk.size, dtype=np.int64) - starts[blk]
+    tok[blk, col] = token_ids
+    loc[blk, col] = doc_ids - blk * block_size
+    sc[blk, col] = scores
     return BlockedPostings(tok, loc, sc, block_size=block_size,
                            n_docs=n_docs, n_vocab=n_vocab)
 
@@ -133,6 +131,20 @@ def block_edges(src: np.ndarray, dst: np.ndarray, weight: np.ndarray | None,
         sort_tokens=False)
 
 
+def query_nonoccurrence_shift(nonoccurrence: np.ndarray,
+                              q_tokens: np.ndarray,
+                              q_weights: np.ndarray) -> np.ndarray:
+    """Per-query §2.1 constant ``Σᵢ wᵢ·S⁰(qᵢ)`` for a padded query batch.
+
+    ``[B]`` float32, zero for sparse variants. The single definition of the
+    host-side shift the fused retrieval path adds after its merge
+    (``ops.bm25_retrieve_blocked``'s ``nonocc_shift`` operand).
+    """
+    safe = np.where(q_tokens >= 0, q_tokens, 0)
+    return ((q_weights * nonoccurrence[safe] * (q_tokens >= 0))
+            .sum(-1).astype(np.float32))
+
+
 def pack_query_batch(q_tokens: np.ndarray, q_weights: np.ndarray,
                      u_max: int) -> tuple[np.ndarray, np.ndarray]:
     """Batch of padded queries -> (sorted unique tokens [U], weights [U, B]).
@@ -150,9 +162,8 @@ def pack_query_batch(q_tokens: np.ndarray, q_weights: np.ndarray,
     table = np.full(u_max, np.iinfo(np.int32).max, dtype=np.int32)
     table[: uniq.size] = uniq
     weights = np.zeros((u_max, b), dtype=np.float32)
-    for i in range(b):
-        t, w = q_tokens[i], q_weights[i]
-        valid = t >= 0
-        pos = np.searchsorted(uniq, t[valid])
-        weights[pos, i] = w[valid]
+    # tokens are unique within a query (pad_queries), so one scatter works
+    qi, slot = np.nonzero(q_tokens >= 0)
+    pos = np.searchsorted(uniq, q_tokens[qi, slot])
+    weights[pos, qi] = q_weights[qi, slot]
     return table, weights

@@ -5,6 +5,28 @@ use mesh-of-one."""
 import numpy as np
 import pytest
 
+# ``hypothesis`` is an optional dev dependency (declared in pyproject.toml's
+# ``test`` extra). When absent, property tests skip instead of breaking
+# collection: import ``given``/``settings``/``st`` from here, not hypothesis.
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                   # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    class _AnyStrategy:
+        def __getattr__(self, name):
+            return lambda *a, **k: None
+
+    st = _AnyStrategy()
+
+    def given(*a, **k):
+        return lambda f: pytest.mark.skip(
+            reason="hypothesis not installed (pip install '.[test]')")(f)
+
+    def settings(*a, **k):
+        return lambda f: f
+
 
 @pytest.fixture
 def rng():

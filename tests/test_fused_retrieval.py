@@ -1,0 +1,334 @@
+"""Fused score→top-k retrieval pipeline vs the exactness oracles.
+
+The fused kernel emits per-block ``[nb, k, B]`` winners straight from its
+VMEM accumulator — these tests pin the whole pipeline (block layout → fused
+kernel → global merge) against ``topk_numpy`` over dense oracle scores, on
+every BM25 variant (including the shifted ones, whose §2.1 nonoccurrence
+offset must survive the fusion exactly). Also covers the vectorized host
+indexing path against a straightforward per-document/per-block loop
+re-implementation, and the posting-budget overflow flag.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from conftest import given, make_corpus, settings, st
+from repro.core import (BM25Params, DeviceIndex, build_index,
+                        build_sharded_indexes, dense_oracle_scores,
+                        merge_topk, pad_queries, reshard_index, score_batch,
+                        suggest_p_max, topk_numpy)
+from repro.core.index import CorpusStats, _corpus_coo
+from repro.kernels import ops, ref
+from repro.kernels.bm25_block_score import bm25_block_score_topk
+from repro.sparse.block_csr import (block_postings_from_coo,
+                                    block_postings_from_index,
+                                    pack_query_batch,
+                                    query_nonoccurrence_shift)
+
+ALL_VARIANTS = ["robertson", "atire", "lucene", "bm25l", "bm25+"]
+
+
+def _fused_retrieve(corpus, n_vocab, queries, method, k, *,
+                    block_size=32, tile=64, q_max=8):
+    """Full fused pipeline: index → block → fused kernel → merge."""
+    p = BM25Params(method=method)
+    idx = build_index(corpus, n_vocab, params=p)
+    bp = block_postings_from_index(idx, block_size=block_size, tile=tile)
+    toks, wts = pad_queries(queries, q_max)
+    uniq, weights = pack_query_batch(toks, wts, u_max=4 * q_max)
+    shift = query_nonoccurrence_shift(idx.nonoccurrence, toks, wts)
+    ids, vals = ops.bm25_retrieve_blocked(
+        jnp.asarray(bp.token_ids), jnp.asarray(bp.local_doc),
+        jnp.asarray(bp.scores), jnp.asarray(uniq), jnp.asarray(weights),
+        jnp.asarray(shift), block_size=bp.block_size,
+        n_docs=len(corpus), k=k, tile_p=min(tile, bp.nnz_pad))
+    return np.asarray(ids), np.asarray(vals), p
+
+
+# -- tentpole: fused kernel + merge == topk_numpy oracle --------------------
+
+@pytest.mark.parametrize("method", ALL_VARIANTS)
+def test_fused_matches_oracle_all_variants(method, rng):
+    corpus = make_corpus(rng, n_docs=90, n_vocab=64, max_len=20)
+    queries = [rng.integers(0, 64, size=rng.integers(1, 6)).astype(np.int32)
+               for _ in range(4)]
+    ids, vals, p = _fused_retrieve(corpus, 64, queries, method, k=7)
+    for i, q in enumerate(queries):
+        oracle = dense_oracle_scores(corpus, 64, q, p)
+        _, ref_v = topk_numpy(oracle[None], 7)
+        np.testing.assert_allclose(vals[i], ref_v[0], atol=1e-4)
+        # returned ids carry their exact oracle scores (not just same values)
+        np.testing.assert_allclose(oracle[ids[i]], vals[i], atol=1e-4)
+
+
+def test_fused_kernel_emits_topk_not_dense(rng):
+    """Kernel output is [nb, k, B] and matches the per-block top-k oracle."""
+    corpus = make_corpus(rng, n_docs=70, n_vocab=50)
+    idx = build_index(corpus, 50, params=BM25Params(method="lucene"))
+    bp = block_postings_from_index(idx, block_size=16, tile=64)
+    queries = [rng.integers(0, 50, size=4).astype(np.int32)
+               for _ in range(3)]
+    toks, wts = pad_queries(queries, 8)
+    uniq, weights = pack_query_batch(toks, wts, u_max=16)
+    args = (jnp.asarray(bp.token_ids), jnp.asarray(bp.local_doc),
+            jnp.asarray(bp.scores), jnp.asarray(uniq), jnp.asarray(weights))
+    k = 5
+    vals, loc = bm25_block_score_topk(
+        *args, block_size=16, k=k, n_docs=70, tile_p=64)
+    assert vals.shape == (bp.n_blocks, k, 3)
+    assert loc.shape == (bp.n_blocks, k, 3)
+    rv, ri = ref.bm25_block_topk_ref(*args, block_size=16, k=k, n_docs=70)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rv), atol=1e-5)
+    # padded docs of the last block (70..79) may only appear with -inf value
+    last = np.asarray(loc)[-1] + (bp.n_blocks - 1) * 16
+    pad_hits = np.asarray(vals)[-1][last >= 70]
+    assert (pad_hits <= np.finfo(np.float32).min / 2).all()
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 31), k=st.integers(1, 12),
+       variant=st.sampled_from(ALL_VARIANTS))
+def test_property_fused_equals_topk_numpy(seed, k, variant):
+    """Random corpora/queries/k/variant: fused pipeline == argpartition
+    oracle, including the shifted variants' score offset."""
+    rng = np.random.default_rng(seed)
+    v = int(rng.integers(20, 80))
+    corpus = [rng.integers(0, v, size=rng.integers(1, 25)).astype(np.int32)
+              for _ in range(int(rng.integers(20, 120)))]
+    k = min(k, len(corpus))
+    queries = [rng.integers(0, v, size=rng.integers(1, 7)).astype(np.int32)
+               for _ in range(3)]
+    ids, vals, p = _fused_retrieve(corpus, v, queries, variant, k=k)
+    for i, q in enumerate(queries):
+        oracle = dense_oracle_scores(corpus, v, q, p)
+        _, ref_v = topk_numpy(oracle[None], k)
+        np.testing.assert_allclose(vals[i], ref_v[0], atol=1e-4)
+        np.testing.assert_allclose(oracle[ids[i]], vals[i], atol=1e-4)
+
+
+# -- vectorized host indexing == loop semantics -----------------------------
+
+def _corpus_coo_loop(doc_tokens):
+    """The seed's per-document loop, kept as the semantics oracle."""
+    tok_c, doc_c, tf_c = [], [], []
+    doc_lens = np.zeros(len(doc_tokens), dtype=np.int32)
+    for d, toks in enumerate(doc_tokens):
+        doc_lens[d] = toks.size
+        if toks.size == 0:
+            continue
+        uniq, counts = np.unique(toks, return_counts=True)
+        tok_c.append(uniq.astype(np.int64))
+        doc_c.append(np.full(uniq.size, d, dtype=np.int64))
+        tf_c.append(counts.astype(np.float64))
+    if not tok_c:
+        z = np.zeros(0, np.int64)
+        return z, z.copy(), np.zeros(0, np.float64), doc_lens
+    return (np.concatenate(tok_c), np.concatenate(doc_c),
+            np.concatenate(tf_c), doc_lens)
+
+
+def test_vectorized_corpus_coo_matches_loop(rng):
+    corpus = make_corpus(rng, n_docs=120, n_vocab=40)
+    corpus[7] = np.zeros(0, np.int32)            # empty doc edge case
+    tok, doc, tf, lens = _corpus_coo(corpus, 40)
+    lt, ld, ltf, ll = _corpus_coo_loop(corpus)
+    order = np.lexsort((lt, ld))                 # vectorized is (doc, tok)
+    np.testing.assert_array_equal(tok, lt[order])
+    np.testing.assert_array_equal(doc, ld[order])
+    np.testing.assert_array_equal(tf, ltf[order])
+    np.testing.assert_array_equal(lens, ll)
+
+
+def test_vectorized_corpus_stats(rng):
+    corpus = make_corpus(rng, n_docs=100, n_vocab=30)
+    stats = CorpusStats.from_corpus(corpus, 30)
+    df = np.zeros(30, np.int64)
+    total = 0
+    for t in corpus:
+        total += t.size
+        if t.size:
+            df[np.unique(t)] += 1
+    np.testing.assert_array_equal(stats.df, df)
+    assert stats.l_avg == pytest.approx(total / len(corpus))
+
+
+def test_vectorized_block_postings_matches_loop(rng):
+    nnz = 500
+    tok = rng.integers(0, 90, size=nnz).astype(np.int64)
+    doc = rng.integers(0, 150, size=nnz).astype(np.int64)
+    sc = rng.normal(size=nnz).astype(np.float32)
+    bp = block_postings_from_coo(tok, doc, sc, n_docs=150, n_vocab=90,
+                                 block_size=32, tile=16)
+    # loop oracle
+    n_blocks = -(-150 // 32)
+    assert bp.n_blocks == n_blocks
+    for i in range(n_blocks):
+        sel = (doc // 32) == i
+        t, d, s = tok[sel], doc[sel] - i * 32, sc[sel]
+        o = np.argsort(t, kind="stable")
+        t, d, s = t[o], d[o], s[o]
+        np.testing.assert_array_equal(bp.token_ids[i, : t.size], t)
+        np.testing.assert_array_equal(bp.local_doc[i, : t.size], d)
+        np.testing.assert_array_equal(bp.scores[i, : t.size], s)
+        assert (bp.token_ids[i, t.size:] == -1).all()
+        assert (bp.scores[i, t.size:] == 0.0).all()
+
+
+def test_reshard_searchsorted_matches_direct_build(rng):
+    corpus = make_corpus(rng, n_docs=83, n_vocab=40)
+    p = BM25Params(method="bm25+")
+    shards = build_sharded_indexes(corpus, 40, 5, params=p)
+    for n_new in (1, 2, 3, 7):
+        direct = build_sharded_indexes(corpus, 40, n_new, params=p)
+        resharded = reshard_index(shards, n_new)
+        assert len(resharded) == n_new
+        for a, b in zip(resharded, direct):
+            np.testing.assert_array_equal(a.indptr, b.indptr)
+            np.testing.assert_array_equal(a.doc_ids, b.doc_ids)
+            np.testing.assert_allclose(a.scores, b.scores, atol=1e-6)
+            np.testing.assert_array_equal(a.doc_lens, b.doc_lens)
+            assert a.doc_offset == b.doc_offset and a.n_docs == b.n_docs
+
+
+# -- satellite regressions ---------------------------------------------------
+
+def test_score_batch_overflow_flag_detects_truncation(rng):
+    """An undersized posting budget must be detectable, not silent."""
+    corpus = make_corpus(rng, n_docs=80, n_vocab=10)   # tiny vocab: huge df
+    idx = build_index(corpus, 10, params=BM25Params())
+    di = DeviceIndex.from_host(idx)
+    queries = [np.arange(8, dtype=np.int32)]
+    toks, wts = pad_queries(queries, 8)
+    need = suggest_p_max(idx, 8)
+    ok_scores, ok_flag = score_batch(di, toks, wts, p_max=need,
+                                     return_overflow=True)
+    bad_scores, bad_flag = score_batch(di, toks, wts, p_max=32,
+                                       return_overflow=True)
+    assert not bool(np.asarray(ok_flag)[0])
+    assert bool(np.asarray(bad_flag)[0])
+    # and the truncation it flags is real score corruption
+    assert not np.allclose(np.asarray(ok_scores), np.asarray(bad_scores))
+    # default call keeps the legacy single-output shape
+    legacy = score_batch(di, toks, wts, p_max=need)
+    np.testing.assert_allclose(np.asarray(legacy), np.asarray(ok_scores))
+
+
+def test_sharded_retrieve_overflow_flag(rng):
+    """The SPMD retrieval path exposes budget truncation like score_batch."""
+    from repro.core.retrieval import make_sharded_retrieve, stack_shard_arrays
+    from repro.launch.mesh import make_test_mesh
+    corpus = make_corpus(rng, n_docs=60, n_vocab=10)   # tiny vocab: huge df
+    shards = build_sharded_indexes(corpus, 10, 1, params=BM25Params())
+    mesh = make_test_mesh(1)
+    axes = tuple(mesh.shape.keys())
+    arrs, ndoc = stack_shard_arrays(shards, mesh, axes)
+    toks, wts = pad_queries([np.arange(8, dtype=np.int32)], 8)
+    need = max(suggest_p_max(s, 8) for s in shards)
+    r_over = make_sharded_retrieve(mesh, axes, p_max=16, k=3,
+                                   n_docs_per_shard=ndoc,
+                                   return_overflow=True)
+    _, _, over = r_over(arrs, toks, wts)
+    assert bool(np.asarray(over)[0])
+    r_fit = make_sharded_retrieve(mesh, axes, p_max=need, k=3,
+                                  n_docs_per_shard=ndoc,
+                                  return_overflow=True)
+    ids, vals, over = r_fit(arrs, toks, wts)
+    assert not bool(np.asarray(over)[0])
+    # default stays a 2-tuple (existing callers unchanged)
+    r_default = make_sharded_retrieve(mesh, axes, p_max=need, k=3,
+                                      n_docs_per_shard=ndoc)
+    ids2, vals2 = r_default(arrs, toks, wts)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(vals2))
+
+
+def test_merge_topk_matches_heap_semantics(rng):
+    parts = []
+    pool_ids = rng.choice(10_000, size=60, replace=False)
+    pool_sc = rng.normal(size=60).astype(np.float32)
+    for c in np.array_split(np.arange(60), 4):
+        parts.append((pool_ids[c], pool_sc[c]))
+    ids, scores = merge_topk(parts, 10)
+    order = np.argsort(-pool_sc, kind="stable")[:10]
+    np.testing.assert_allclose(scores, pool_sc[order], atol=1e-7)
+    np.testing.assert_array_equal(ids, pool_ids[order])
+    assert (np.diff(scores) <= 1e-7).all()
+    # degenerate: empty parts, k > candidates, and k=0 (regression: the
+    # [-0:] slice must not return every candidate like the old heap didn't)
+    ids0, sc0 = merge_topk([], 5)
+    assert ids0.size == 0 and sc0.size == 0
+    ids1, sc1 = merge_topk([(pool_ids[:3], pool_sc[:3])], 99)
+    assert ids1.size == 3
+    idsz, scz = merge_topk([(pool_ids[:3], pool_sc[:3])], 0)
+    assert idsz.size == 0 and scz.size == 0
+
+
+def test_is_shifted_cached(rng):
+    corpus = make_corpus(rng, n_docs=30, n_vocab=20)
+    idx = build_index(corpus, 20, params=BM25Params(method="bm25l"))
+    assert idx.is_shifted
+    assert "is_shifted" in idx.__dict__          # cached after first access
+    idx2 = build_index(corpus, 20, params=BM25Params(method="lucene"))
+    assert not idx2.is_shifted
+
+
+def test_corpus_coo_rejects_out_of_range_tokens(rng):
+    corpus = make_corpus(rng, n_docs=10, n_vocab=20)
+    corpus[3] = np.array([5, 25], dtype=np.int32)   # 25 >= n_vocab=20
+    with pytest.raises(ValueError, match="token ids"):
+        _corpus_coo(corpus, 20)
+    corpus[3] = np.array([5, -2], dtype=np.int32)
+    with pytest.raises(ValueError, match="token ids"):
+        _corpus_coo(corpus, 20)
+
+
+def test_blocked_scorer_long_query_not_truncated(rng):
+    """Queries with more unique tokens than the q_max floor stay exact."""
+    from repro.serve import BlockedRetriever
+    from repro.core import ScipyBM25
+    corpus = make_corpus(rng, n_docs=100, n_vocab=120, max_len=40)
+    idx = build_index(corpus, 120, params=BM25Params())
+    br = BlockedRetriever(idx, block_size=32, tile=64, q_max=8)
+    q = rng.choice(120, size=40, replace=False).astype(np.int32)  # 40 > 8
+    ids, vals = br.retrieve(q, k=5)
+    ref_ids, ref_vals = ScipyBM25(idx).retrieve(q, 5)
+    np.testing.assert_allclose(np.sort(vals), np.sort(ref_vals), atol=1e-4)
+
+
+def test_blocked_engine_survives_rescale_to_empty_shards(rng):
+    """rescale() can create zero-doc shards; the blocked scorer must not
+    crash on them (regression: ZeroDivisionError in pallas k=0 block)."""
+    from repro.serve import RetrievalEngine
+    corpus = make_corpus(rng, n_docs=3, n_vocab=20)
+    shards = build_sharded_indexes(corpus, 20, 2, params=BM25Params())
+    eng = RetrievalEngine(shards, k=2, deadline_s=10.0, scorer="blocked")
+    eng.rescale(5)                               # 3 docs over 5 shards
+    q = rng.integers(0, 20, size=3).astype(np.int32)
+    r = eng.retrieve(q)
+    oracle = dense_oracle_scores(corpus, 20, q, BM25Params())
+    _, ref_v = topk_numpy(oracle[None], 2)
+    np.testing.assert_allclose(np.sort(r.scores), np.sort(ref_v[0]),
+                               atol=1e-3)
+
+
+def test_engine_blocked_scorer_exact(rng):
+    from repro.serve import RetrievalEngine
+    corpus = make_corpus(rng, n_docs=120, n_vocab=60)
+    p = BM25Params(method="bm25l")
+    shards = build_sharded_indexes(corpus, 60, 3, params=p)
+    eng = RetrievalEngine(shards, k=9, deadline_s=30.0, scorer="blocked")
+    for _ in range(3):
+        q = rng.integers(0, 60, size=5).astype(np.int32)
+        r = eng.retrieve(q)
+        oracle = dense_oracle_scores(corpus, 60, q, p)
+        _, ref_v = topk_numpy(oracle[None], 9)
+        np.testing.assert_allclose(np.sort(r.scores), np.sort(ref_v[0]),
+                                   atol=1e-3)
+        for i, s in zip(r.ids, r.scores):
+            assert abs(oracle[i] - s) < 1e-3
+    eng.rescale(2)                               # rescale keeps the scorer
+    assert all(rt.scorer == "blocked" for rt in eng.runtimes)
+    r2 = eng.retrieve(q)
+    np.testing.assert_allclose(np.sort(r2.scores), np.sort(ref_v[0]),
+                               atol=1e-3)

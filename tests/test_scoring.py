@@ -2,11 +2,10 @@
 
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
 
 import jax.numpy as jnp
 
-from conftest import make_corpus
+from conftest import given, make_corpus, settings, st
 from repro.core import (BM25Params, DeviceIndex, ScipyBM25, build_index,
                         build_sharded_indexes, dense_oracle_scores,
                         pad_queries, score_batch, suggest_p_max)
