@@ -1,0 +1,104 @@
+"""BENCH_2 — query-driven gathered retrieval vs the full-scan fused path.
+
+The PR-2 perf story: the fused full-scan pipeline walks every posting tile
+per query batch (O(nnz)), so BENCH_1 showed scipy's slice-and-sum beating
+it on a 1k-doc corpus and the gap grows linearly with corpus size. The
+gathered path does O(Σ df over the batch's unique tokens) — the paper's
+eager-sparsity asymptotics, restored on device.
+
+Sweep: corpus size × query df profile:
+
+* ``head`` — query tokens sampled from the highest-df vocabulary ranks
+  (worst case for the gather: Σ df is as large as it gets);
+* ``tail`` — tokens from the Zipf tail (best case: tiny Σ df).
+
+Per cell we report gathered / full-scan / scipy per-batch latency and the
+**work ratio** ``nnz / Σ df`` — the posting-count advantage the gathered
+layout has before either kernel runs. CPU wall times (Pallas in interpret
+mode): compare paths relatively; the work ratio is the TPU argument.
+
+Written to ``BENCH_2.json`` by ``benchmarks/run.py``.
+"""
+
+from __future__ import annotations
+
+import time
+
+import numpy as np
+
+from repro.core import BM25Params, build_index, pad_queries
+from repro.data.corpus import zipf_corpus
+
+
+def _profile_queries(rng: np.random.Generator, profile: str, n_vocab: int,
+                     batch: int, q_len: int) -> list[np.ndarray]:
+    """head: top-df ranks (Zipf rank order = df order); tail: low-df ranks."""
+    if profile == "head":
+        pool = np.arange(0, max(32, n_vocab // 100))
+    else:
+        pool = np.arange(n_vocab // 2, n_vocab)
+    return [rng.choice(pool, size=q_len).astype(np.int32)
+            for _ in range(batch)]
+
+
+def bench_cell(n_docs: int, profile: str, *, n_vocab: int = 10_000,
+               batch: int = 8, k: int = 10, avg_len: int = 60,
+               tile: int = 2048, repeats: int = 2) -> dict:
+    from repro.serve import BlockedRetriever, GatheredRetriever
+    from repro.core import ScipyBM25, batch_posting_budget
+
+    corpus = zipf_corpus(n_docs, n_vocab, avg_len=avg_len)
+    idx = build_index(corpus, n_vocab, params=BM25Params())
+    rng = np.random.default_rng(3)
+    queries = _profile_queries(rng, profile, n_vocab, batch, q_len=5)
+    toks, _ = pad_queries(queries, 8)
+    sum_df = batch_posting_budget(idx, toks.reshape(1, -1))
+    nnz = idx.nnz
+
+    gathered = GatheredRetriever(idx, tile=tile)
+    blocked = BlockedRetriever(idx, block_size=512, tile=tile)
+    scipy_r = ScipyBM25(idx)
+
+    def timed(fn):
+        fn()                                     # compile/warmup
+        t0 = time.perf_counter()
+        for _ in range(repeats):
+            fn()
+        return (time.perf_counter() - t0) / repeats
+
+    t_gath = timed(lambda: gathered.retrieve_batch(queries, k))
+    t_full = timed(lambda: blocked.retrieve_batch(queries, k))
+    t_scipy = timed(lambda: [scipy_r.retrieve(q, k) for q in queries])
+
+    return {
+        "n_docs": n_docs, "n_vocab": n_vocab, "batch": batch, "k": k,
+        "profile": profile, "nnz": int(nnz), "sum_df": int(sum_df),
+        "work_ratio_nnz_over_sum_df": round(nnz / max(sum_df, 1), 1),
+        "gathered_batch_s": round(t_gath, 4),
+        "full_scan_batch_s": round(t_full, 4),
+        "scipy_batch_s": round(t_scipy, 4),
+        "gathered_vs_full_scan_speedup": round(t_full / max(t_gath, 1e-9),
+                                               1),
+        "gathered_vs_scipy_speedup": round(t_scipy / max(t_gath, 1e-9), 2),
+    }
+
+
+def run(*, fast: bool = False) -> dict:
+    # the acceptance corpus stays >= 50k docs even in --fast
+    sizes = (5_000, 50_000) if fast else (5_000, 20_000, 50_000)
+    cells = [bench_cell(n, profile,
+                        n_vocab=5_000 if fast else 10_000,
+                        repeats=1 if n >= 20_000 else 2)
+             for n in sizes for profile in ("head", "tail")]
+    biggest = [c for c in cells if c["n_docs"] == max(sizes)]
+    return {
+        "cells": cells,
+        "summary": {
+            "acceptance_50k_gathered_beats_full_scan": all(
+                c["gathered_batch_s"] < c["full_scan_batch_s"]
+                for c in biggest),
+            "note": "CPU wall times; Pallas kernels run in interpret "
+                    "mode — compare paths relatively, the work ratio "
+                    "(nnz/Σdf) is the device argument",
+        },
+    }

@@ -63,6 +63,7 @@ def _score_2m_cell() -> Cell:
             sds((n_shards, nnz_pad), jnp.float32),     # scores
             sds((n_shards, N_VOCAB), jnp.float32),     # nonoccurrence
             sds((n_shards, 1), jnp.int32),             # offsets
+            sds((n_shards, 1), jnp.int32),             # true doc counts
         )
         return fn, (idx_arrays,
                     sds((QUERY_BATCH, Q_MAX), jnp.int32),

@@ -2,17 +2,20 @@
 
 from .index import BM25Index, CorpusStats, build_index, build_sharded_indexes, reshard_index
 from .reference import RankBM25Baseline, ScipyBM25, dense_oracle_scores
-from .retrieval import blockwise_topk, merge_topk, topk_jax, topk_numpy
-from .scoring import DeviceIndex, pad_queries, score_batch, suggest_p_max
+from .retrieval import (blockwise_topk, merge_topk, merge_topk_batch,
+                        sharded_retrieve_adaptive, topk_jax, topk_numpy)
+from .scoring import (DeviceIndex, batch_posting_budget, bucket_pow2,
+                      pad_queries, score_batch, suggest_p_max)
 from .tokenizer import Tokenizer, Vocabulary
 from .variants import BM25Params, VARIANTS, get_variant
 
 __all__ = [
     "BM25Index", "BM25Params", "BM25Retriever", "CorpusStats", "DeviceIndex",
     "RankBM25Baseline", "ScipyBM25", "Tokenizer", "VARIANTS", "Vocabulary",
-    "blockwise_topk", "build_index", "build_sharded_indexes",
-    "dense_oracle_scores", "get_variant", "merge_topk", "pad_queries",
-    "reshard_index", "score_batch", "suggest_p_max", "topk_jax",
+    "batch_posting_budget", "blockwise_topk", "bucket_pow2", "build_index",
+    "build_sharded_indexes", "dense_oracle_scores", "get_variant",
+    "merge_topk", "merge_topk_batch", "pad_queries", "reshard_index",
+    "score_batch", "sharded_retrieve_adaptive", "suggest_p_max", "topk_jax",
     "topk_numpy",
 ]
 

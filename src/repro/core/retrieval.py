@@ -58,6 +58,95 @@ def merge_topk(parts, k: int) -> tuple[np.ndarray, np.ndarray]:
     return ids[sel], scores[sel].astype(np.float32)
 
 
+def merge_topk_batch(parts, k: int) -> tuple[np.ndarray, np.ndarray]:
+    """Batched stage-2 merge: per-shard ``(ids [B, k_s], scores [B, k_s])``
+    candidate lists -> global ``(ids [B, k], scores [B, k])``.
+
+    The batched counterpart of :func:`merge_topk`: one concatenate along
+    the candidate axis + one row-wise ``argpartition`` serves the whole
+    query batch — the serving engine's ``retrieve_batch`` merge stays a
+    single vectorized pass no matter the fan-in or batch size.
+    """
+    pairs = [(np.asarray(i), np.asarray(s)) for i, s in parts]
+    # batch dim from the materialized pairs — `parts` may be a one-shot
+    # iterable and is already consumed by the comprehension above
+    b = max((i.shape[0] for i, _ in pairs), default=0)
+    pairs = [(i, s) for i, s in pairs if i.size]
+    if k <= 0 or not pairs:
+        return (np.zeros((b, 0), np.int64), np.zeros((b, 0), np.float32))
+    ids = np.concatenate([i.astype(np.int64, copy=False) for i, _ in pairs],
+                         axis=1)
+    sc = np.concatenate([s for _, s in pairs], axis=1).astype(np.float64,
+                                                              copy=False)
+    k = min(k, ids.shape[1])
+    part = np.argpartition(sc, -k, axis=1)[:, -k:]
+    vals = np.take_along_axis(sc, part, axis=1)
+    order = np.argsort(-vals, axis=1, kind="stable")
+    sel = np.take_along_axis(part, order, axis=1)
+    return (np.take_along_axis(ids, sel, axis=1),
+            np.take_along_axis(sc, sel, axis=1).astype(np.float32))
+
+
+def splice_default_docs(cand_vals: jax.Array, cand_ids: jax.Array,
+                        candidates: jax.Array, k: int, n_docs: int, *,
+                        valid: jax.Array | None = None,
+                        doc_limit=None) -> tuple[jax.Array, jax.Array]:
+    """Merge candidate winners with ``k`` DEFAULT documents per query.
+
+    A document outside the candidate set contributes no posting, so its
+    exact raw score is 0 (the §2.1 nonoccurrence shift is a per-query
+    constant added later). Those defaults matter whenever a matched doc
+    scores *below* zero (robertson IDF) or fewer than ``k`` docs match —
+    the full-scan kernel gets this free by touching every doc; here
+    :func:`missing_doc_ids` recovers ``k`` non-candidate ids in
+    O(k log C) without ever scanning ``n_docs``. The single definition of
+    the splice — the host (``ops.bm25_retrieve_gathered``) and sharded
+    (:func:`_device_gathered_topk`) gathered paths must not diverge.
+
+    ``cand_vals``/``cand_ids`` are ``[B, m]`` candidate winners (raw
+    scores); ``candidates`` the sorted candidate table with ``valid``
+    marking real entries (see :func:`missing_doc_ids`); ``doc_limit``
+    (default ``n_docs``, may be traced) masks fabricated ids at/above it
+    to -inf — pass the shard's REAL doc count when arrays are padded.
+    Returns ``(ids [B, k], raw values [B, k])``.
+    """
+    if doc_limit is None:
+        doc_limit = n_docs
+    b = cand_vals.shape[0]
+    miss = missing_doc_ids(candidates, k, n_docs, valid=valid)
+    def_v = jnp.where(miss < doc_limit, 0.0,
+                      jnp.finfo(cand_vals.dtype).min).astype(cand_vals.dtype)
+    all_v = jnp.concatenate(
+        [cand_vals, jnp.broadcast_to(def_v[None], (b, k))], axis=1)
+    all_i = jnp.concatenate(
+        [cand_ids, jnp.broadcast_to(miss[None], (b, k))], axis=1)
+    mvals, midx = jax.lax.top_k(all_v, k)
+    return jnp.take_along_axis(all_i, midx, axis=-1), mvals
+
+
+def missing_doc_ids(candidates: jax.Array, k: int, n_docs: int, *,
+                    valid: jax.Array | None = None) -> jax.Array:
+    """First ``k`` doc ids NOT in a sorted candidate list (the j-th missing
+    element trick, O(k log C)).
+
+    ``candidates`` is sorted ascending over its valid prefix; ``valid``
+    marks real entries (default: ``candidates >= 0``, matching the
+    ``GatheredPostings`` candidate table's -1 padding; the device gather
+    passes ``candidates < INT32_MAX`` instead). ``missing_before[i] =
+    candidates[i] - i`` counts the doc ids below ``candidates[i]`` that
+    are absent; the j-th missing id (0-based) is then
+    ``j + searchsorted(missing_before, j + 1)``. Returned entries ``>=
+    n_docs`` mean fewer than ``k`` ids are missing — callers mask them.
+    """
+    if valid is None:
+        valid = candidates >= 0
+    n = candidates.shape[0]
+    iota = jnp.arange(n, dtype=jnp.int32)
+    miss_before = jnp.where(valid, candidates - iota, n_docs + 1)
+    j = jnp.arange(k, dtype=jnp.int32)
+    return j + jnp.searchsorted(miss_before, j + 1).astype(jnp.int32)
+
+
 @partial(jax.jit, static_argnames=("k",))
 def topk_jax(scores: jax.Array, k: int) -> tuple[jax.Array, jax.Array]:
     """XLA top_k (the paper's preferred backend). Returns (indices, values)."""
@@ -86,9 +175,99 @@ def blockwise_topk(scores: jax.Array, k: int, block: int
     return jnp.take_along_axis(gidx, midx, axis=-1), mvals
 
 
+def _device_gathered_topk(indptr, doc_ids, scores, nonocc, q_tokens,
+                          q_weights, n_docs_true, *, p_max: int, k: int,
+                          n_docs: int):
+    """Shard-local query-driven gather → candidate top-k, all on device.
+
+    The device half of the inverted-index regime (run descriptors computed
+    ON DEVICE from the CSC ``indptr`` — no host round-trip inside the
+    sharded step):
+
+    1. batch-unique token table (``jnp.unique`` with a static size);
+    2. per-token posting-run descriptors ``(start, len)`` from ``indptr``;
+    3. one flattened gather of the runs into a static ``p_max`` budget —
+       work O(Σ df over batch-unique tokens), shared across the B queries
+       instead of per-query like ``score_query``'s ragged gather;
+    4. candidate compaction (``jnp.unique`` over gathered doc ids) and a
+       segment-sum into a ``[p_max, B]`` candidate accumulator — never
+       O(n_docs);
+    5. per-query top-k over candidates + default-document splice (a doc
+       outside the candidate set scores exactly the §2.1 shift; the j-th
+       missing-id trick finds k such ids in O(k log C)).
+
+    ``n_docs`` is the static PADDED per-shard doc count (array sizing);
+    ``n_docs_true`` the shard's real count (traced scalar) — the default
+    splice only fabricates ids below it, so uneven shards never emit
+    phantom padding documents.
+
+    Returns ``(ids [B, kk], scores [B, kk], overflow [] bool)`` with
+    ``kk = min(k, n_docs)``; overflow is True iff the batch's posting
+    demand exceeded the static ``p_max`` bucket (results are then lower
+    bounds — callers retry at a larger bucket). The unique-token table
+    needs no overflow flag: its size is min(B·Q, |V|), an upper bound on
+    the batch's distinct tokens by construction.
+    """
+    b, q = q_tokens.shape
+    u_max = min(b * q, int(indptr.shape[0]) - 1)
+    big = jnp.iinfo(jnp.int32).max
+    kk = min(k, n_docs)
+
+    flat_q = jnp.where(q_tokens >= 0, q_tokens, big).reshape(-1)
+    uniq = jnp.unique(flat_q, size=u_max, fill_value=big)        # sorted
+    valid_u = uniq < big
+    safe_u = jnp.where(valid_u, uniq, 0)
+    starts = indptr[safe_u]
+    lens = jnp.where(valid_u, indptr[safe_u + 1] - starts, 0)    # run descrs
+
+    cum = jnp.cumsum(lens)
+    total = cum[-1]
+    j = jnp.arange(p_max, dtype=jnp.int32)
+    owner = jnp.searchsorted(cum, j, side="right").astype(jnp.int32)
+    owner = jnp.minimum(owner, u_max - 1)
+    off_excl = cum[owner] - lens[owner]
+    pos = starts[owner] + (j - off_excl)
+    ok = j < total
+    g_doc = jnp.where(ok, doc_ids[pos], big)
+    g_sc = jnp.where(ok, scores[pos], 0.0)
+
+    # per-query weight column for each unique token (scatter; pads add 0)
+    qpos = jnp.clip(jnp.searchsorted(uniq, jnp.where(q_tokens >= 0,
+                                                     q_tokens, 0)),
+                    0, u_max - 1)
+    table = jnp.zeros((u_max, b), scores.dtype).at[
+        qpos, jnp.broadcast_to(jnp.arange(b)[:, None], (b, q))
+    ].add(q_weights)
+    contrib = g_sc[:, None] * jnp.take(table, owner, axis=0)     # [p_max, B]
+
+    # candidate compaction: distinct docs ≤ total ≤ p_max when not
+    # overflowing, so c_max = p_max needs no extra overflow condition
+    cand = jnp.unique(g_doc, size=p_max, fill_value=big)
+    slot = jnp.searchsorted(cand, g_doc).astype(jnp.int32)
+    cand_scores = jax.ops.segment_sum(contrib, slot,
+                                      num_segments=p_max + 1)[:p_max]
+    valid_c = cand < big
+    masked = jnp.where(valid_c[:, None], cand_scores,
+                       jnp.finfo(cand_scores.dtype).min)
+    vals, ci = jax.lax.top_k(masked.T, kk)                       # [B, kk]
+    ids = jnp.take(cand, ci)
+
+    # default-doc splice (ids absent from the candidate set, raw score 0);
+    # ids at/past the shard's REAL doc count are padding, masked to -inf
+    ids, mvals = splice_default_docs(vals, ids, cand, kk, n_docs,
+                                     valid=valid_c, doc_limit=n_docs_true)
+
+    valid_qt = q_tokens >= 0
+    shift = jnp.sum(jnp.where(valid_qt,
+                              nonocc[jnp.where(valid_qt, q_tokens, 0)], 0.0)
+                    * q_weights, axis=-1)
+    return ids, mvals + shift[:, None], total > p_max
+
+
 def make_sharded_retrieve(mesh: Mesh, shard_axes: tuple[str, ...], *,
                           p_max: int, k: int, n_docs_per_shard: int,
-                          return_overflow: bool = False):
+                          return_overflow: bool = False,
+                          gathered: bool = False):
     """Build the pod-scale retrieval step: shard-local score+topk, global merge.
 
     The device index arrays are sharded over ``shard_axes`` (leading dim =
@@ -98,29 +277,56 @@ def make_sharded_retrieve(mesh: Mesh, shard_axes: tuple[str, ...], *,
     a third ``[B]`` bool output marks queries whose posting demand exceeded
     ``p_max`` on ANY shard (their scores are lower bounds — mirror of
     ``score_batch(..., return_overflow=True)``).
+
+    ``gathered=True`` swaps the shard-local step for the query-driven
+    device gather (:func:`_device_gathered_topk`): posting-run descriptors
+    from ``indptr``, one batch-shared gather, candidate-compacted
+    accumulation — O(Σ df) instead of a per-query O(p_max)+O(n_docs)
+    segment-sum. The overflow flag is then batch-global (the gather is
+    batch-shared), broadcast to ``[B]`` for a uniform interface;
+    :func:`sharded_retrieve_adaptive` wraps it with larger-bucket retries.
     """
     n_shards = int(np.prod([mesh.shape[a] for a in shard_axes]))
 
     def local_score_topk(idx_arrays, q_tokens, q_weights):
         # idx_arrays leaves have a leading shard dim of size 1 inside shard_map
-        indptr, doc_ids, scores, nonocc, offsets = (x[0] for x in idx_arrays)
+        indptr, doc_ids, scores, nonocc, offsets, counts = (
+            x[0] for x in idx_arrays)
+        if gathered:
+            gidx, vals, over = _device_gathered_topk(
+                indptr, doc_ids, scores, nonocc, q_tokens, q_weights,
+                counts[0], p_max=p_max, k=k, n_docs=n_docs_per_shard)
+            gidx = gidx + offsets.astype(jnp.int32)
+            over = jnp.broadcast_to(over, (q_tokens.shape[0],))
+            return gidx[None], vals[None], over[None]
         dindex = DeviceIndex(indptr, doc_ids, scores, nonocc,
                              n_docs=n_docs_per_shard, doc_offset=0)
         s, over = jax.vmap(
             lambda t, w: score_query(dindex, t, w, p_max=p_max))(
             q_tokens, q_weights)                        # [B, n_local], [B]
+        # docs past the shard's REAL count exist only as stacking padding
+        # (uneven shards): a padded doc would score the bare nonoccurrence
+        # shift and could displace real winners — mask before selecting.
+        local = jnp.arange(s.shape[-1], dtype=jnp.int32)
+        s = jnp.where(local[None, :] < counts[0], s,
+                      jnp.finfo(s.dtype).min)
         vals, local_idx = jax.lax.top_k(s, min(k, n_docs_per_shard))
         gidx = local_idx + offsets.astype(jnp.int32)
         return gidx[None], vals[None], over[None]       # keep shard dim
 
-    spec_idx = tuple(P(shard_axes) for _ in range(5))
+    spec_idx = tuple(P(shard_axes) for _ in range(6))
 
     @jax.jit
     def retrieve(idx_arrays, q_tokens, q_weights):
+        # check_rep: the gathered step's jnp.unique lowers to a scan whose
+        # carry trips shard_map's replication checker on replicated query
+        # operands (a checker false positive) — the computation itself is
+        # shard-local either way.
         gidx, gvals, gover = shard_map(
             local_score_topk, mesh=mesh,
             in_specs=(spec_idx, P(), P()),
             out_specs=(P(shard_axes), P(shard_axes), P(shard_axes)),
+            check_rep=not gathered,
         )(idx_arrays, q_tokens, q_weights)
         # [n_shards, B, k] -> [B, n_shards*k] -> global top-k (the merge)
         b = q_tokens.shape[0]
@@ -135,12 +341,59 @@ def make_sharded_retrieve(mesh: Mesh, shard_axes: tuple[str, ...], *,
     return retrieve
 
 
+def sharded_retrieve_adaptive(mesh: Mesh, shard_axes: tuple[str, ...], *,
+                              k: int, n_docs_per_shard: int,
+                              p_floor: int = 1024, gathered: bool = True):
+    """Adaptive-budget wrapper: overflow becomes a larger-bucket RETRY.
+
+    The static ``p_max`` of :func:`make_sharded_retrieve` silently truncates
+    postings when a batch's Σ df exceeds it — score corruption. This wrapper
+    sizes the budget as power-of-two buckets starting at ``p_floor`` (one
+    compiled variant per bucket, cached here): if the overflow flag fires,
+    the batch re-runs at the next bucket until it fits or the bucket covers
+    the shard's whole posting array (Σ df ≤ nnz always, so that final
+    bucket cannot overflow on the posting budget). Typical traffic settles
+    into one bucket after warmup and never recompiles again.
+
+    Returns ``retrieve(idx_arrays, q_tokens, q_weights) ->
+    (ids [B,k], scores [B,k], p_max_used)``.
+    """
+    from .scoring import bucket_pow2
+
+    cache: dict[int, object] = {}
+    state = {"p": p_floor}    # last successful bucket — the steady state
+
+    def retrieve(idx_arrays, q_tokens, q_weights):
+        nnz_pad = int(idx_arrays[1].shape[-1])
+        cap = bucket_pow2(nnz_pad, floor=p_floor)
+        # start at the last bucket that fit, NOT p_floor: steady-state
+        # traffic above the floor must execute ONCE per call, not once per
+        # smaller bucket (compilation caching alone doesn't buy that).
+        p = min(state["p"], cap)
+        while True:
+            fn = cache.get(p)
+            if fn is None:
+                fn = cache[p] = make_sharded_retrieve(
+                    mesh, shard_axes, p_max=p, k=k,
+                    n_docs_per_shard=n_docs_per_shard,
+                    return_overflow=True, gathered=gathered)
+            ids, vals, over = fn(idx_arrays, q_tokens, q_weights)
+            if p >= cap or not bool(np.any(np.asarray(over))):
+                state["p"] = p
+                return ids, vals, p
+            p = min(p * 2, cap)
+
+    return retrieve
+
+
 def stack_shard_arrays(shards, mesh: Mesh, shard_axes: tuple[str, ...]):
     """Host → device: stack per-shard index arrays padded to common sizes.
 
-    Returns the 5-tuple consumed by ``make_sharded_retrieve`` with every
+    Returns the 6-tuple consumed by ``make_sharded_retrieve`` with every
     leaf sharded over ``shard_axes`` on its leading (shard) dim, plus the
-    static per-shard doc count.
+    static (padded) per-shard doc count. The last leaf carries each
+    shard's REAL doc count so the retrieval step can mask the stacking
+    padding (uneven shards) instead of scoring phantom documents.
     """
     n = len(shards)
     v = shards[0].n_vocab
@@ -151,6 +404,7 @@ def stack_shard_arrays(shards, mesh: Mesh, shard_axes: tuple[str, ...]):
     scores = np.zeros((n, nnz_pad), np.float32)
     nonocc = np.zeros((n, v), np.float32)
     offsets = np.zeros((n, 1), np.int32)
+    counts = np.zeros((n, 1), np.int32)
     for i, s in enumerate(shards):
         indptr[i] = s.indptr
         doc_ids[i, : s.doc_ids.size] = s.doc_ids
@@ -158,7 +412,8 @@ def stack_shard_arrays(shards, mesh: Mesh, shard_axes: tuple[str, ...]):
         scores[i, : s.scores.size] = s.scores
         nonocc[i] = s.nonoccurrence
         offsets[i, 0] = s.doc_offset
+        counts[i, 0] = s.doc_lens.size
     sharding = NamedSharding(mesh, P(shard_axes))
     arrs = tuple(jax.device_put(a, sharding)
-                 for a in (indptr, doc_ids, scores, nonocc, offsets))
+                 for a in (indptr, doc_ids, scores, nonocc, offsets, counts))
     return arrs, ndoc_pad

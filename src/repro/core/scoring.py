@@ -28,6 +28,9 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
+# re-exported here (budget logic's public home); defined next to the other
+# static-shape/bucketing machinery in the sparse layout module
+from ..sparse.block_csr import bucket_pow2  # noqa: F401
 from .index import BM25Index
 
 
@@ -66,25 +69,71 @@ class DeviceIndex:
         )
 
 
-def pad_queries(query_tokens: list[np.ndarray], q_max: int
-                ) -> tuple[np.ndarray, np.ndarray]:
+def pad_queries(query_tokens: list[np.ndarray], q_max: int, *,
+                return_uniq: bool = False):
     """Unique-ify + pad a batch of tokenized queries.
 
     Returns ``tokens [B, q_max] int32`` (pad = -1) and
     ``weights [B, q_max] float32`` (occurrence counts; 0 = pad). Queries with
     more than ``q_max`` unique tokens keep the highest-count tokens.
+
+    Vectorized: ONE flattened ``lexsort`` over the whole batch replaces the
+    per-query ``np.unique`` loop (this sits on the serving hot path of every
+    scorer). Unique (query, token) pairs are the runs of the sorted flat
+    stream; within-query ranks come from run bookkeeping, never a Python
+    loop. Semantics match the loop exactly, including the truncation order
+    (count-descending, token-ascending ties) for queries over ``q_max``.
+
+    ``return_uniq=True`` appends the batch's sorted unique tokens as a
+    third output, derived from the (much smaller) run set instead of
+    re-sorting the raw stream — the device scorers need exactly this table
+    and would otherwise pay a second full sort per batch. Note it covers
+    ALL input tokens, including any a truncated query dropped.
     """
     b = len(query_tokens)
     toks = np.full((b, q_max), -1, dtype=np.int32)
     wts = np.zeros((b, q_max), dtype=np.float32)
-    for i, q in enumerate(query_tokens):
-        q = q[q >= 0]
-        uniq, counts = np.unique(q, return_counts=True)
-        if uniq.size > q_max:
-            keep = np.argsort(-counts, kind="stable")[:q_max]
-            uniq, counts = uniq[keep], counts[keep]
-        toks[i, : uniq.size] = uniq
-        wts[i, : uniq.size] = counts
+    no_uniq = np.zeros(0, dtype=np.int64)
+    if b == 0:
+        return (toks, wts, no_uniq) if return_uniq else (toks, wts)
+    lens = np.fromiter((q.size for q in query_tokens), dtype=np.int64,
+                       count=b)
+    if lens.sum() == 0:
+        return (toks, wts, no_uniq) if return_uniq else (toks, wts)
+    flat = np.concatenate(query_tokens).astype(np.int64, copy=False)
+    qi = np.repeat(np.arange(b, dtype=np.int64), lens)
+    keep = flat >= 0
+    flat, qi = flat[keep], qi[keep]
+    if flat.size == 0:
+        return (toks, wts, no_uniq) if return_uniq else (toks, wts)
+    order = np.lexsort((flat, qi))
+    flat, qi = flat[order], qi[order]
+    # runs of equal (query, token) = the per-query unique tokens + counts
+    new = np.empty(flat.size, dtype=bool)
+    new[0] = True
+    new[1:] = (flat[1:] != flat[:-1]) | (qi[1:] != qi[:-1])
+    run = np.flatnonzero(new)
+    counts = np.diff(np.append(run, flat.size))
+    u_tok, u_qi = flat[run], qi[run]
+    # within-query rank in ascending-token order
+    grp_new = np.empty(u_qi.size, dtype=bool)
+    grp_new[0] = True
+    grp_new[1:] = u_qi[1:] != u_qi[:-1]
+    grp_start = np.flatnonzero(grp_new)
+    grp_sizes = np.diff(np.append(grp_start, u_qi.size))
+    col_asc = np.arange(u_qi.size) - np.repeat(grp_start, grp_sizes)
+    # within-query rank in (count-desc, token-asc) order — the loop's
+    # ``argsort(-counts, kind="stable")`` truncation policy
+    order2 = np.lexsort((col_asc, -counts, u_qi))
+    rank_desc = np.empty(u_qi.size, dtype=np.int64)
+    rank_desc[order2] = np.arange(u_qi.size) - np.repeat(grp_start, grp_sizes)
+    over = np.repeat(grp_sizes > q_max, grp_sizes)
+    col = np.where(over, rank_desc, col_asc)
+    sel = col < q_max
+    toks[u_qi[sel], col[sel]] = u_tok[sel].astype(np.int32)
+    wts[u_qi[sel], col[sel]] = counts[sel].astype(np.float32)
+    if return_uniq:
+        return toks, wts, np.unique(u_tok)
     return toks, wts
 
 
@@ -165,11 +214,39 @@ def query_posting_budget(index: BM25Index, q_tokens: np.ndarray) -> int:
     return int((np.where(q_tokens >= 0, df[safe], 0)).sum(axis=-1).max())
 
 
+def batch_posting_budget(index: BM25Index, q_tokens: np.ndarray) -> int:
+    """Exact Σ df over the BATCH's unique tokens — the gathered path's work.
+
+    The gather materializes each unique token's posting run once for the
+    whole batch, so its budget is Σ df(unique(batch)), not the per-query
+    maximum :func:`query_posting_budget` sizes.
+    """
+    uniq = np.unique(q_tokens[q_tokens >= 0])
+    df = np.diff(index.indptr)
+    return int(df[uniq].sum()) if uniq.size else 0
+
+
 def suggest_p_max(index: BM25Index, q_max: int, *, quantile: float = 1.0,
                   tile: int = 1024) -> int:
-    """Static budget heuristic: q_max × quantile(df), rounded to a tile."""
+    """Static budget heuristic: q_max × weighted-quantile(df), tile-rounded.
+
+    The quantile is **df-weighted**: realistic query tokens are drawn
+    roughly ∝ df (head tokens dominate traffic), so the budget question is
+    "how big is the posting run of the q-quantile *query token*", not of
+    the q-quantile *distinct vocabulary entry*. An unweighted quantile over
+    distinct tokens wildly undersizes on Zipfian vocabularies where the
+    tail is millions of df=1 tokens but queries hit the head. At
+    ``quantile=1.0`` both definitions degenerate to ``max(df)`` (the
+    default stays a safe upper bound).
+    """
     df = np.diff(index.indptr)
     df = df[df > 0]
-    per_tok = float(np.quantile(df, quantile)) if df.size else 1.0
+    if df.size:
+        sdf = np.sort(df)
+        cum = np.cumsum(sdf, dtype=np.float64)
+        i = int(np.searchsorted(cum, quantile * cum[-1], side="left"))
+        per_tok = float(sdf[min(i, sdf.size - 1)])
+    else:
+        per_tok = 1.0
     budget = int(q_max * per_tok)
     return max(tile, ((budget + tile - 1) // tile) * tile)

@@ -6,14 +6,19 @@ the tests pin every kernel against (interpret mode on CPU).
 
 Kernels:
   bm25_block_score  — the paper's hot loop as membership-GEMM + scatter-GEMM
+                      (full-scan regime: O(nnz) per query batch)
+  bm25_gather_score — query-driven gather→score→top-k (inverted-index
+                      regime: O(Σ df(qᵢ)) per query batch)
   block_segment_sum — shared scatter-add substrate (GNN / bags / scoring)
   embedding_bag     — HBM row-DMA gather + in-register weighted reduce
   blockwise_topk    — per-block iterative-max selection (2-stage top-k)
 """
 
-from .ops import (bm25_retrieve_blocked, bm25_score_blocked, embedding_bag,
-                  segment_sum_blocked, topk)
+from .ops import (bm25_retrieve_blocked, bm25_retrieve_gathered,
+                  bm25_score_blocked, embedding_bag, segment_sum_blocked,
+                  topk)
 from . import ref
 
-__all__ = ["bm25_retrieve_blocked", "bm25_score_blocked", "embedding_bag",
-           "segment_sum_blocked", "topk", "ref"]
+__all__ = ["bm25_retrieve_blocked", "bm25_retrieve_gathered",
+           "bm25_score_blocked", "embedding_bag", "segment_sum_blocked",
+           "topk", "ref"]

@@ -30,6 +30,19 @@ Two entry points share the scoring tile:
   ``blockwise_topk`` reduction run column-wise) and only ``[nb, k, B]``
   ids+values ever reach HBM — ``block_size/k`` less traffic, and no second
   kernel launch to re-read the scores.
+
+Retrieval regimes — this file is the FULL-SCAN one. Its grid walks every
+posting tile in the shard per query batch: O(nnz) compares/scatters
+regardless of the query, which buys perfect streaming locality and zero
+per-query layout work. That trade only wins when the batch is dense enough
+that Σ df(q) approaches nnz (every tile would be gathered anyway — e.g.
+huge batches of head-token queries, or vocabularies so small every token
+matches most docs). For everything else the QUERY-GATHERED regime
+(``bm25_gather_score.py``) does O(Σ df(q)) work — it slices only the query
+tokens' posting runs and scatters into a candidate-sized accumulator — and
+its advantage over the full scan grows linearly with corpus size at fixed
+query df. ``serve.retrieval_engine`` exposes both (``scorer="blocked"`` vs
+``scorer="gathered"``).
 """
 
 from __future__ import annotations

@@ -1,0 +1,125 @@
+"""Pallas TPU kernel: query-driven gather→score→top-k (the O(Σ df) path).
+
+The fused full-scan kernel (``bm25_block_score_topk``) walks EVERY posting
+tile in the shard per query batch — O(nnz) compares and scatters, which
+quietly re-introduced the corpus-size dependence the paper's eager scoring
+removed. This kernel restores the inverted-index asymptotics on device:
+
+* the host (or a device prologue) slices only the query tokens' posting
+  runs out of the CSC layout — O(Σ df(qᵢ)) postings over the batch's
+  unique tokens (``sparse.block_csr.gather_posting_runs``);
+* gathered postings arrive candidate-compacted: doc ids are mapped to dense
+  slots ``0..n_candidates-1`` (sorted-unique order), chunked so each chunk's
+  slots fit a ``[acc_block, B]`` VMEM accumulator — the accumulator is sized
+  to the *gathered candidate set*, not the shard's document count;
+* scoring reuses ``_score_tile``'s membership/one-hot machinery unchanged;
+  the final posting tile of each chunk masks padding slots (``candidates ==
+  -1``) and runs ``select_topk`` column-wise, translating winning slots back
+  to **global doc ids** in-register via the chunk's candidate table — the
+  kernel emits ``[n_chunks, k, B]`` (values, global ids) per launch and the
+  caller's merge needs no block-offset arithmetic.
+
+Regime choice (see also ``bm25_block_score.py``): full-scan wins when the
+query batch is so large/dense that Σ df approaches nnz (every tile would be
+gathered anyway — then the streamed layout's perfect locality is free);
+query-gathered wins everywhere else, and the gap grows linearly with corpus
+size at fixed query df. ``serve.retrieval_engine`` picks via ``scorer=``.
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from .blockwise_topk import select_topk
+from .bm25_block_score import _score_tile
+
+
+def _gather_kernel(tok_ref, loc_ref, sc_ref, uniq_ref, w_ref, cand_ref,
+                   vals_ref, gid_ref, acc_ref, *, acc_block: int, k: int):
+    """One (chunk, posting-tile) grid step of the gathered fused path."""
+    pj = pl.program_id(1)
+
+    @pl.when(pj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += _score_tile(tok_ref, loc_ref, sc_ref, uniq_ref, w_ref,
+                                block_size=acc_block)
+
+    @pl.when(pj == pl.num_programs(1) - 1)
+    def _reduce():
+        acc = acc_ref[...]                                   # [acc_block, B]
+        cand = cand_ref[0, :]                                # [acc_block]
+        # padding slots (no candidate doc) must not outrank real negative
+        # scores — same contract as the full-scan kernel's tail-doc mask,
+        # but driven by the candidate table instead of a static n_docs.
+        acc = jnp.where((cand >= 0)[:, None], acc,
+                        jnp.finfo(acc.dtype).min)
+
+        def emit(i, m, am):                                  # m, am: [B]
+            b = m.shape[0]
+            gid = jnp.take(cand, am)                         # slot -> doc id
+            pl.store(vals_ref, (pl.ds(0, 1), pl.ds(i, 1), pl.ds(0, b)),
+                     m[None, None, :])
+            pl.store(gid_ref, (pl.ds(0, 1), pl.ds(i, 1), pl.ds(0, b)),
+                     gid[None, None, :])
+
+        select_topk(acc, k, axis=0, emit=emit)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("acc_block", "k", "tile_p", "interpret"),
+)
+def bm25_gather_score_topk(token_ids: jax.Array, slot_ids: jax.Array,
+                           scores: jax.Array, uniq_tokens: jax.Array,
+                           weights: jax.Array, candidates: jax.Array, *,
+                           acc_block: int, k: int, tile_p: int = 512,
+                           interpret: bool | None = None
+                           ) -> tuple[jax.Array, jax.Array]:
+    """Gathered postings -> (values, GLOBAL doc ids) ``[n_chunks, k, B]``.
+
+    Inputs are the :class:`~repro.sparse.block_csr.GatheredPostings` layout:
+    ``[n_chunks, p_pad]`` posting tiles whose ``slot_ids`` index a
+    ``[acc_block, B]`` VMEM accumulator, plus the ``[n_chunks, acc_block]``
+    candidate table mapping slots back to global doc ids (-1 = pad). Work is
+    O(Σ df · B) — independent of both corpus size and total nnz.
+    """
+    nc, p = token_ids.shape
+    u, b = weights.shape
+    assert p % tile_p == 0, (p, tile_p)
+    assert k <= acc_block, (k, acc_block)
+    assert candidates.shape == (nc, acc_block), (candidates.shape, nc,
+                                                 acc_block)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    grid = (nc, p // tile_p)
+    return pl.pallas_call(
+        functools.partial(_gather_kernel, acc_block=acc_block, k=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, tile_p), lambda i, j: (i, j)),      # token_ids
+            pl.BlockSpec((1, tile_p), lambda i, j: (i, j)),      # slot_ids
+            pl.BlockSpec((1, tile_p), lambda i, j: (i, j)),      # scores
+            pl.BlockSpec((u,), lambda i, j: (0,)),               # uniq table
+            pl.BlockSpec((u, b), lambda i, j: (0, 0)),           # weights
+            pl.BlockSpec((1, acc_block), lambda i, j: (i, 0)),   # candidates
+        ],
+        out_specs=(
+            pl.BlockSpec((1, k, b), lambda i, j: (i, 0, 0)),     # values
+            pl.BlockSpec((1, k, b), lambda i, j: (i, 0, 0)),     # global ids
+        ),
+        out_shape=(
+            jax.ShapeDtypeStruct((nc, k, b), weights.dtype),
+            jax.ShapeDtypeStruct((nc, k, b), jnp.int32),
+        ),
+        scratch_shapes=[pltpu.VMEM((acc_block, b), weights.dtype)],
+        interpret=interpret,
+        name="bm25_gather_score_topk",
+    )(token_ids, slot_ids, scores, uniq_tokens, weights, candidates)

@@ -13,8 +13,10 @@ import functools
 import jax
 import jax.numpy as jnp
 
+from ..core.retrieval import splice_default_docs
 from .blockwise_topk import blockwise_topk_kernel
 from .bm25_block_score import bm25_block_score, bm25_block_score_topk
+from .bm25_gather_score import bm25_gather_score_topk
 from .block_segment_sum import block_segment_sum
 from .embedding_bag import embedding_bag_kernel
 
@@ -67,6 +69,42 @@ def bm25_retrieve_blocked(token_ids: jax.Array, local_doc: jax.Array,
     flat_i = jnp.transpose(gids, (2, 0, 1)).reshape(b, nb * kb)
     mvals, midx = jax.lax.top_k(flat_v, min(k, n_docs, nb * kb))
     ids = jnp.take_along_axis(flat_i, midx, axis=-1)
+    return ids, mvals + nonocc_shift[:, None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("acc_block", "k", "n_docs", "tile_p"))
+def bm25_retrieve_gathered(token_ids: jax.Array, slot_ids: jax.Array,
+                           scores: jax.Array, uniq_tokens: jax.Array,
+                           weights: jax.Array, candidates: jax.Array,
+                           nonocc_shift: jax.Array, *, acc_block: int,
+                           k: int, n_docs: int, tile_p: int = 512
+                           ) -> tuple[jax.Array, jax.Array]:
+    """Query-gathered end-to-end retrieval: O(Σ df) postings -> [B, k].
+
+    Stage 1 is the gathered fused kernel: per-chunk ``[nc, k, B]`` winners
+    carrying GLOBAL doc ids straight out of the candidate-sized VMEM
+    accumulator. Stage 2 merges the ``nc·k`` candidates per query and
+    splices in **default documents**: a document outside the candidate set
+    contributes no posting, so its exact score is the per-query
+    nonoccurrence shift (= raw 0 before the shift). Those defaults matter
+    whenever a matched doc scores *below* zero (robertson IDF) or fewer
+    than ``k`` docs match — the full-scan kernel got this for free by
+    touching every doc; here the j-th-missing-id trick recovers it in
+    O(k log C) without ever scanning ``n_docs``. The §2.1 shift is added
+    after the merge (rank-invariant per query), so returned scores are
+    exact, not rank-equivalent.
+    """
+    kk = min(k, n_docs)
+    kb = min(kk, acc_block)
+    vals, gids = bm25_gather_score_topk(
+        token_ids, slot_ids, scores, uniq_tokens, weights, candidates,
+        acc_block=acc_block, k=kb, tile_p=tile_p)
+    nc, _, b = vals.shape
+    flat_v = jnp.transpose(vals, (2, 0, 1)).reshape(b, nc * kb)
+    flat_i = jnp.transpose(gids, (2, 0, 1)).reshape(b, nc * kb)
+    ids, mvals = splice_default_docs(flat_v, flat_i,
+                                     candidates.reshape(-1), kk, n_docs)
     return ids, mvals + nonocc_shift[:, None]
 
 

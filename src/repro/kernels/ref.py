@@ -59,6 +59,28 @@ def bm25_block_topk_ref(token_ids: jax.Array, local_doc: jax.Array,
             jnp.swapaxes(idx, 1, 2).astype(jnp.int32))         # [nb, k, B]
 
 
+def bm25_gather_topk_ref(token_ids: jax.Array, slot_ids: jax.Array,
+                         scores: jax.Array, uniq_tokens: jax.Array,
+                         weights: jax.Array, candidates: jax.Array, *,
+                         acc_block: int, k: int
+                         ) -> tuple[jax.Array, jax.Array]:
+    """Oracle for the gathered fused kernel (``bm25_gather_score_topk``).
+
+    Dense per-chunk candidate-slot scores, mask padding slots (candidate id
+    -1) to -inf, per-chunk top-k, then translate winning slots to global doc
+    ids through the chunk's candidate table.
+    """
+    dense = bm25_block_score_ref(token_ids, slot_ids, scores, uniq_tokens,
+                                 weights, block_size=acc_block)
+    masked = jnp.where((candidates >= 0)[:, :, None], dense,
+                       jnp.finfo(dense.dtype).min)
+    vals, slots = jax.lax.top_k(jnp.swapaxes(masked, 1, 2), k)  # [nc, B, k]
+    gids = jnp.take_along_axis(candidates[:, None, :]
+                               .repeat(vals.shape[1], axis=1), slots, axis=2)
+    return (jnp.swapaxes(vals, 1, 2),
+            jnp.swapaxes(gids, 1, 2).astype(jnp.int32))         # [nc, k, B]
+
+
 def block_segment_sum_ref(values: jax.Array, segment_ids: jax.Array,
                           *, num_segments: int) -> jax.Array:
     """[nb, P, D] values + [nb, P] local ids -> [nb, num_segments, D].

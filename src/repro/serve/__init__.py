@@ -1,7 +1,8 @@
 """Serving stack: sharded retrieval engine with hedging, LM decode engine."""
 
-from .retrieval_engine import BlockedRetriever, RetrievalEngine, ShardRuntime
+from .retrieval_engine import (BlockedRetriever, GatheredRetriever,
+                               RetrievalEngine, ShardRuntime)
 from .decode_engine import DecodeEngine
 
-__all__ = ["BlockedRetriever", "RetrievalEngine", "ShardRuntime",
-           "DecodeEngine"]
+__all__ = ["BlockedRetriever", "GatheredRetriever", "RetrievalEngine",
+           "ShardRuntime", "DecodeEngine"]

@@ -13,11 +13,19 @@ layer over document shards, and the operational concerns become:
   re-slicing, ``core.index.reshard_index``) when the pool grows/shrinks.
 
 * device offload — each ``ShardRuntime`` scores either host-side
-  (``scorer="scipy"``, the paper's CSC slice+sum) or through the fused
-  Pallas score→top-k pipeline (``scorer="blocked"``,
-  :class:`BlockedRetriever`): postings are re-blocked once at runtime
-  build, and every query runs gather→accumulate→per-block-top-k→merge on
-  device without materializing the dense score vector.
+  (``scorer="scipy"``, the paper's CSC slice+sum) or on device through one
+  of the two fused Pallas regimes: ``scorer="blocked"``
+  (:class:`BlockedRetriever`, full-scan — streams every posting tile, wins
+  when Σ df approaches nnz) or ``scorer="gathered"``
+  (:class:`GatheredRetriever`, query-driven — gathers only the query
+  tokens' posting runs, O(Σ df) work independent of corpus size, wins
+  everywhere else). Both re-block/gather without ever materializing the
+  dense score vector.
+
+* batching — ``retrieve_batch`` runs B queries through ONE kernel launch
+  per shard (the batch dimension is free on the MXU), amortizing launch
+  and membership-table cost across the batch; per-query ``retrieve``
+  stays for latency-sensitive single queries.
 
 ``ShardRuntime`` is process-local here (threads simulate shard servers; a
 ``delay`` hook lets tests inject stragglers), but the engine logic —
@@ -39,13 +47,91 @@ from ..core.reference import ScipyBM25
 from ..core.retrieval import merge_topk
 
 
-class BlockedRetriever:
-    """Fused-kernel scorer for one shard (drop-in for :class:`ScipyBM25`).
+def _empty_batch(n_queries: int):
+    ids = np.zeros((n_queries, 0), dtype=np.int64)
+    scores = np.zeros((n_queries, 0), dtype=np.float32)
+    return ids, scores
+
+
+class _DeviceRetrieverBase:
+    """Shared host half of the device scorers (query packing + warmup).
+
+    Subclasses set ``index``, ``n_docs``, ``q_max`` in ``__init__`` and
+    implement ``retrieve_batch``; the packing helper and the single-query /
+    warmup conveniences live here so the bucketing and no-truncation
+    invariants have exactly ONE implementation.
+    """
+
+    def _pack_batch(self, query_tokens):
+        """Batch -> padded query tables, every device dim pow2-bucketed.
+
+        Three shape dimensions are bucketed so jit recompiles stay
+        O(log demand) each, none silently truncating:
+
+        * batch ``B`` — padded with empty queries (a ragged client batch
+          must not trigger a fresh multi-second compile per distinct size);
+        * per-query width — bucketed from the longest query (width ≥ query
+          length ≥ its unique count, so ``pad_queries`` never truncates,
+          unlike a fixed q_max that would quietly keep only the
+          highest-count tokens of a long query);
+        * unique-token table ``u_max`` — bucketed from the batch's actual
+          distinct-token count.
+
+        The token stream is sorted ONCE (``pad_queries``'s lexsort); the
+        batch-unique table comes from its run set (``return_uniq``) and is
+        reused for the pack table and the posting-run gather.
+
+        Returns ``(b_true, uniq_batch, uniq_tab [u], weights [u, B],
+        shift [B])`` — callers slice device outputs back to ``b_true``.
+        """
+        from ..core.scoring import bucket_pow2, pad_queries
+        from ..sparse.block_csr import (pack_query_batch,
+                                        query_nonoccurrence_shift)
+        qs = [np.asarray(q).ravel() for q in query_tokens]
+        b_true = len(qs)
+        b_pad = bucket_pow2(max(b_true, 1), floor=8)
+        qs += [np.zeros(0, np.int32)] * (b_pad - b_true)
+        width = bucket_pow2(max((q.size for q in qs), default=1) or 1,
+                            floor=self.q_max)
+        toks, wts, uniq_batch = pad_queries(qs, width, return_uniq=True)
+        u_max = bucket_pow2(max(uniq_batch.size, 1), floor=self.q_max)
+        uniq_tab, weights = pack_query_batch(toks, wts, u_max=u_max,
+                                             uniq=uniq_batch)
+        shift = query_nonoccurrence_shift(self.index.nonoccurrence, toks,
+                                          wts)
+        return b_true, uniq_batch, uniq_tab, weights, shift
+
+    def warmup(self, *, k: int) -> None:
+        """Compile the floor-bucket retrieve path at engine build.
+
+        The compiled-fn cache per (bucket..., k) is jax.jit's own
+        static-arg/shape cache — the power-of-two bucketing in
+        ``_pack_batch`` is what keys it to O(log demand) entries; this call
+        pre-populates the floor buckets (B ≤ 8, width/u_max ≤ q_max floor)
+        so typical first live queries never pay tracing+compilation; bigger
+        batches pay one compile per pow2 bucket, then never again.
+        """
+        if self.n_docs == 0 or k <= 0:
+            return
+        q = np.zeros(1, dtype=np.int32)
+        self.retrieve_batch([q], min(k, self.n_docs))
+
+    def retrieve(self, query_tokens: np.ndarray, k: int
+                 ) -> tuple[np.ndarray, np.ndarray]:
+        ids, vals = self.retrieve_batch([np.asarray(query_tokens)], k)
+        return ids[0], vals[0]
+
+
+class BlockedRetriever(_DeviceRetrieverBase):
+    """Full-scan fused-kernel scorer (drop-in for :class:`ScipyBM25`).
 
     Blocks the shard's postings once (``sparse.block_csr``) and serves
-    ``retrieve`` via ``kernels.ops.bm25_retrieve_blocked``: the dense
-    per-document score vector never exists anywhere — scores stream from
-    the posting tiles into a VMEM accumulator and leave as ``[k]`` winners.
+    ``retrieve``/``retrieve_batch`` via ``kernels.ops.bm25_retrieve_blocked``:
+    the dense per-document score vector never exists anywhere — scores
+    stream from the posting tiles into a VMEM accumulator and leave as
+    ``[k]`` winners. Work is O(nnz) per batch regardless of the query —
+    prefer :class:`GatheredRetriever` unless batches are dense enough that
+    Σ df ≈ nnz (see the module docstring's regime notes).
     """
 
     def __init__(self, index: BM25Index, *, block_size: int = 512,
@@ -64,36 +150,86 @@ class BlockedRetriever:
         self._loc = jnp.asarray(bp.local_doc)
         self._sc = jnp.asarray(bp.scores)
 
-    def retrieve(self, query_tokens: np.ndarray, k: int
-                 ) -> tuple[np.ndarray, np.ndarray]:
+    def retrieve_batch(self, query_tokens: Sequence[np.ndarray], k: int
+                       ) -> tuple[np.ndarray, np.ndarray]:
+        """B queries -> (ids [B, k], scores [B, k]) in ONE kernel launch."""
         import jax.numpy as jnp
 
-        from ..core.scoring import pad_queries
         from ..kernels import ops
-        from ..sparse.block_csr import (pack_query_batch,
-                                        query_nonoccurrence_shift)
         if self.n_docs == 0 or k <= 0:           # empty shard post-rescale
-            return (np.zeros(0, dtype=np.int64), np.zeros(0, np.float32))
-        query_tokens = np.asarray(query_tokens)
-        # size the unique-token table to THIS query (bucketed to limit
-        # recompiles) — a fixed q_max would silently truncate long queries
-        # to their highest-count tokens, unlike the exact scipy scorer.
-        n_uniq = np.unique(query_tokens[query_tokens >= 0]).size
-        q_max = max(self.q_max, -(-max(n_uniq, 1) // 32) * 32)
-        toks, wts = pad_queries([query_tokens], q_max)
-        uniq, weights = pack_query_batch(toks, wts, u_max=q_max)
-        shift = query_nonoccurrence_shift(self.index.nonoccurrence, toks,
-                                          wts)
+            return _empty_batch(len(query_tokens))
+        b, _, uniq, weights, shift = self._pack_batch(query_tokens)
         ids, vals = ops.bm25_retrieve_blocked(
             self._tok, self._loc, self._sc, jnp.asarray(uniq),
             jnp.asarray(weights), jnp.asarray(shift),
             block_size=self.block_size, n_docs=self.n_docs,
             k=min(k, self.n_docs), tile_p=self.tile_p)
-        return (np.asarray(ids[0]).astype(np.int64)
-                + self.index.doc_offset, np.asarray(vals[0]))
+        return (np.asarray(ids[:b]).astype(np.int64) + self.index.doc_offset,
+                np.asarray(vals[:b]))
 
 
-_SCORERS = {"scipy": ScipyBM25, "blocked": BlockedRetriever}
+class GatheredRetriever(_DeviceRetrieverBase):
+    """Query-driven gather→score→top-k scorer — the O(Σ df) device regime.
+
+    The inverted-index asymptotics of the paper, restored on device: from
+    the CSC ``indptr`` compute the batch's posting-run descriptors, gather
+    ONLY those runs into candidate-compacted tiles
+    (``sparse.block_csr.gather_posting_runs``) and push them through
+    ``kernels.ops.bm25_retrieve_gathered`` — work O(Σ df(q)·B), independent
+    of corpus size and nnz, vs the full-scan :class:`BlockedRetriever`'s
+    O(nnz·B).
+
+    Budgets are **adaptive**: posting tiles and the candidate chunk count
+    are sized from the batch's ACTUAL Σ df / candidate count, rounded up to
+    power-of-two buckets (``core.scoring.bucket_pow2``) so recompiles stay
+    O(log max-demand). Because shapes are sized from actuals, the host path
+    cannot overflow — there is nothing to truncate silently; a demand
+    spike just lands in a larger bucket (one extra compile, exact scores).
+
+    ``acc_block`` (the per-chunk accumulator height) stays SMALL and fixed:
+    the kernel's one-hot scatter costs ``acc_block`` MACs per posting, so
+    large candidate sets are handled by MORE chunks, keeping total work
+    linear in Σ df (see ``sparse.block_csr.GatheredPostings``).
+    """
+
+    def __init__(self, index: BM25Index, *, tile: int = 512,
+                 acc_block: int = 512, q_max: int = 32):
+        self.index = index
+        self.tile = tile
+        self.q_max = q_max                       # unique-table bucket floor
+        self.acc_block = acc_block               # candidate chunk height
+        self.n_docs = int(index.doc_lens.size)
+
+    def retrieve_batch(self, query_tokens: Sequence[np.ndarray], k: int
+                       ) -> tuple[np.ndarray, np.ndarray]:
+        """B queries -> (ids [B, k], scores [B, k]), one gathered launch."""
+        import jax.numpy as jnp
+
+        from ..core.scoring import bucket_pow2
+        from ..kernels import ops
+        from ..sparse.block_csr import gather_posting_runs
+        if self.n_docs == 0 or k <= 0:           # empty shard post-rescale
+            return _empty_batch(len(query_tokens))
+        b, uniq_batch, uniq_tab, weights, shift = \
+            self._pack_batch(query_tokens)
+        kk = min(k, self.n_docs)
+        # chunk height grows only if k outruns it (kernel needs k ≤
+        # acc_block); posting/chunk dims bucket inside the gather
+        acc_block = bucket_pow2(kk, floor=self.acc_block)
+        gp = gather_posting_runs(self.index, uniq_batch,
+                                 acc_block=acc_block, tile=self.tile)
+        ids, vals = ops.bm25_retrieve_gathered(
+            jnp.asarray(gp.token_ids), jnp.asarray(gp.slot_ids),
+            jnp.asarray(gp.scores), jnp.asarray(uniq_tab),
+            jnp.asarray(weights), jnp.asarray(gp.candidates),
+            jnp.asarray(shift), acc_block=gp.acc_block, k=kk,
+            n_docs=self.n_docs, tile_p=min(self.tile, gp.p_pad))
+        return (np.asarray(ids[:b]).astype(np.int64) + self.index.doc_offset,
+                np.asarray(vals[:b]))
+
+
+_SCORERS = {"scipy": ScipyBM25, "blocked": BlockedRetriever,
+            "gathered": GatheredRetriever}
 
 
 @dataclass
@@ -102,7 +238,7 @@ class ShardRuntime:
 
     index: BM25Index
     delay: Callable[[], float] | None = None     # test hook: seconds to sleep
-    scorer: str = "scipy"                        # "scipy" | "blocked"
+    scorer: str = "scipy"                        # "scipy"|"blocked"|"gathered"
 
     def __post_init__(self):
         if self.scorer not in _SCORERS:
@@ -110,11 +246,33 @@ class ShardRuntime:
                              f"available: {sorted(_SCORERS)}")
         self._scorer = _SCORERS[self.scorer](self.index)
 
+    def warmup(self, k: int) -> None:
+        """Pre-compile the device scorer so query #1 skips compilation."""
+        fn = getattr(self._scorer, "warmup", None)
+        if fn is not None:
+            fn(k=k)
+
     def topk(self, query_tokens: np.ndarray, k: int
              ) -> tuple[np.ndarray, np.ndarray]:
         if self.delay is not None:
             time.sleep(self.delay())
         return self._scorer.retrieve(query_tokens, k)
+
+    def topk_batch(self, query_batch: Sequence[np.ndarray], k: int
+                   ) -> tuple[np.ndarray, np.ndarray]:
+        """[B queries] -> (ids [B, k'], scores [B, k']) for this shard."""
+        if self.delay is not None:
+            time.sleep(self.delay())
+        fn = getattr(self._scorer, "retrieve_batch", None)
+        if fn is not None:                       # one kernel launch for B
+            return fn(query_batch, k)
+        parts = [self._scorer.retrieve(q, k) for q in query_batch]
+        kk = min((p[0].size for p in parts), default=0)
+        ids = np.stack([p[0][:kk] for p in parts]) if parts else \
+            np.zeros((0, 0), np.int64)
+        sc = np.stack([p[1][:kk] for p in parts]) if parts else \
+            np.zeros((0, 0), np.float32)
+        return ids.astype(np.int64), sc.astype(np.float32)
 
 
 @dataclass
@@ -131,11 +289,12 @@ class RetrievalEngine:
                  deadline_s: float = 0.5, quorum: float = 0.75,
                  max_workers: int = 8,
                  delay: Callable[[int], Callable[[], float] | None] = None,
-                 scorer: str = "scipy"):
+                 scorer: str = "scipy", warmup: bool = True):
         self.k = k
         self.deadline_s = deadline_s
         self.quorum = quorum
         self.scorer = scorer
+        self.warmup = warmup
         self._delay_factory = delay
         self._pool = ThreadPoolExecutor(max_workers=max_workers)
         self._build_runtimes(list(shards))
@@ -148,6 +307,12 @@ class RetrievalEngine:
                          scorer=self.scorer)
             for i, s in enumerate(shards)
         ]
+        if self.warmup:
+            # compile the device scorers at BUILD time (and after every
+            # rescale) so the first live query never pays jit compilation —
+            # on the floor buckets, which absorb typical traffic.
+            for rt in self.runtimes:
+                rt.warmup(self.k)
 
     # -- control plane ------------------------------------------------------
     def rescale(self, n_shards: int) -> None:
@@ -155,14 +320,10 @@ class RetrievalEngine:
         self._build_runtimes(reshard_index(self.shards, n_shards))
 
     # -- data plane ----------------------------------------------------------
-    def retrieve(self, query_tokens: np.ndarray, *, k: int | None = None
-                 ) -> RetrievalResult:
-        k = k or self.k
+    def _scatter_gather(self, submit, merge, k: int):
+        """Shared hedged scatter-gather: quorum + deadline + merge."""
         t0 = time.time()
-        futures = {
-            self._pool.submit(rt.topk, query_tokens, k): i
-            for i, rt in enumerate(self.runtimes)
-        }
+        futures = {submit(rt): i for i, rt in enumerate(self.runtimes)}
         need = max(1, int(np.ceil(self.quorum * len(self.runtimes))))
         done: dict[int, tuple[np.ndarray, np.ndarray]] = {}
         pending = set(futures)
@@ -180,14 +341,42 @@ class RetrievalEngine:
                 break
         for f in pending:                 # backfill continues off-path
             f.cancel()
-        ids, scores = self._merge(done.values(), k)
+        ids, scores = merge(done.values(), k)
         return RetrievalResult(
             ids=ids, scores=scores,
             degraded=len(done) < len(self.runtimes),
             shards_answered=len(done), latency_s=time.time() - t0)
+
+    def retrieve(self, query_tokens: np.ndarray, *, k: int | None = None
+                 ) -> RetrievalResult:
+        k = k or self.k
+        return self._scatter_gather(
+            lambda rt: self._pool.submit(rt.topk, query_tokens, k),
+            self._merge, k)
+
+    def retrieve_batch(self, query_batch: Sequence[np.ndarray], *,
+                       k: int | None = None) -> RetrievalResult:
+        """B queries in one hedged scatter-gather round.
+
+        Each shard serves the whole batch in ONE device launch
+        (``ShardRuntime.topk_batch``), so kernel-launch and query-table
+        costs amortize over B; the merge is the batched stage-2
+        (``core.retrieval.merge_topk_batch``). Returns a single
+        :class:`RetrievalResult` with ``ids``/``scores`` of shape [B, k].
+        """
+        k = k or self.k
+        query_batch = [np.asarray(q) for q in query_batch]
+        return self._scatter_gather(
+            lambda rt: self._pool.submit(rt.topk_batch, query_batch, k),
+            self._merge_batch, k)
 
     @staticmethod
     def _merge(parts, k: int) -> tuple[np.ndarray, np.ndarray]:
         # stage-2 of the paper's two-stage top-k, vectorized in
         # core.retrieval.merge_topk (concatenate + argpartition).
         return merge_topk(parts, k)
+
+    @staticmethod
+    def _merge_batch(parts, k: int) -> tuple[np.ndarray, np.ndarray]:
+        from ..core.retrieval import merge_topk_batch
+        return merge_topk_batch(parts, k)

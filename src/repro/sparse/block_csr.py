@@ -59,6 +59,23 @@ def _round_up(x: int, tile: int) -> int:
     return max(tile, ((x + tile - 1) // tile) * tile)
 
 
+def bucket_pow2(n: int, *, floor: int = 512, cap: int | None = None) -> int:
+    """Round ``n`` up to a power-of-two bucket (≥ ``floor``).
+
+    Adaptive budgets size device shapes from the batch's ACTUAL demand
+    (Σ df, candidate count), but a fresh shape per batch would recompile
+    every call — power-of-two buckets bound the distinct compiled shapes to
+    O(log max-demand). ``cap`` (if given) clamps the bucket; callers must
+    then treat ``n > cap`` as overflow and retry or fall back, never
+    truncate silently. (Canonical definition — ``core.scoring`` re-exports
+    it; keep ONE power-of-two bucketing implementation in the repo.)
+    """
+    b = max(int(floor), 1)
+    while b < n:
+        b <<= 1
+    return min(b, cap) if cap is not None else b
+
+
 def block_postings_from_coo(
     token_ids: np.ndarray,
     doc_ids: np.ndarray,
@@ -131,6 +148,128 @@ def block_edges(src: np.ndarray, dst: np.ndarray, weight: np.ndarray | None,
         sort_tokens=False)
 
 
+@dataclass
+class GatheredPostings:
+    """Query-driven posting gather in the candidate-compacted layout.
+
+    Only the query tokens' posting runs are materialized — total work is
+    O(Σ df(qᵢ)) over the *batch's unique tokens*, never O(nnz). Candidate
+    documents (the union of gathered doc ids, sorted ascending) are mapped
+    to compact slots ``0..n_candidates-1``; slots are chunked by
+    ``slot // acc_block`` so chunk ``c``'s postings only touch accumulator
+    rows ``[0, acc_block)`` — the static shape the gather kernel's
+    VMEM accumulator needs. ``candidates[c, r]`` recovers the global doc id
+    of chunk ``c``'s slot ``r`` (-1 = padding slot, masked to -inf before
+    top-k selection).
+
+    ``acc_block`` should stay SMALL (the blocked layout's block_size, 512):
+    the kernel's scatter is a one-hot matmul whose cost is
+    ``acc_block × tile_p × B`` per posting tile, so total MXU work is
+    ``Σ df × acc_block × B`` — chunking a large candidate set over many
+    short accumulators keeps that linear in Σ df, while one tall
+    accumulator would multiply every posting by its full height and hand
+    the advantage back to the full scan.
+    """
+
+    token_ids: np.ndarray    # [n_chunks, p_pad] int32, -1 = pad
+    slot_ids: np.ndarray     # [n_chunks, p_pad] int32 in [0, acc_block)
+    scores: np.ndarray       # [n_chunks, p_pad] float32
+    candidates: np.ndarray   # [n_chunks, acc_block] int32 global ids, -1 pad
+    acc_block: int           # accumulator height (candidate slots per chunk)
+    n_candidates: int        # true (unpadded) candidate-document count
+    sum_df: int              # Σ df over the batch's unique query tokens
+
+    @property
+    def n_chunks(self) -> int:
+        return int(self.token_ids.shape[0])
+
+    @property
+    def p_pad(self) -> int:
+        return int(self.token_ids.shape[1])
+
+    def work_ratio(self, nnz: int) -> float:
+        """Full-scan postings / gathered postings — the asymptotic win."""
+        return nnz / max(self.sum_df, 1)
+
+
+def posting_runs(indptr: np.ndarray, uniq_tokens: np.ndarray
+                 ) -> tuple[np.ndarray, np.ndarray]:
+    """Per-token posting-run descriptors ``(start, len)`` from CSC indptr.
+
+    The inverted-index traversal plan: one ``(start, len)`` pair per unique
+    query token, O(U) to compute. ``Σ len`` is the exact posting budget the
+    gather needs — the adaptive-bucket logic sizes from it.
+    """
+    starts = indptr[uniq_tokens]
+    lens = indptr[uniq_tokens + 1] - starts
+    return starts.astype(np.int64), lens.astype(np.int64)
+
+
+def gather_posting_runs(index, uniq_tokens: np.ndarray, *,
+                        acc_block: int = 512, tile: int = 512,
+                        p_bucket: int | None = None) -> GatheredPostings:
+    """Gather ONLY the query tokens' posting runs (host, fully vectorized).
+
+    One ``np.repeat``-based run flattening replaces per-token slicing: flat
+    position ``j`` of run ``i`` reads ``doc_ids[start_i + j]``. Candidate
+    compaction is one ``np.unique`` over the gathered doc ids; chunking by
+    ``slot // acc_block`` reuses :func:`block_postings_from_coo` (postings
+    within a chunk stay token-sorted for the kernel's membership locality).
+
+    Both static dimensions are power-of-two bucketed so the kernel
+    recompiles O(log Σdf) times, not once per batch: the per-chunk posting
+    dimension rounds up to a power-of-two multiple of ``tile`` (``p_bucket``
+    overrides with an explicit floor), and the chunk count pads with empty
+    chunks (all -1). The gather itself can never overflow: shapes are sized
+    *from* the batch's actual Σ df.
+    """
+    uniq_tokens = np.asarray(uniq_tokens, dtype=np.int64)
+    starts, lens = posting_runs(index.indptr, uniq_tokens)
+    total = int(lens.sum())
+    if total == 0:
+        p_pad = max(tile, p_bucket or tile)
+        return GatheredPostings(
+            token_ids=np.full((1, p_pad), -1, np.int32),
+            slot_ids=np.zeros((1, p_pad), np.int32),
+            scores=np.zeros((1, p_pad), np.float32),
+            candidates=np.full((1, acc_block), -1, np.int32),
+            acc_block=acc_block, n_candidates=0, sum_df=0)
+    # vectorized run flatten: pos[j] = starts[run(j)] + (j - run_start(j))
+    run_of = np.repeat(np.arange(lens.size, dtype=np.int64), lens)
+    run_start = np.repeat(np.cumsum(lens) - lens, lens)
+    pos = starts[run_of] + np.arange(total, dtype=np.int64) - run_start
+    g_tok = uniq_tokens[run_of].astype(np.int32)
+    g_doc = index.doc_ids[pos].astype(np.int64)
+    g_sc = index.scores[pos].astype(np.float32)
+
+    candidates = np.unique(g_doc)                 # sorted ascending
+    slot = np.searchsorted(candidates, g_doc)
+    n_cand = int(candidates.size)
+
+    bp = block_postings_from_coo(g_tok, slot, g_sc, n_docs=n_cand,
+                                 n_vocab=int(index.n_vocab),
+                                 block_size=acc_block, tile=tile)
+    tok, loc, sc = bp.token_ids, bp.local_doc, bp.scores
+    p_pad = max(bucket_pow2(bp.nnz_pad, floor=tile), p_bucket or 0)
+    if p_pad > bp.nnz_pad:
+        pad = p_pad - bp.nnz_pad
+        tok = np.pad(tok, ((0, 0), (0, pad)), constant_values=-1)
+        loc = np.pad(loc, ((0, 0), (0, pad)))
+        sc = np.pad(sc, ((0, 0), (0, pad)))
+    nc = bucket_pow2(bp.n_blocks, floor=1)        # bucket the chunk count
+    if nc > bp.n_blocks:
+        pad = nc - bp.n_blocks
+        tok = np.pad(tok, ((0, pad), (0, 0)), constant_values=-1)
+        loc = np.pad(loc, ((0, pad), (0, 0)))
+        sc = np.pad(sc, ((0, pad), (0, 0)))
+    cand = np.full((nc, acc_block), -1, np.int32)
+    flat = cand.reshape(-1)
+    flat[:n_cand] = candidates
+    return GatheredPostings(token_ids=tok, slot_ids=loc, scores=sc,
+                            candidates=cand, acc_block=acc_block,
+                            n_candidates=n_cand, sum_df=total)
+
+
 def query_nonoccurrence_shift(nonoccurrence: np.ndarray,
                               q_tokens: np.ndarray,
                               q_weights: np.ndarray) -> np.ndarray:
@@ -146,16 +285,20 @@ def query_nonoccurrence_shift(nonoccurrence: np.ndarray,
 
 
 def pack_query_batch(q_tokens: np.ndarray, q_weights: np.ndarray,
-                     u_max: int) -> tuple[np.ndarray, np.ndarray]:
+                     u_max: int, *, uniq: np.ndarray | None = None
+                     ) -> tuple[np.ndarray, np.ndarray]:
     """Batch of padded queries -> (sorted unique tokens [U], weights [U, B]).
 
     The batched kernel scores *all* queries in one pass over the postings
     (DESIGN.md §3.3); its query-side operand is the batch's unique-token
     table plus a per-query weight column. Pad token = 2^31 - 1 (sorts last,
-    matches nothing since posting pads are -1).
+    matches nothing since posting pads are -1). ``uniq`` lets hot-path
+    callers that already computed the batch's sorted unique tokens (for
+    bucket sizing / run gathering) skip the redundant sort here.
     """
     b = q_tokens.shape[0]
-    uniq = np.unique(q_tokens[q_tokens >= 0])
+    if uniq is None:
+        uniq = np.unique(q_tokens[q_tokens >= 0])
     if uniq.size > u_max:
         raise ValueError(f"query batch has {uniq.size} unique tokens "
                          f"> u_max={u_max}")

@@ -10,6 +10,10 @@ import pytest
 
 SCRIPT = textwrap.dedent("""
     import os
+    # pin the cpu backend BEFORE importing jax: the stripped subprocess env
+    # drops the parent's JAX_PLATFORMS, and letting jax probe for TPU
+    # hardware stalls startup by minutes on CPU-only hosts
+    os.environ["JAX_PLATFORMS"] = "cpu"
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import json
     import jax

@@ -1,0 +1,474 @@
+"""Query-driven gathered retrieval (the O(Σ df) device path) vs oracles.
+
+The gathered pipeline — posting-run descriptors from the CSC ``indptr``,
+vectorized run gather, candidate compaction, the ``bm25_gather_score_topk``
+kernel with its candidate-sized VMEM accumulator, default-document splice —
+must return the SAME top-k (ids carrying their exact oracle scores) as the
+``topk_numpy``-over-``ScipyBM25`` reference on every BM25 variant,
+including the shifted ones (whose §2.1 nonoccurrence offset makes
+non-candidate documents score nonzero) and robertson (whose negative IDF
+makes matched docs rank BELOW unmatched ones — the splice's hard case).
+
+Also pins: the adaptive-budget retry of the sharded device variant, the
+vectorized ``pad_queries`` against the seed's per-query loop, the
+df-weighted ``suggest_p_max``, and degenerate/empty-shard edge cases.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from conftest import given, make_corpus, settings, st
+from repro.core import (BM25Params, ScipyBM25, batch_posting_budget,
+                        bucket_pow2, build_index, build_sharded_indexes,
+                        dense_oracle_scores, merge_topk_batch, pad_queries,
+                        sharded_retrieve_adaptive, suggest_p_max, topk_numpy)
+from repro.kernels import ops, ref
+from repro.kernels.bm25_gather_score import bm25_gather_score_topk
+from repro.sparse.block_csr import (gather_posting_runs, pack_query_batch,
+                                    posting_runs, query_nonoccurrence_shift)
+
+ALL_VARIANTS = ["robertson", "atire", "lucene", "bm25l", "bm25+"]
+
+
+def _gathered_retrieve(idx, queries, k, *, acc_block=32, tile=16, q_max=8):
+    """Host gather → kernel → merge+splice, returning [B, k] ids/scores."""
+    toks, wts = pad_queries(queries, q_max)
+    uniq_batch = np.unique(toks[toks >= 0])
+    gp = gather_posting_runs(idx, uniq_batch, acc_block=acc_block, tile=tile)
+    uniq_tab, weights = pack_query_batch(toks, wts, u_max=4 * q_max)
+    shift = query_nonoccurrence_shift(idx.nonoccurrence, toks, wts)
+    n_docs = int(idx.doc_lens.size)
+    ids, vals = ops.bm25_retrieve_gathered(
+        jnp.asarray(gp.token_ids), jnp.asarray(gp.slot_ids),
+        jnp.asarray(gp.scores), jnp.asarray(uniq_tab), jnp.asarray(weights),
+        jnp.asarray(gp.candidates), jnp.asarray(shift),
+        acc_block=gp.acc_block, k=min(k, n_docs), n_docs=n_docs,
+        tile_p=min(tile, gp.p_pad))
+    return np.asarray(ids), np.asarray(vals), gp
+
+
+# -- tentpole: gathered pipeline == ScipyBM25 / topk_numpy oracle -----------
+
+@pytest.mark.parametrize("method", ALL_VARIANTS)
+def test_gathered_matches_oracle_all_variants(method, rng):
+    corpus = make_corpus(rng, n_docs=90, n_vocab=64, max_len=20)
+    idx = build_index(corpus, 64, params=BM25Params(method=method))
+    queries = [rng.integers(0, 64, size=rng.integers(1, 6)).astype(np.int32)
+               for _ in range(4)]
+    ids, vals, gp = _gathered_retrieve(idx, queries, k=7)
+    assert gp.sum_df < idx.nnz            # really did less than a full scan
+    sc = ScipyBM25(idx)
+    for i, q in enumerate(queries):
+        oracle = sc.score(q)
+        _, ref_v = topk_numpy(oracle[None], 7)
+        np.testing.assert_allclose(vals[i], ref_v[0], atol=1e-4)
+        # returned ids carry their exact oracle scores (not just same values)
+        np.testing.assert_allclose(oracle[ids[i]], vals[i], atol=1e-4)
+
+
+def test_gathered_kernel_matches_ref_and_emits_global_ids(rng):
+    """Kernel == jnp oracle; winners carry GLOBAL doc ids (no offset math)."""
+    corpus = make_corpus(rng, n_docs=70, n_vocab=50)
+    idx = build_index(corpus, 50, params=BM25Params(method="lucene"))
+    queries = [rng.integers(0, 50, size=4).astype(np.int32)
+               for _ in range(3)]
+    toks, wts = pad_queries(queries, 8)
+    uniq_batch = np.unique(toks[toks >= 0])
+    gp = gather_posting_runs(idx, uniq_batch, acc_block=16, tile=16)
+    uniq_tab, weights = pack_query_batch(toks, wts, u_max=16)
+    args = (jnp.asarray(gp.token_ids), jnp.asarray(gp.slot_ids),
+            jnp.asarray(gp.scores), jnp.asarray(uniq_tab),
+            jnp.asarray(weights), jnp.asarray(gp.candidates))
+    k = 5
+    vals, gids = bm25_gather_score_topk(*args, acc_block=16, k=k,
+                                        tile_p=16)
+    assert vals.shape == (gp.n_chunks, k, 3)
+    rv, ri = ref.bm25_gather_topk_ref(*args, acc_block=16, k=k)
+    np.testing.assert_allclose(np.asarray(vals), np.asarray(rv), atol=1e-5)
+    # every emitted finite winner is a real candidate document id
+    finite = np.asarray(vals) > np.finfo(np.float32).min / 2
+    emitted = np.asarray(gids)[finite]
+    assert np.isin(emitted, gp.candidates[gp.candidates >= 0]).all()
+    # padding-slot winners (only when a chunk holds < k candidates) are -1
+    assert (np.asarray(gids)[~finite] == -1).all()
+
+
+def test_gathered_defaults_beat_negative_scores(rng):
+    """robertson: matched docs can score NEGATIVE; the exact top-k must
+    then prefer unmatched (default) docs at score 0 — the full-scan path
+    gets this free, the gathered path must splice them in."""
+    rng = np.random.default_rng(7)
+    # tiny vocab => huge df => robertson IDF goes negative for head tokens
+    corpus = [rng.integers(0, 6, size=rng.integers(3, 10)).astype(np.int32)
+              for _ in range(40)]
+    idx = build_index(corpus, 6, params=BM25Params(method="robertson"))
+    q = np.array([0, 1], dtype=np.int32)          # head tokens, negative IDF
+    ids, vals, _ = _gathered_retrieve(idx, [q], k=10)
+    oracle = ScipyBM25(idx).score(q)
+    _, ref_v = topk_numpy(oracle[None], 10)
+    np.testing.assert_allclose(vals[0], ref_v[0], atol=1e-5)
+    np.testing.assert_allclose(oracle[ids[0]], vals[0], atol=1e-5)
+    assert (vals[0] == 0.0).any()                 # defaults actually won
+
+
+@settings(max_examples=15, deadline=None)
+@given(seed=st.integers(0, 2 ** 31), k=st.integers(1, 12),
+       variant=st.sampled_from(ALL_VARIANTS))
+def test_property_gathered_equals_topk_numpy(seed, k, variant):
+    """Random corpora/queries/k/variant: gathered pipeline == argpartition
+    oracle, incl. shifted nonoccurrence offsets and chunked candidates."""
+    rng = np.random.default_rng(seed)
+    v = int(rng.integers(20, 80))
+    corpus = [rng.integers(0, v, size=rng.integers(1, 25)).astype(np.int32)
+              for _ in range(int(rng.integers(20, 120)))]
+    k = min(k, len(corpus))
+    idx = build_index(corpus, v, params=BM25Params(method=variant))
+    queries = [rng.integers(0, v, size=rng.integers(1, 7)).astype(np.int32)
+               for _ in range(3)]
+    ids, vals, _ = _gathered_retrieve(idx, queries, k=k)
+    sc = ScipyBM25(idx)
+    for i, q in enumerate(queries):
+        oracle = sc.score(q)
+        _, ref_v = topk_numpy(oracle[None], k)
+        np.testing.assert_allclose(vals[i], ref_v[0], atol=1e-4)
+        np.testing.assert_allclose(oracle[ids[i]], vals[i], atol=1e-4)
+
+
+# -- run descriptors and adaptive buckets -----------------------------------
+
+def test_posting_runs_and_batch_budget(rng):
+    corpus = make_corpus(rng, n_docs=60, n_vocab=30)
+    idx = build_index(corpus, 30, params=BM25Params())
+    uniq = np.array([3, 7, 20], dtype=np.int64)
+    starts, lens = posting_runs(idx.indptr, uniq)
+    df = np.diff(idx.indptr)
+    np.testing.assert_array_equal(lens, df[uniq])
+    np.testing.assert_array_equal(starts, idx.indptr[uniq])
+    toks = np.array([[3, 7, -1], [7, 20, -1]], dtype=np.int32)
+    assert batch_posting_budget(idx, toks) == int(df[[3, 7, 20]].sum())
+
+
+def test_gather_work_is_sum_df_not_nnz(rng):
+    """The gathered layout's posting count is Σ df(q), NOT nnz."""
+    corpus = make_corpus(rng, n_docs=100, n_vocab=200, max_len=25)
+    idx = build_index(corpus, 200, params=BM25Params())
+    uniq = np.unique(rng.integers(0, 200, size=3)).astype(np.int64)
+    gp = gather_posting_runs(idx, uniq, acc_block=64, tile=16)
+    df = np.diff(idx.indptr)
+    assert gp.sum_df == int(df[uniq].sum())
+    assert int((gp.token_ids >= 0).sum()) == gp.sum_df
+    assert gp.work_ratio(idx.nnz) == idx.nnz / max(gp.sum_df, 1)
+    # candidate table is the sorted union of the gathered runs' doc ids
+    expect = np.unique(np.concatenate(
+        [idx.doc_ids[idx.indptr[t]:idx.indptr[t + 1]] for t in uniq]))
+    got = gp.candidates[gp.candidates >= 0]
+    np.testing.assert_array_equal(np.sort(got), expect)
+
+
+def test_adaptive_budget_retry_no_silent_truncation(rng):
+    """Sharded device variant: an undersized bucket RETRIES larger instead
+    of silently truncating — final scores are exact."""
+    from repro.core.retrieval import stack_shard_arrays
+    from repro.launch.mesh import make_test_mesh
+    corpus = make_corpus(rng, n_docs=60, n_vocab=10)   # tiny vocab: huge df
+    p = BM25Params(method="lucene")
+    shards = build_sharded_indexes(corpus, 10, 1, params=p)
+    mesh = make_test_mesh(1)
+    axes = tuple(mesh.shape.keys())
+    arrs, ndoc = stack_shard_arrays(shards, mesh, axes)
+    queries = [np.arange(8, dtype=np.int32)]
+    toks, wts = pad_queries(queries, 8)
+    assert batch_posting_budget(shards[0], toks) > 16   # floor WILL overflow
+    retrieve = sharded_retrieve_adaptive(mesh, axes, k=5,
+                                         n_docs_per_shard=ndoc, p_floor=16)
+    ids, vals, p_used = retrieve(arrs, toks, wts)
+    assert p_used > 16                                  # retried upward
+    oracle = dense_oracle_scores(corpus, 10, queries[0], p)
+    _, ref_v = topk_numpy(oracle[None], 5)
+    np.testing.assert_allclose(np.asarray(vals)[0], ref_v[0], atol=1e-3)
+    np.testing.assert_allclose(oracle[np.asarray(ids)[0]],
+                               np.asarray(vals)[0], atol=1e-3)
+
+
+def test_sharded_gathered_matches_full_scan_variant(rng):
+    """gathered=True and the classic per-query segment-sum variant agree."""
+    from repro.core.retrieval import make_sharded_retrieve, \
+        stack_shard_arrays
+    from repro.launch.mesh import make_test_mesh
+    corpus = make_corpus(rng, n_docs=80, n_vocab=40)
+    shards = build_sharded_indexes(corpus, 40, 1,
+                                   params=BM25Params(method="bm25+"))
+    mesh = make_test_mesh(1)
+    axes = tuple(mesh.shape.keys())
+    arrs, ndoc = stack_shard_arrays(shards, mesh, axes)
+    queries = [rng.integers(0, 40, size=5).astype(np.int32)
+               for _ in range(3)]
+    toks, wts = pad_queries(queries, 8)
+    classic = make_sharded_retrieve(mesh, axes, p_max=1024, k=6,
+                                    n_docs_per_shard=ndoc)
+    gathered = make_sharded_retrieve(mesh, axes, p_max=1024, k=6,
+                                     n_docs_per_shard=ndoc, gathered=True)
+    ci, cv = classic(arrs, toks, wts)
+    gi, gv = gathered(arrs, toks, wts)
+    np.testing.assert_allclose(np.asarray(gv), np.asarray(cv), atol=1e-4)
+
+
+def test_uneven_shards_emit_no_phantom_docs():
+    """Stacking pads smaller shards up to ndoc_pad; a padded doc must never
+    surface as a (duplicate or out-of-range) result id. Regression: with
+    shards of sizes [3, 4] and k = n_docs both sharded variants used to
+    return one shard's padding slot (scoring the bare nonoccurrence shift)
+    instead of the last real document. Needs 2 fake devices → subprocess
+    (the main test process must stay single-device, see conftest)."""
+    import subprocess
+    import sys
+    import textwrap
+    script = textwrap.dedent("""
+        import os
+        os.environ["JAX_PLATFORMS"] = "cpu"   # fake devices need the cpu
+        os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=2"
+        import numpy as np, jax
+        from repro.core import (BM25Params, build_sharded_indexes,
+                                pad_queries, dense_oracle_scores, topk_numpy)
+        from repro.core.retrieval import (make_sharded_retrieve,
+                                          stack_shard_arrays)
+        from repro.launch.mesh import make_mesh_from
+        rng = np.random.default_rng(0)
+        corpus = [rng.integers(0, 12, size=rng.integers(1, 8)
+                               ).astype(np.int32) for _ in range(7)]
+        p = BM25Params(method="bm25l")
+        shards = build_sharded_indexes(corpus, 12, 2, params=p)  # [3, 4]
+        assert {s.doc_lens.size for s in shards} == {3, 4}
+        mesh = make_mesh_from(jax.devices())
+        axes = tuple(mesh.shape.keys())
+        arrs, ndoc = stack_shard_arrays(shards, mesh, axes)
+        assert ndoc == 4
+        toks, wts = pad_queries([np.array([0], np.int32)], 4)
+        oracle = dense_oracle_scores(corpus, 12, np.array([0]), p)
+        _, ref_v = topk_numpy(oracle[None], 7)
+        for gathered in (False, True):
+            fn = make_sharded_retrieve(mesh, axes, p_max=64, k=7,
+                                       n_docs_per_shard=ndoc,
+                                       gathered=gathered)
+            ids, vals = fn(arrs, toks, wts)
+            ids, vals = np.asarray(ids)[0], np.asarray(vals)[0]
+            assert len(set(ids.tolist())) == 7, (gathered, ids)
+            assert (ids < 7).all(), (gathered, ids)
+            np.testing.assert_allclose(vals, ref_v[0], atol=1e-4)
+            np.testing.assert_allclose(oracle[ids], vals, atol=1e-4)
+        print("PHANTOM-OK")
+    """)
+    proc = subprocess.run(
+        [sys.executable, "-c", script], capture_output=True, text=True,
+        timeout=300, env={"PYTHONPATH": "src", "PATH": "/usr/bin:/bin",
+                          "HOME": "/root"})
+    assert proc.returncode == 0, proc.stderr[-3000:]
+    assert "PHANTOM-OK" in proc.stdout
+
+
+def test_bucket_pow2_bounds_recompiles():
+    assert bucket_pow2(1) == 512
+    assert bucket_pow2(512) == 512
+    assert bucket_pow2(513) == 1024
+    assert bucket_pow2(5000, floor=64) == 8192
+    assert bucket_pow2(10 ** 6, cap=8192) == 8192    # capped, caller chunks
+    # distinct buckets over a huge demand range stay logarithmic
+    buckets = {bucket_pow2(n) for n in range(1, 100_000, 97)}
+    assert len(buckets) < 10
+
+
+# -- degenerate and empty cases ---------------------------------------------
+
+def test_gathered_degenerate_queries(rng):
+    """Empty / all-pad / no-matching-postings queries return exact default
+    top-k (every doc scores the nonoccurrence shift)."""
+    corpus = make_corpus(rng, n_docs=30, n_vocab=50)
+    for method in ("lucene", "bm25l"):               # sparse + shifted
+        idx = build_index(corpus, 50, params=BM25Params(method=method))
+        sc = ScipyBM25(idx)
+        empty = np.zeros(0, dtype=np.int32)
+        ids, vals, gp = _gathered_retrieve(idx, [empty], k=5)
+        assert gp.n_candidates == 0 and gp.sum_df == 0
+        oracle = sc.score(empty)
+        np.testing.assert_allclose(oracle[ids[0]], vals[0], atol=1e-5)
+        _, ref_v = topk_numpy(oracle[None], 5)
+        np.testing.assert_allclose(vals[0], ref_v[0], atol=1e-5)
+
+
+def test_gathered_query_token_without_postings(rng):
+    """Tokens with df=0 (never indexed) gather nothing but stay exact."""
+    corpus = [np.array([0, 1, 2], np.int32), np.array([1, 2], np.int32)]
+    idx = build_index(corpus, 10, params=BM25Params(method="bm25+"))
+    q = np.array([7, 8], dtype=np.int32)             # df=0 tokens only
+    ids, vals, gp = _gathered_retrieve(idx, [q], k=2)
+    assert gp.sum_df == 0
+    oracle = ScipyBM25(idx).score(q)
+    np.testing.assert_allclose(oracle[ids[0]], vals[0], atol=1e-5)
+
+
+def test_gathered_engine_survives_rescale_to_empty_shards(rng):
+    """rescale() can create zero-doc shards; the gathered scorer must not
+    crash on them (mirror of the blocked-scorer regression test)."""
+    from repro.serve import RetrievalEngine
+    corpus = make_corpus(rng, n_docs=3, n_vocab=20)
+    shards = build_sharded_indexes(corpus, 20, 2, params=BM25Params())
+    eng = RetrievalEngine(shards, k=2, deadline_s=10.0, scorer="gathered")
+    eng.rescale(5)                               # 3 docs over 5 shards
+    q = rng.integers(0, 20, size=3).astype(np.int32)
+    r = eng.retrieve(q)
+    oracle = dense_oracle_scores(corpus, 20, q, BM25Params())
+    _, ref_v = topk_numpy(oracle[None], 2)
+    np.testing.assert_allclose(np.sort(r.scores), np.sort(ref_v[0]),
+                               atol=1e-3)
+
+
+def test_engine_gathered_batch_exact_and_single_agree(rng):
+    from repro.serve import RetrievalEngine
+    corpus = make_corpus(rng, n_docs=120, n_vocab=60)
+    p = BM25Params(method="bm25l")
+    shards = build_sharded_indexes(corpus, 60, 3, params=p)
+    eng = RetrievalEngine(shards, k=9, deadline_s=30.0, scorer="gathered")
+    qs = [rng.integers(0, 60, size=5).astype(np.int32) for _ in range(4)]
+    rb = eng.retrieve_batch(qs)
+    assert rb.ids.shape == (4, 9) and not rb.degraded
+    for i, q in enumerate(qs):
+        oracle = dense_oracle_scores(corpus, 60, q, p)
+        _, ref_v = topk_numpy(oracle[None], 9)
+        np.testing.assert_allclose(rb.scores[i], ref_v[0], atol=1e-3)
+        for d, s in zip(rb.ids[i], rb.scores[i]):
+            assert abs(oracle[d] - s) < 1e-3
+        r1 = eng.retrieve(q)
+        np.testing.assert_allclose(r1.scores, rb.scores[i], atol=1e-5)
+
+
+def test_merge_topk_batch_matches_per_query_merge(rng):
+    from repro.core import merge_topk
+    b, s_parts = 5, 3
+    parts = [(rng.integers(0, 10_000, size=(b, 4)).astype(np.int64),
+              rng.normal(size=(b, 4)).astype(np.float32))
+             for _ in range(s_parts)]
+    ids, sc = merge_topk_batch(parts, 6)
+    assert ids.shape == (b, 6)
+    for i in range(b):
+        per_q = [(p[0][i], p[1][i]) for p in parts]
+        ri, rs = merge_topk(per_q, 6)
+        np.testing.assert_allclose(sc[i], rs, atol=1e-7)
+    # degenerate: empty parts and k=0
+    i0, s0 = merge_topk_batch([], 5)
+    assert i0.shape[1] == 0
+    iz, sz = merge_topk_batch(parts, 0)
+    assert iz.shape == (b, 0)
+
+
+# -- satellite: vectorized pad_queries == the seed's loop --------------------
+
+def _pad_queries_loop(query_tokens, q_max):
+    """The seed's per-query np.unique loop, kept as the semantics oracle."""
+    b = len(query_tokens)
+    toks = np.full((b, q_max), -1, dtype=np.int32)
+    wts = np.zeros((b, q_max), dtype=np.float32)
+    for i, q in enumerate(query_tokens):
+        q = q[q >= 0]
+        uniq, counts = np.unique(q, return_counts=True)
+        if uniq.size > q_max:
+            keep = np.argsort(-counts, kind="stable")[:q_max]
+            uniq, counts = uniq[keep], counts[keep]
+        toks[i, : uniq.size] = uniq
+        wts[i, : uniq.size] = counts
+    return toks, wts
+
+
+def test_vectorized_pad_queries_matches_loop(rng):
+    for _ in range(30):
+        b = int(rng.integers(0, 7))
+        qs = [rng.integers(-2, 25, size=rng.integers(0, 20)).astype(np.int32)
+              for _ in range(b)]
+        q_max = int(rng.integers(1, 9))
+        t1, w1 = pad_queries(qs, q_max)
+        t2, w2 = _pad_queries_loop(qs, q_max)
+        np.testing.assert_array_equal(t1, t2)
+        np.testing.assert_array_equal(w1, w2)
+    # edge: empty batch, empty queries, all-padding queries
+    t, w = pad_queries([], 4)
+    assert t.shape == (0, 4)
+    t, w = pad_queries([np.zeros(0, np.int32),
+                        np.array([-1, -1], np.int32)], 4)
+    assert (t == -1).all() and (w == 0).all()
+
+
+def test_pad_queries_return_uniq_matches_full_sort(rng):
+    """return_uniq derives the batch-unique table from the run set — must
+    equal a plain np.unique over all valid tokens (incl. empty queries)."""
+    qs = [rng.integers(-2, 30, size=rng.integers(0, 15)).astype(np.int32)
+          for _ in range(5)]
+    toks, wts, uniq = pad_queries(qs, 16, return_uniq=True)
+    flat = np.concatenate(qs)
+    np.testing.assert_array_equal(uniq, np.unique(flat[flat >= 0]))
+    t2, w2 = pad_queries(qs, 16)
+    np.testing.assert_array_equal(toks, t2)
+    _, _, u0 = pad_queries([], 4, return_uniq=True)
+    assert u0.size == 0
+
+
+def test_retriever_ragged_batch_sizes_exact(rng):
+    """The batch dim is pow2-bucketed (padded with empty queries) — ragged
+    batch sizes must still return [b_true, k] exact results."""
+    from repro.serve import GatheredRetriever
+    corpus = make_corpus(rng, n_docs=60, n_vocab=40)
+    idx = build_index(corpus, 40, params=BM25Params(method="bm25+"))
+    gr = GatheredRetriever(idx, tile=64, acc_block=32)
+    sc = ScipyBM25(idx)
+    for b in (1, 3, 9):                          # crosses the B=8 floor
+        qs = [rng.integers(0, 40, size=4).astype(np.int32)
+              for _ in range(b)]
+        ids, vals = gr.retrieve_batch(qs, 5)
+        assert ids.shape == (b, 5)
+        for i, q in enumerate(qs):
+            oracle = sc.score(q)
+            _, ref_v = topk_numpy(oracle[None], 5)
+            np.testing.assert_allclose(vals[i], ref_v[0], atol=1e-4)
+            np.testing.assert_allclose(oracle[ids[i]], vals[i], atol=1e-4)
+
+
+def test_pad_queries_truncation_keeps_highest_count(rng):
+    q = np.array([5, 5, 5, 2, 2, 9, 1], dtype=np.int32)
+    toks, wts = pad_queries([q], 2)
+    assert toks[0, 0] == 5 and wts[0, 0] == 3
+    assert toks[0, 1] == 2 and wts[0, 1] == 2
+
+
+# -- satellite: df-weighted suggest_p_max -----------------------------------
+
+def test_suggest_p_max_df_weighted_on_zipf():
+    """On a Zipfian df profile the weighted quantile sizes for the HEAD
+    (where query traffic lands), the unweighted one for the tail."""
+    from repro.core.index import BM25Index
+    from repro.core.variants import BM25Params as P
+
+    df = np.r_[np.full(10, 10_000), np.ones(10_000)].astype(np.int64)
+    indptr = np.zeros(df.size + 1, dtype=np.int64)
+    np.cumsum(df, out=indptr[1:])
+    nnz = int(indptr[-1])
+    idx = BM25Index(
+        indptr=indptr, doc_ids=np.zeros(nnz, np.int32),
+        scores=np.zeros(nnz, np.float32),
+        nonoccurrence=np.zeros(df.size, np.float32),
+        doc_lens=np.ones(100, np.int32), n_docs=100, n_vocab=df.size,
+        l_avg=1.0, variant="lucene", params=P())
+    # unweighted median over distinct tokens would say df≈1; df-weighted
+    # median sees half the posting mass in the head => budget ~ head df
+    assert suggest_p_max(idx, 8, quantile=0.5, tile=1) >= 8 * 10_000 // 2
+    # quantile=1.0 stays the safe max-df bound (old behavior preserved)
+    assert suggest_p_max(idx, 8, quantile=1.0, tile=1) == 8 * 10_000
+
+
+def test_suggest_p_max_covers_realistic_zipf_traffic():
+    from repro.data.corpus import zipf_corpus, zipf_queries
+    corpus = zipf_corpus(400, 300, avg_len=40)
+    idx = build_index(corpus, 300, params=BM25Params())
+    toks, _ = pad_queries(zipf_queries(32, 300, q_len=5), 8)
+    need = max(batch_posting_budget(idx, toks[i:i + 1])
+               for i in range(toks.shape[0]))
+    assert suggest_p_max(idx, 8, quantile=0.95, tile=64) >= need
