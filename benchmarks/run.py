@@ -4,8 +4,10 @@
 
 Emits CSV-ish lines ``table,key=value,...`` and writes
 benchmarks/out/results.json plus BENCH_1.json (fused pipeline + vectorized
-indexing — the PR-1 perf trajectory numbers) and BENCH_2.json (gathered vs
-full-scan retrieval regimes — the PR-2 numbers) at the repo root.
+indexing — the PR-1 perf trajectory numbers), BENCH_2.json (gathered vs
+full-scan retrieval regimes — the PR-2 numbers) and BENCH_3.json (cost-model
+planner vs forced regimes + residency transfer audit — the PR-3 numbers) at
+the repo root.
 """
 
 from __future__ import annotations
@@ -22,8 +24,8 @@ def main() -> None:
                     help="smaller corpora (CI-sized)")
     args = ap.parse_args()
 
-    from . import fused, gathered, kernels_bench, throughput, tokenization, \
-        variants
+    from . import fused, gathered, kernels_bench, planner, throughput, \
+        tokenization, variants
 
     results = {}
     t0 = time.time()
@@ -41,6 +43,13 @@ def main() -> None:
             f"{k}={v}" for k, v in r.items()), flush=True)
     with open("BENCH_2.json", "w") as f:
         json.dump(results["bench2_gathered"], f, indent=1)
+
+    results["bench3_planner"] = planner.run(fast=args.fast)
+    for r in results["bench3_planner"]["cells"]:
+        print("bench3_planner," + ",".join(
+            f"{k}={v}" for k, v in r.items()), flush=True)
+    with open("BENCH_3.json", "w") as f:
+        json.dump(results["bench3_planner"], f, indent=1)
 
     sizes = ((1000, 3000), (5000, 10000)) if args.fast else \
         ((2000, 5000), (10000, 20000), (50000, 50000))

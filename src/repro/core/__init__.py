@@ -2,7 +2,8 @@
 
 from .index import BM25Index, CorpusStats, build_index, build_sharded_indexes, reshard_index
 from .reference import RankBM25Baseline, ScipyBM25, dense_oracle_scores
-from .retrieval import (blockwise_topk, merge_topk, merge_topk_batch,
+from .retrieval import (RetrievalPlan, blockwise_topk, default_doc_ids,
+                        merge_topk, merge_topk_batch, plan_retrieval,
                         sharded_retrieve_adaptive, topk_jax, topk_numpy)
 from .scoring import (DeviceIndex, batch_posting_budget, bucket_pow2,
                       pad_queries, score_batch, suggest_p_max)
@@ -12,9 +13,10 @@ from .variants import BM25Params, VARIANTS, get_variant
 __all__ = [
     "BM25Index", "BM25Params", "BM25Retriever", "CorpusStats", "DeviceIndex",
     "RankBM25Baseline", "ScipyBM25", "Tokenizer", "VARIANTS", "Vocabulary",
-    "batch_posting_budget", "blockwise_topk", "bucket_pow2", "build_index",
-    "build_sharded_indexes", "dense_oracle_scores", "get_variant",
-    "merge_topk", "merge_topk_batch", "pad_queries", "reshard_index",
+    "RetrievalPlan", "batch_posting_budget", "blockwise_topk",
+    "bucket_pow2", "build_index", "build_sharded_indexes",
+    "default_doc_ids", "dense_oracle_scores", "get_variant", "merge_topk",
+    "merge_topk_batch", "pad_queries", "plan_retrieval", "reshard_index",
     "score_batch", "sharded_retrieve_adaptive", "suggest_p_max", "topk_jax",
     "topk_numpy",
 ]

@@ -14,6 +14,7 @@ same code runs on 1 device (tests) and 512 chips (dry-run).
 
 from __future__ import annotations
 
+from dataclasses import dataclass
 from functools import partial
 
 import jax
@@ -23,6 +24,105 @@ from jax.experimental.shard_map import shard_map
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
 
 from .scoring import DeviceIndex, score_query
+
+
+# -- retrieval planner (cost model over the two device regimes) --------------
+#
+# The full-scan regime streams EVERY posting tile: O(nnz) per batch, perfect
+# locality, zero descriptor work. The gathered regime touches only the
+# batch's posting runs: O(Σ df) plus per-run overhead (descriptor build,
+# fragment padding, candidate bookkeeping). Both costs are known BEFORE any
+# kernel runs — Σ df comes from the host descriptor table (O(U) adds), nnz
+# is index metadata — so the regime choice is a free host-side comparison of
+#
+#     work_ratio = nnz / Σ df(batch uniq tokens)   vs   CROSSOVER
+#
+# CROSSOVER folds the gathered path's per-posting overhead factor into one
+# constant: at work_ratio == CROSSOVER the two regimes break even, above it
+# the gather's asymptotic advantage dominates. The default below is
+# calibrated from the BENCH_3 sweep (benchmarks/planner.py), which measures
+# both forced regimes across corpus-size × df-profile cells and reports the
+# implied break-even band; re-calibrate on TPU by re-running
+# ``python -m benchmarks.planner`` there and copying the suggested value.
+
+DEFAULT_CROSSOVER = 2.0
+
+
+@dataclass
+class RetrievalPlan:
+    """One batch's regime decision plus the evidence it was made on."""
+
+    regime: str             # "blocked" | "gathered"
+    sum_df: int             # Σ df over the batch's unique tokens
+    nnz: int                # the shard's posting count (full-scan work)
+    work_ratio: float       # nnz / max(sum_df, 1)
+    crossover: float        # threshold used
+    forced: bool            # True when the operator pinned the regime
+
+
+def plan_retrieval(sum_df: int, nnz: int, *, regime: str = "auto",
+                   crossover: float | None = None) -> RetrievalPlan:
+    """Pick full-scan vs gathered for one batch (free — no device work).
+
+    ``regime="blocked"``/``"gathered"`` force that regime (the plan still
+    records the evidence, so forced decisions stay debuggable);
+    ``"auto"`` compares the batch's work ratio against ``crossover``
+    (default :data:`DEFAULT_CROSSOVER`). A batch with no postings at all is
+    trivially gathered (nothing to scan beats scanning everything).
+    """
+    if regime not in ("auto", "blocked", "gathered"):
+        raise ValueError(f"unknown regime {regime!r}")
+    c = DEFAULT_CROSSOVER if crossover is None else float(crossover)
+    ratio = nnz / max(sum_df, 1)
+    if regime != "auto":
+        chosen, forced = regime, True
+    elif sum_df == 0:
+        chosen, forced = "gathered", False
+    else:
+        chosen, forced = ("gathered" if ratio >= c else "blocked"), False
+    return RetrievalPlan(regime=chosen, sum_df=int(sum_df), nnz=int(nnz),
+                         work_ratio=float(ratio), crossover=c, forced=forced)
+
+
+def default_doc_ids(vis_blocks: np.ndarray, k: int, n_docs: int,
+                    block_size: int) -> np.ndarray:
+    """First ``k`` doc ids from blocks a batch never visited.
+
+    The resident kernel only scores documents in VISITED blocks; every doc
+    in an unvisited block has raw score exactly 0 (no posting touched it),
+    so any ``k`` of them serve as the default-document candidates the
+    splice needs (mirror of :func:`missing_doc_ids`, but block-granular —
+    the fragment plan already knows the visited-block set). Entries ``>=
+    n_docs`` mean fewer than ``k`` unvisited docs exist; callers mask them.
+
+    Fully vectorized, O(k log nv) — the j-th-missing trick of
+    :func:`missing_doc_ids` applied at block granularity (``vis_blocks``
+    is sorted unique, so ``vis[i] - i`` counts the unvisited blocks below
+    ``vis[i]``). NOT O(n_blocks) and no per-block Python loop: this sits
+    on the resident serving hot path and shards can have 10^5 blocks.
+    """
+    out = np.full(k, n_docs, dtype=np.int32)
+    if k <= 0 or n_docs <= 0:
+        return out
+    vis = np.asarray(vis_blocks, dtype=np.int64)
+    n_blocks = -(-n_docs // block_size)
+    # first k unvisited block ids (each supplies ≥1 doc id, so k suffice)
+    j = np.arange(min(k, n_blocks), dtype=np.int64)
+    unvis = j + np.searchsorted(vis - np.arange(vis.size), j + 1)
+    unvis = unvis[unvis < n_blocks]
+    if unvis.size == 0:
+        return out
+    lo = unvis * block_size
+    cnt = np.minimum(lo + block_size, n_docs) - lo
+    cum = np.cumsum(cnt)
+    cut = int(np.searchsorted(cum, k)) + 1        # blocks that reach k ids
+    lo, cnt, cum = lo[:cut], cnt[:cut], cum[:cut]
+    total = int(cum[-1])
+    flat = np.repeat(lo, cnt) + (np.arange(total, dtype=np.int64)
+                                 - np.repeat(cum - cnt, cnt))
+    take = min(k, total)
+    out[:take] = flat[:take].astype(np.int32)
+    return out
 
 
 def topk_numpy(scores: np.ndarray, k: int) -> tuple[np.ndarray, np.ndarray]:
@@ -90,7 +190,9 @@ def merge_topk_batch(parts, k: int) -> tuple[np.ndarray, np.ndarray]:
 def splice_default_docs(cand_vals: jax.Array, cand_ids: jax.Array,
                         candidates: jax.Array, k: int, n_docs: int, *,
                         valid: jax.Array | None = None,
-                        doc_limit=None) -> tuple[jax.Array, jax.Array]:
+                        doc_limit=None,
+                        default_ids: jax.Array | None = None
+                        ) -> tuple[jax.Array, jax.Array]:
     """Merge candidate winners with ``k`` DEFAULT documents per query.
 
     A document outside the candidate set contributes no posting, so its
@@ -100,20 +202,26 @@ def splice_default_docs(cand_vals: jax.Array, cand_ids: jax.Array,
     the full-scan kernel gets this free by touching every doc; here
     :func:`missing_doc_ids` recovers ``k`` non-candidate ids in
     O(k log C) without ever scanning ``n_docs``. The single definition of
-    the splice — the host (``ops.bm25_retrieve_gathered``) and sharded
-    (:func:`_device_gathered_topk`) gathered paths must not diverge.
+    the splice — the host (``ops.bm25_retrieve_gathered``), resident
+    (``ops.bm25_retrieve_resident``) and sharded
+    (:func:`_device_gathered_topk`) paths must not diverge.
 
     ``cand_vals``/``cand_ids`` are ``[B, m]`` candidate winners (raw
     scores); ``candidates`` the sorted candidate table with ``valid``
     marking real entries (see :func:`missing_doc_ids`); ``doc_limit``
     (default ``n_docs``, may be traced) masks fabricated ids at/above it
     to -inf — pass the shard's REAL doc count when arrays are padded.
-    Returns ``(ids [B, k], raw values [B, k])``.
+    ``default_ids`` (``[k]``) short-circuits the j-th-missing computation
+    when the caller already holds ``k`` known-default ids (the resident
+    path's unvisited-block defaults, :func:`default_doc_ids`) —
+    ``candidates`` may then be None. Returns ``(ids [B, k], raw values
+    [B, k])``.
     """
     if doc_limit is None:
         doc_limit = n_docs
     b = cand_vals.shape[0]
-    miss = missing_doc_ids(candidates, k, n_docs, valid=valid)
+    miss = (missing_doc_ids(candidates, k, n_docs, valid=valid)
+            if default_ids is None else default_ids)
     def_v = jnp.where(miss < doc_limit, 0.0,
                       jnp.finfo(cand_vals.dtype).min).astype(cand_vals.dtype)
     all_v = jnp.concatenate(

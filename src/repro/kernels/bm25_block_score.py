@@ -41,8 +41,10 @@ matches most docs). For everything else the QUERY-GATHERED regime
 (``bm25_gather_score.py``) does O(Σ df(q)) work — it slices only the query
 tokens' posting runs and scatters into a candidate-sized accumulator — and
 its advantage over the full scan grows linearly with corpus size at fixed
-query df. ``serve.retrieval_engine`` exposes both (``scorer="blocked"`` vs
-``scorer="gathered"``).
+query df. ``serve.retrieval_engine``'s ``DeviceRetriever`` keeps BOTH
+layouts HBM-resident and picks per batch via the free nnz/Σdf cost model
+(``core.retrieval.plan_retrieval``, ``scorer="auto"``; ``"blocked"`` /
+``"gathered"`` force a regime).
 """
 
 from __future__ import annotations

@@ -23,7 +23,25 @@ Regime choice (see also ``bm25_block_score.py``): full-scan wins when the
 query batch is so large/dense that Σ df approaches nnz (every tile would be
 gathered anyway — then the streamed layout's perfect locality is free);
 query-gathered wins everywhere else, and the gap grows linearly with corpus
-size at fixed query df. ``serve.retrieval_engine`` picks via ``scorer=``.
+size at fixed query df. ``serve.retrieval_engine``'s planner picks per
+batch (``core.retrieval.plan_retrieval``, ``scorer="auto"``).
+
+Two gathered entry points:
+
+* ``bm25_gather_score_topk``     — consumes HOST-gathered candidate-compacted
+  tiles (the fallback that still ships O(Σ df) postings per batch). With
+  ``two_level=True`` the per-chunk winners are reduced to SHARD winners
+  inside the launch (running ``[k, B]`` scoreboard in VMEM), cutting the
+  host merge from ``[nc·k, B]`` to ``[k, B]``.
+* ``bm25_resident_score_topk``   — the zero-copy path: posting arrays are
+  HBM-resident (``sparse.block_csr.DeviceIndex``), the host ships only a
+  fragment-descriptor table (``fragment_plan``) which is scalar-prefetched
+  into SMEM (the ``PrefetchScalarGridSpec`` pattern proven in
+  ``kernels/embedding_bag.py``); each grid step DMAs one ≤``frag``-sized
+  posting run fragment straight out of HBM, scatters it into a per-doc-block
+  VMEM accumulator, and block winners fold into the same running ``[k, B]``
+  shard scoreboard. No membership search is needed at all — the descriptor
+  names the owning query-token row directly.
 """
 
 from __future__ import annotations
@@ -37,6 +55,37 @@ from jax.experimental.pallas import tpu as pltpu
 
 from .blockwise_topk import select_topk
 from .bm25_block_score import _score_tile
+
+# jax >= 0.5 renamed TPUMemorySpace -> MemorySpace
+_ANY_SPACE = getattr(pltpu, "MemorySpace",
+                     getattr(pltpu, "TPUMemorySpace", None)).ANY
+
+
+def _fold_winners(ext_vals, ids_of_row, prev_ids, mv_ref, mi_ref, *,
+                  n_rows: int, k: int):
+    """k select-and-mask rounds over ``ext_vals = [acc ; prev_winners]``.
+
+    ``ids_of_row(am)`` maps an accumulator-row argmax to its global doc id;
+    rows ≥ ``n_rows`` are the previous winners, whose ids come from
+    ``prev_ids`` via a one-hot sum (VPU-safe — no gather along a dynamic
+    per-column index). Non-finite winners (padding) emit id -1. Results are
+    staged in ``mv_ref``/``mi_ref`` so the caller can copy them into the
+    live scoreboard AFTER the rounds stop reading it.
+    """
+    neg = jnp.finfo(ext_vals.dtype).min
+
+    def emit(r, m, am):
+        b = m.shape[0]
+        safe_prev = jnp.clip(am - n_rows, 0, k - 1)
+        oh = (jax.lax.broadcasted_iota(jnp.int32, (k, b), 0)
+              == safe_prev[None, :])
+        old = jnp.sum(jnp.where(oh, prev_ids, 0), axis=0)
+        gid = jnp.where(am < n_rows, ids_of_row(am), old)
+        gid = jnp.where(m > neg / 2, gid, -1)
+        pl.store(mv_ref, (pl.ds(r, 1), pl.ds(0, b)), m[None, :])
+        pl.store(mi_ref, (pl.ds(r, 1), pl.ds(0, b)), gid[None, :])
+
+    select_topk(ext_vals, k, axis=0, emit=emit)
 
 
 def _gather_kernel(tok_ref, loc_ref, sc_ref, uniq_ref, w_ref, cand_ref,
@@ -72,23 +121,72 @@ def _gather_kernel(tok_ref, loc_ref, sc_ref, uniq_ref, w_ref, cand_ref,
         select_topk(acc, k, axis=0, emit=emit)
 
 
+def _gather_kernel_shard(tok_ref, loc_ref, sc_ref, uniq_ref, w_ref, cand_ref,
+                         vals_ref, gid_ref, acc_ref, mv_ref, mi_ref, *,
+                         acc_block: int, k: int):
+    """Two-level variant: chunk winners fold into a shard ``[k, B]`` board.
+
+    Same scoring as :func:`_gather_kernel`, but instead of emitting every
+    chunk's ``[k, B]`` winners to HBM, each chunk's reduce extends its
+    accumulator with the RUNNING shard winners and re-selects — top-k of a
+    union equals top-k of (top-k ∪ top-k), so the single ``[k, B]`` output
+    is exactly the merge of the per-chunk lists, computed without the
+    ``[nc·k, B]`` round-trip.
+    """
+    pi = pl.program_id(0)
+    pj = pl.program_id(1)
+    neg = jnp.finfo(vals_ref.dtype).min
+
+    @pl.when((pi == 0) & (pj == 0))
+    def _init_out():
+        vals_ref[...] = jnp.full_like(vals_ref, neg)
+        gid_ref[...] = jnp.full_like(gid_ref, -1)
+
+    @pl.when(pj == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    acc_ref[...] += _score_tile(tok_ref, loc_ref, sc_ref, uniq_ref, w_ref,
+                                block_size=acc_block)
+
+    @pl.when(pj == pl.num_programs(1) - 1)
+    def _reduce():
+        acc = acc_ref[...]                                   # [acc_block, B]
+        cand = cand_ref[0, :]                                # [acc_block]
+        acc = jnp.where((cand >= 0)[:, None], acc, neg)
+        prev_v, prev_i = vals_ref[...], gid_ref[...]
+        ext = jnp.concatenate([acc, prev_v], axis=0)
+        _fold_winners(
+            ext, lambda am: jnp.take(cand, jnp.minimum(am, acc_block - 1)),
+            prev_i, mv_ref, mi_ref, n_rows=acc_block, k=k)
+        vals_ref[...] = mv_ref[...]
+        gid_ref[...] = mi_ref[...]
+
+
 @functools.partial(
     jax.jit,
-    static_argnames=("acc_block", "k", "tile_p", "interpret"),
+    static_argnames=("acc_block", "k", "tile_p", "two_level", "interpret"),
 )
 def bm25_gather_score_topk(token_ids: jax.Array, slot_ids: jax.Array,
                            scores: jax.Array, uniq_tokens: jax.Array,
                            weights: jax.Array, candidates: jax.Array, *,
                            acc_block: int, k: int, tile_p: int = 512,
+                           two_level: bool = False,
                            interpret: bool | None = None
                            ) -> tuple[jax.Array, jax.Array]:
-    """Gathered postings -> (values, GLOBAL doc ids) ``[n_chunks, k, B]``.
+    """Gathered postings -> (values, GLOBAL doc ids).
 
     Inputs are the :class:`~repro.sparse.block_csr.GatheredPostings` layout:
     ``[n_chunks, p_pad]`` posting tiles whose ``slot_ids`` index a
     ``[acc_block, B]`` VMEM accumulator, plus the ``[n_chunks, acc_block]``
     candidate table mapping slots back to global doc ids (-1 = pad). Work is
     O(Σ df · B) — independent of both corpus size and total nnz.
+
+    ``two_level=False`` emits per-chunk winners ``[n_chunks, k, B]`` (the
+    caller merges). ``two_level=True`` performs that merge INSIDE the
+    launch — chunk winners fold into a running shard scoreboard and the
+    output is ``[k, B]``, cutting HBM winner traffic and the host merge by
+    ``n_chunks``×.
     """
     nc, p = token_ids.shape
     u, b = weights.shape
@@ -100,17 +198,40 @@ def bm25_gather_score_topk(token_ids: jax.Array, slot_ids: jax.Array,
         interpret = jax.default_backend() != "tpu"
 
     grid = (nc, p // tile_p)
+    in_specs = [
+        pl.BlockSpec((1, tile_p), lambda i, j: (i, j)),      # token_ids
+        pl.BlockSpec((1, tile_p), lambda i, j: (i, j)),      # slot_ids
+        pl.BlockSpec((1, tile_p), lambda i, j: (i, j)),      # scores
+        pl.BlockSpec((u,), lambda i, j: (0,)),               # uniq table
+        pl.BlockSpec((u, b), lambda i, j: (0, 0)),           # weights
+        pl.BlockSpec((1, acc_block), lambda i, j: (i, 0)),   # candidates
+    ]
+    if two_level:
+        return pl.pallas_call(
+            functools.partial(_gather_kernel_shard, acc_block=acc_block,
+                              k=k),
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=(
+                pl.BlockSpec((k, b), lambda i, j: (0, 0)),   # shard values
+                pl.BlockSpec((k, b), lambda i, j: (0, 0)),   # shard ids
+            ),
+            out_shape=(
+                jax.ShapeDtypeStruct((k, b), weights.dtype),
+                jax.ShapeDtypeStruct((k, b), jnp.int32),
+            ),
+            scratch_shapes=[
+                pltpu.VMEM((acc_block, b), weights.dtype),
+                pltpu.VMEM((k, b), weights.dtype),
+                pltpu.VMEM((k, b), jnp.int32),
+            ],
+            interpret=interpret,
+            name="bm25_gather_score_topk_two_level",
+        )(token_ids, slot_ids, scores, uniq_tokens, weights, candidates)
     return pl.pallas_call(
         functools.partial(_gather_kernel, acc_block=acc_block, k=k),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, tile_p), lambda i, j: (i, j)),      # token_ids
-            pl.BlockSpec((1, tile_p), lambda i, j: (i, j)),      # slot_ids
-            pl.BlockSpec((1, tile_p), lambda i, j: (i, j)),      # scores
-            pl.BlockSpec((u,), lambda i, j: (0,)),               # uniq table
-            pl.BlockSpec((u, b), lambda i, j: (0, 0)),           # weights
-            pl.BlockSpec((1, acc_block), lambda i, j: (i, 0)),   # candidates
-        ],
+        in_specs=in_specs,
         out_specs=(
             pl.BlockSpec((1, k, b), lambda i, j: (i, 0, 0)),     # values
             pl.BlockSpec((1, k, b), lambda i, j: (i, 0, 0)),     # global ids
@@ -123,3 +244,136 @@ def bm25_gather_score_topk(token_ids: jax.Array, slot_ids: jax.Array,
         interpret=interpret,
         name="bm25_gather_score_topk",
     )(token_ids, slot_ids, scores, uniq_tokens, weights, candidates)
+
+
+def _resident_kernel(desc_ref, w_ref, doc_hbm, sc_hbm, vals_ref, gid_ref,
+                     acc_ref, dbuf, sbuf, dsem, ssem, mv_ref, mi_ref, *,
+                     block_size: int, frag: int, k: int, n_docs: int):
+    """One fragment of the device-resident gather→score→top-k path.
+
+    The grid walks the batch's fragment table (SMEM, scalar-prefetched;
+    see ``sparse.block_csr.FragmentPlan`` for the row layout). Each step
+    DMAs its ≤``frag`` postings (doc ids + eager scores) out of the
+    HBM-resident CSC arrays at a descriptor-driven dynamic offset, scales
+    by the owning token's ``[B]`` query-weight row (named by the
+    descriptor — no membership search), and one-hot-scatters into the
+    current document block's ``[block_size, B]`` accumulator. Block-final
+    fragments mask tail-padding docs and fold the block into the running
+    shard ``[k, B]`` scoreboard (two-level reduce).
+    """
+    i = pl.program_id(0)
+    start = desc_ref[0, i]
+    valid = desc_ref[1, i]
+    uidx = desc_ref[2, i]
+    blk = desc_ref[3, i]
+    first = desc_ref[4, i]
+    last = desc_ref[5, i]
+    neg = jnp.finfo(vals_ref.dtype).min
+
+    @pl.when(i == 0)
+    def _init_out():
+        vals_ref[...] = jnp.full_like(vals_ref, neg)
+        gid_ref[...] = jnp.full_like(gid_ref, -1)
+
+    @pl.when(first == 1)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    @pl.when(valid > 0)
+    def _score():
+        cp_d = pltpu.make_async_copy(
+            doc_hbm.at[pl.ds(0, 1), pl.ds(start, frag)], dbuf, dsem)
+        cp_s = pltpu.make_async_copy(
+            sc_hbm.at[pl.ds(0, 1), pl.ds(start, frag)], sbuf, ssem)
+        cp_d.start()
+        cp_s.start()
+        cp_d.wait()
+        cp_s.wait()
+        doc = dbuf[0, :]                                     # [frag] int32
+        sc = sbuf[0, :]                                      # [frag] f32
+        ok = (jax.lax.broadcasted_iota(jnp.int32, (frag, 1), 0)
+              < valid)                                       # [frag, 1]
+        w_row = pl.load(w_ref, (pl.ds(uidx, 1), slice(None)))  # [1, B]
+        contrib = jnp.where(ok, sc[:, None], 0.0) * w_row    # [frag, B]
+        # over-read tail postings (ok == False) may carry arbitrary doc
+        # ids, but their contrib rows are zero — a spurious one-hot match
+        # adds exactly 0.
+        loc = doc - blk * block_size
+        d_iota = jax.lax.broadcasted_iota(jnp.int32, (block_size, frag), 0)
+        oneh = (d_iota == loc[None, :]).astype(contrib.dtype)
+        acc_ref[...] += oneh @ contrib                       # [BS, B] MXU
+
+    @pl.when(last == 1)
+    def _reduce():
+        acc = acc_ref[...]                                   # [BS, B]
+        row = jax.lax.broadcasted_iota(jnp.int32, acc.shape, 0)
+        acc = jnp.where(blk * block_size + row < n_docs, acc, neg)
+        prev_v, prev_i = vals_ref[...], gid_ref[...]
+        ext = jnp.concatenate([acc, prev_v], axis=0)
+        _fold_winners(ext, lambda am: blk * block_size + am, prev_i,
+                      mv_ref, mi_ref, n_rows=block_size, k=k)
+        vals_ref[...] = mv_ref[...]
+        gid_ref[...] = mi_ref[...]
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_size", "frag", "k", "n_docs", "interpret"),
+)
+def bm25_resident_score_topk(desc: jax.Array, weights: jax.Array,
+                             doc_ids_res: jax.Array, scores_res: jax.Array,
+                             *, block_size: int, frag: int, k: int,
+                             n_docs: int, interpret: bool | None = None
+                             ) -> tuple[jax.Array, jax.Array]:
+    """Fragment descriptors × resident index -> shard (values, ids) [k, B].
+
+    ``desc`` is the ``[6, nf_pad]`` int32 table from
+    ``sparse.block_csr.fragment_plan`` (scalar-prefetched to SMEM so it can
+    drive DMA descriptors); ``doc_ids_res``/``scores_res`` are the
+    ``[1, nnz_pad]`` HBM-resident CSC arrays of a
+    ``sparse.block_csr.DeviceIndex`` — the ONLY posting data the kernel
+    touches, and it never crosses the host→device boundary per batch.
+    Winners carry global doc ids; blocks the batch never visits are absent
+    (their docs score raw 0 — the caller splices default documents, same
+    contract as the host-gathered path).
+    """
+    nf = desc.shape[1]
+    u, b = weights.shape
+    assert desc.shape[0] == 6, desc.shape
+    assert k <= block_size, (k, block_size)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                    # desc table -> SMEM
+        grid=(nf,),
+        in_specs=[
+            pl.BlockSpec((u, b), lambda i, d: (0, 0)),       # weights VMEM
+            pl.BlockSpec(memory_space=_ANY_SPACE),           # doc ids / HBM
+            pl.BlockSpec(memory_space=_ANY_SPACE),           # scores / HBM
+        ],
+        out_specs=(
+            pl.BlockSpec((k, b), lambda i, d: (0, 0)),       # shard values
+            pl.BlockSpec((k, b), lambda i, d: (0, 0)),       # shard ids
+        ),
+        scratch_shapes=[
+            pltpu.VMEM((block_size, b), weights.dtype),      # block acc
+            pltpu.VMEM((1, frag), jnp.int32),                # doc-id tile
+            pltpu.VMEM((1, frag), jnp.float32),              # score tile
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+            pltpu.VMEM((k, b), weights.dtype),               # fold staging
+            pltpu.VMEM((k, b), jnp.int32),
+        ],
+    )
+    return pl.pallas_call(
+        functools.partial(_resident_kernel, block_size=block_size,
+                          frag=frag, k=k, n_docs=n_docs),
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((k, b), weights.dtype),
+            jax.ShapeDtypeStruct((k, b), jnp.int32),
+        ),
+        interpret=interpret,
+        name="bm25_resident_score_topk",
+    )(desc, weights, doc_ids_res, scores_res)

@@ -16,7 +16,8 @@ import jax.numpy as jnp
 from ..core.retrieval import splice_default_docs
 from .blockwise_topk import blockwise_topk_kernel
 from .bm25_block_score import bm25_block_score, bm25_block_score_topk
-from .bm25_gather_score import bm25_gather_score_topk
+from .bm25_gather_score import bm25_gather_score_topk, \
+    bm25_resident_score_topk
 from .block_segment_sum import block_segment_sum
 from .embedding_bag import embedding_bag_kernel
 
@@ -73,19 +74,24 @@ def bm25_retrieve_blocked(token_ids: jax.Array, local_doc: jax.Array,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("acc_block", "k", "n_docs", "tile_p"))
+    jax.jit, static_argnames=("acc_block", "k", "n_docs", "tile_p",
+                              "two_level"))
 def bm25_retrieve_gathered(token_ids: jax.Array, slot_ids: jax.Array,
                            scores: jax.Array, uniq_tokens: jax.Array,
                            weights: jax.Array, candidates: jax.Array,
                            nonocc_shift: jax.Array, *, acc_block: int,
-                           k: int, n_docs: int, tile_p: int = 512
+                           k: int, n_docs: int, tile_p: int = 512,
+                           two_level: bool = True
                            ) -> tuple[jax.Array, jax.Array]:
     """Query-gathered end-to-end retrieval: O(Σ df) postings -> [B, k].
 
-    Stage 1 is the gathered fused kernel: per-chunk ``[nc, k, B]`` winners
-    carrying GLOBAL doc ids straight out of the candidate-sized VMEM
-    accumulator. Stage 2 merges the ``nc·k`` candidates per query and
-    splices in **default documents**: a document outside the candidate set
+    Stage 1 is the gathered fused kernel. With ``two_level=True`` (default)
+    the chunk→shard winner merge happens INSIDE the launch (running
+    ``[k, B]`` scoreboard in VMEM) and only ``[k, B]`` shard winners reach
+    HBM; ``two_level=False`` keeps the per-chunk ``[nc, k, B]`` output and
+    merges here — ``nc``× more winner traffic, retained as the oracle for
+    the two-level reduction's exactness tests. Stage 2 splices in
+    **default documents**: a document outside the candidate set
     contributes no posting, so its exact score is the per-query
     nonoccurrence shift (= raw 0 before the shift). Those defaults matter
     whenever a matched doc scores *below* zero (robertson IDF) or fewer
@@ -97,14 +103,59 @@ def bm25_retrieve_gathered(token_ids: jax.Array, slot_ids: jax.Array,
     """
     kk = min(k, n_docs)
     kb = min(kk, acc_block)
-    vals, gids = bm25_gather_score_topk(
-        token_ids, slot_ids, scores, uniq_tokens, weights, candidates,
-        acc_block=acc_block, k=kb, tile_p=tile_p)
-    nc, _, b = vals.shape
-    flat_v = jnp.transpose(vals, (2, 0, 1)).reshape(b, nc * kb)
-    flat_i = jnp.transpose(gids, (2, 0, 1)).reshape(b, nc * kb)
+    if two_level and kb < kk:
+        # the in-launch fold keeps only kb winners; ranks kb+1..kk would be
+        # silently lost. The chunked path supplies nc·kb candidates (every
+        # chunk holds ≤ acc_block ≤ kk candidates, so per-chunk top-kb IS
+        # the chunk's full candidate set) — exact, so fall back to it.
+        two_level = False
+    if two_level:
+        vals, gids = bm25_gather_score_topk(
+            token_ids, slot_ids, scores, uniq_tokens, weights, candidates,
+            acc_block=acc_block, k=kb, tile_p=tile_p, two_level=True)
+        flat_v = vals.T                                     # [B, kb]
+        flat_i = gids.T
+    else:
+        vals, gids = bm25_gather_score_topk(
+            token_ids, slot_ids, scores, uniq_tokens, weights, candidates,
+            acc_block=acc_block, k=kb, tile_p=tile_p)
+        nc, _, b = vals.shape
+        flat_v = jnp.transpose(vals, (2, 0, 1)).reshape(b, nc * kb)
+        flat_i = jnp.transpose(gids, (2, 0, 1)).reshape(b, nc * kb)
     ids, mvals = splice_default_docs(flat_v, flat_i,
                                      candidates.reshape(-1), kk, n_docs)
+    return ids, mvals + nonocc_shift[:, None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_size", "frag", "k", "n_docs"))
+def bm25_retrieve_resident(desc: jax.Array, weights: jax.Array,
+                           doc_ids_res: jax.Array, scores_res: jax.Array,
+                           def_ids: jax.Array, nonocc_shift: jax.Array, *,
+                           block_size: int, frag: int, k: int, n_docs: int
+                           ) -> tuple[jax.Array, jax.Array]:
+    """Device-resident retrieval: fragment descriptors -> (ids, scores) [B, k].
+
+    The zero-posting-copy steady-state path: ``doc_ids_res``/``scores_res``
+    are the HBM-resident CSC arrays of a ``sparse.block_csr.DeviceIndex``
+    (uploaded once at engine build/rescale); the per-batch operands are the
+    ``[6, nf]`` fragment table, the ``[U, B]`` query-weight table, ``k``
+    host-picked default doc ids from unvisited blocks
+    (``core.retrieval.default_doc_ids``), and the ``[B]`` §2.1 shift — all
+    O(U + k + B), none of it postings. The kernel already returns merged
+    shard winners (two-level reduce), so the only post-processing is the
+    default-document splice (docs in unvisited blocks score raw 0, which
+    matters for negative-IDF variants and undersized candidate sets) and
+    the rank-invariant shift add.
+    """
+    kk = min(k, n_docs)
+    vals, gids = bm25_resident_score_topk(
+        desc, weights, doc_ids_res, scores_res, block_size=block_size,
+        frag=frag, k=kk, n_docs=n_docs)
+    # the ONE splice definition (core.retrieval), fed the precomputed
+    # unvisited-block default ids instead of the j-th-missing search
+    ids, mvals = splice_default_docs(vals.T, gids.T, None, kk, n_docs,
+                                     default_ids=def_ids)
     return ids, mvals + nonocc_shift[:, None]
 
 

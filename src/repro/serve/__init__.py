@@ -1,8 +1,9 @@
 """Serving stack: sharded retrieval engine with hedging, LM decode engine."""
 
-from .retrieval_engine import (BlockedRetriever, GatheredRetriever,
-                               RetrievalEngine, ShardRuntime)
+from .retrieval_engine import (BlockedRetriever, DeviceRetriever,
+                               GatheredRetriever, RetrievalEngine,
+                               ShardRuntime)
 from .decode_engine import DecodeEngine
 
-__all__ = ["BlockedRetriever", "GatheredRetriever", "RetrievalEngine",
-           "ShardRuntime", "DecodeEngine"]
+__all__ = ["BlockedRetriever", "DeviceRetriever", "GatheredRetriever",
+           "RetrievalEngine", "ShardRuntime", "DecodeEngine"]

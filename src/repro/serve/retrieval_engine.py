@@ -10,17 +10,30 @@ layer over document shards, and the operational concerns become:
   per-shard top-k is a superset property, a missed shard can only remove
   candidates it owns — results from responsive shards stay exact.
 * elasticity — ``rescale(n_shards)`` re-buckets the postings (pure host
-  re-slicing, ``core.index.reshard_index``) when the pool grows/shrinks.
+  re-slicing, ``core.index.reshard_index``) when the pool grows/shrinks;
+  shards whose postings are byte-identical after the reshard KEEP their
+  runtime (device arrays stay resident, no re-upload, no re-warmup —
+  ``engine.last_build_stats`` reports the reuse count).
 
 * device offload — each ``ShardRuntime`` scores either host-side
-  (``scorer="scipy"``, the paper's CSC slice+sum) or on device through one
-  of the two fused Pallas regimes: ``scorer="blocked"``
-  (:class:`BlockedRetriever`, full-scan — streams every posting tile, wins
-  when Σ df approaches nnz) or ``scorer="gathered"``
-  (:class:`GatheredRetriever`, query-driven — gathers only the query
-  tokens' posting runs, O(Σ df) work independent of corpus size, wins
-  everywhere else). Both re-block/gather without ever materializing the
-  dense score vector.
+  (``scorer="scipy"``, the paper's CSC slice+sum) or through ONE device
+  scorer, :class:`DeviceRetriever` (``scorer="auto"``), built on an
+  HBM-resident ``sparse.block_csr.DeviceIndex``: the shifted CSC posting
+  arrays AND the block-bucketed full-scan layout are uploaded once at
+  build/rescale and live on device across calls. Per batch the planner
+  (``core.retrieval.plan_retrieval``) compares the batch's Σ df — free,
+  from the host descriptor table — against nnz and picks the regime:
+
+    - **full-scan**  (O(nnz), ``bm25_block_score_topk``) when the batch is
+      dense enough that every posting tile would be gathered anyway;
+    - **gathered**   (O(Σ df), ``bm25_resident_score_topk``) everywhere
+      else — run-fragment descriptors go to SMEM, posting tiles are DMA'd
+      straight out of the resident index, and the steady-state path ships
+      ZERO posting bytes host→device (a host-gather fallback with a
+      hot-token LRU remains for CPU/interpret mode).
+
+  ``scorer="blocked"`` / ``scorer="gathered"`` remain as forced-regime
+  aliases of the same class.
 
 * batching — ``retrieve_batch`` runs B queries through ONE kernel launch
   per shard (the batch dimension is free on the MXU), amortizing launch
@@ -122,114 +135,177 @@ class _DeviceRetrieverBase:
         return ids[0], vals[0]
 
 
-class BlockedRetriever(_DeviceRetrieverBase):
-    """Full-scan fused-kernel scorer (drop-in for :class:`ScipyBM25`).
+class DeviceRetriever(_DeviceRetrieverBase):
+    """ONE device scorer, two regimes, zero per-batch posting copies.
 
-    Blocks the shard's postings once (``sparse.block_csr``) and serves
-    ``retrieve``/``retrieve_batch`` via ``kernels.ops.bm25_retrieve_blocked``:
-    the dense per-document score vector never exists anywhere — scores
-    stream from the posting tiles into a VMEM accumulator and leave as
-    ``[k]`` winners. Work is O(nnz) per batch regardless of the query —
-    prefer :class:`GatheredRetriever` unless batches are dense enough that
-    Σ df ≈ nnz (see the module docstring's regime notes).
+    Builds an HBM-resident ``sparse.block_csr.DeviceIndex`` at construction
+    (posting arrays uploaded ONCE — both the block-bucketed full-scan
+    layout and the CSC arrays the resident gather kernel DMAs from) and
+    plans every batch through ``core.retrieval.plan_retrieval``:
+
+    * ``regime="auto"`` (default) — compare the batch's Σ df (free, host
+      descriptor table) against nnz; full-scan when the work ratio is
+      below the calibrated crossover, gathered otherwise. The decision is
+      recorded in ``self.last_plan`` for observability.
+    * ``regime="blocked"`` / ``"gathered"`` — force that regime (the
+      planner still runs, so the evidence is logged); these back the
+      :class:`BlockedRetriever` / :class:`GatheredRetriever` aliases.
+
+    The gathered regime has two executions:
+
+    * ``gather="resident"`` — fragment descriptors (``fragment_plan``) go
+      to SMEM and the scalar-prefetch kernel DMAs posting tiles straight
+      out of the resident index. Per-batch host→device traffic is O(U)
+      descriptors + query tables; posting bytes shipped: **zero**
+      (asserted by tests via ``sparse.block_csr.TRANSFERS``).
+    * ``gather="host"`` — the candidate-compacted host gather (fallback
+      for CPU/interpret mode, where fragment-at-a-time DMA interpretation
+      is slow); ships O(Σ df) postings per batch, with a hot-token LRU
+      (:class:`~repro.sparse.block_csr.PostingRunCache`) so Zipf-head
+      tokens are re-gathered once, not per batch.
+
+    Default ``gather=None`` resolves to resident on TPU, host elsewhere.
+
+    Budgets stay **adaptive**: fragment counts, posting tiles and chunk
+    counts are sized from the batch's ACTUAL demand, pow2-bucketed
+    (``bucket_pow2``) so recompiles stay O(log max-demand) and nothing is
+    ever silently truncated. ``acc_block`` (host-gather chunk height)
+    stays SMALL — the one-hot scatter costs ``acc_block`` MACs/posting, so
+    big candidate sets get MORE chunks, keeping work linear in Σ df.
     """
 
-    def __init__(self, index: BM25Index, *, block_size: int = 512,
-                 tile: int = 512, q_max: int = 32):
-        import jax.numpy as jnp
-
-        from ..sparse.block_csr import block_postings_from_index
+    def __init__(self, index: BM25Index, *, regime: str = "auto",
+                 block_size: int = 512, tile: int = 512,
+                 acc_block: int = 512, q_max: int = 32, frag: int = 512,
+                 crossover: float | None = None, gather: str | None = None,
+                 run_cache: int = 256):
+        from ..sparse.block_csr import DeviceIndex, PostingRunCache
+        if regime not in ("auto", "blocked", "gathered"):
+            raise ValueError(f"unknown regime {regime!r}")
+        if gather is None:
+            import jax
+            gather = "resident" if jax.default_backend() == "tpu" else "host"
+        if gather not in ("resident", "host"):
+            raise ValueError(f"unknown gather mode {gather!r}")
         self.index = index
+        self.regime = regime
+        self.gather_mode = gather
         self.q_max = q_max                       # bucket floor, not a cap
-        self.n_docs = int(index.doc_lens.size)
-        bp = block_postings_from_index(index, block_size=block_size,
-                                       tile=tile)
-        self.block_size = bp.block_size
-        self.tile_p = min(tile, bp.nnz_pad)
-        self._tok = jnp.asarray(bp.token_ids)
-        self._loc = jnp.asarray(bp.local_doc)
-        self._sc = jnp.asarray(bp.scores)
-
-    def retrieve_batch(self, query_tokens: Sequence[np.ndarray], k: int
-                       ) -> tuple[np.ndarray, np.ndarray]:
-        """B queries -> (ids [B, k], scores [B, k]) in ONE kernel launch."""
-        import jax.numpy as jnp
-
-        from ..kernels import ops
-        if self.n_docs == 0 or k <= 0:           # empty shard post-rescale
-            return _empty_batch(len(query_tokens))
-        b, _, uniq, weights, shift = self._pack_batch(query_tokens)
-        ids, vals = ops.bm25_retrieve_blocked(
-            self._tok, self._loc, self._sc, jnp.asarray(uniq),
-            jnp.asarray(weights), jnp.asarray(shift),
-            block_size=self.block_size, n_docs=self.n_docs,
-            k=min(k, self.n_docs), tile_p=self.tile_p)
-        return (np.asarray(ids[:b]).astype(np.int64) + self.index.doc_offset,
-                np.asarray(vals[:b]))
-
-
-class GatheredRetriever(_DeviceRetrieverBase):
-    """Query-driven gather→score→top-k scorer — the O(Σ df) device regime.
-
-    The inverted-index asymptotics of the paper, restored on device: from
-    the CSC ``indptr`` compute the batch's posting-run descriptors, gather
-    ONLY those runs into candidate-compacted tiles
-    (``sparse.block_csr.gather_posting_runs``) and push them through
-    ``kernels.ops.bm25_retrieve_gathered`` — work O(Σ df(q)·B), independent
-    of corpus size and nnz, vs the full-scan :class:`BlockedRetriever`'s
-    O(nnz·B).
-
-    Budgets are **adaptive**: posting tiles and the candidate chunk count
-    are sized from the batch's ACTUAL Σ df / candidate count, rounded up to
-    power-of-two buckets (``core.scoring.bucket_pow2``) so recompiles stay
-    O(log max-demand). Because shapes are sized from actuals, the host path
-    cannot overflow — there is nothing to truncate silently; a demand
-    spike just lands in a larger bucket (one extra compile, exact scores).
-
-    ``acc_block`` (the per-chunk accumulator height) stays SMALL and fixed:
-    the kernel's one-hot scatter costs ``acc_block`` MACs per posting, so
-    large candidate sets are handled by MORE chunks, keeping total work
-    linear in Σ df (see ``sparse.block_csr.GatheredPostings``).
-    """
-
-    def __init__(self, index: BM25Index, *, tile: int = 512,
-                 acc_block: int = 512, q_max: int = 32):
-        self.index = index
+        self.block_size = block_size
         self.tile = tile
-        self.q_max = q_max                       # unique-table bucket floor
-        self.acc_block = acc_block               # candidate chunk height
+        self.acc_block = acc_block               # host-gather chunk height
+        self.crossover = crossover
         self.n_docs = int(index.doc_lens.size)
+        self.run_cache = (PostingRunCache(run_cache)
+                          if gather == "host" and run_cache > 0 else None)
+        self.dindex = DeviceIndex.build(
+            index, block_size=block_size, tile=tile, frag=frag,
+            with_blocked=regime in ("auto", "blocked"),
+            with_csc=regime in ("auto", "gathered") and gather == "resident")
+        self.last_plan = None
 
-    def retrieve_batch(self, query_tokens: Sequence[np.ndarray], k: int
+    def warmup(self, *, k: int) -> None:
+        """Compile BOTH resident regimes' floor buckets at engine build."""
+        if self.n_docs == 0 or k <= 0:
+            return
+        q = np.zeros(1, dtype=np.int32)
+        kk = min(k, self.n_docs)
+        if self.regime in ("auto", "blocked"):
+            self.retrieve_batch([q], kk, regime="blocked")
+        if self.regime in ("auto", "gathered"):
+            self.retrieve_batch([q], kk, regime="gathered")
+
+    def retrieve_batch(self, query_tokens: Sequence[np.ndarray], k: int,
+                       *, regime: str | None = None
                        ) -> tuple[np.ndarray, np.ndarray]:
-        """B queries -> (ids [B, k], scores [B, k]), one gathered launch."""
+        """B queries -> (ids [B, k], scores [B, k]), one launch per batch.
+
+        ``regime`` overrides this call's plan (used by warmup and the
+        benchmark sweep); normal traffic leaves it None and lets the cost
+        model decide.
+        """
         import jax.numpy as jnp
 
+        from ..core.retrieval import default_doc_ids, plan_retrieval
         from ..core.scoring import bucket_pow2
         from ..kernels import ops
-        from ..sparse.block_csr import gather_posting_runs
+        from ..sparse.block_csr import (fragment_plan, gather_posting_runs,
+                                        put_descriptor_array,
+                                        put_posting_arrays)
         if self.n_docs == 0 or k <= 0:           # empty shard post-rescale
             return _empty_batch(len(query_tokens))
         b, uniq_batch, uniq_tab, weights, shift = \
             self._pack_batch(query_tokens)
         kk = min(k, self.n_docs)
-        # chunk height grows only if k outruns it (kernel needs k ≤
-        # acc_block); posting/chunk dims bucket inside the gather
-        acc_block = bucket_pow2(kk, floor=self.acc_block)
-        gp = gather_posting_runs(self.index, uniq_batch,
-                                 acc_block=acc_block, tile=self.tile)
-        ids, vals = ops.bm25_retrieve_gathered(
-            jnp.asarray(gp.token_ids), jnp.asarray(gp.slot_ids),
-            jnp.asarray(gp.scores), jnp.asarray(uniq_tab),
-            jnp.asarray(weights), jnp.asarray(gp.candidates),
-            jnp.asarray(shift), acc_block=gp.acc_block, k=kk,
-            n_docs=self.n_docs, tile_p=min(self.tile, gp.p_pad))
+        plan = plan_retrieval(self.dindex.sum_df(uniq_batch),
+                              self.dindex.nnz, regime=regime or self.regime,
+                              crossover=self.crossover)
+        self.last_plan = plan
+        if plan.regime == "blocked":
+            if self.dindex.blk_tok is None:
+                raise ValueError("blocked regime requested but this "
+                                 "retriever was built gathered-only")
+            ids, vals = ops.bm25_retrieve_blocked(
+                self.dindex.blk_tok, self.dindex.blk_loc,
+                self.dindex.blk_sc, jnp.asarray(uniq_tab),
+                jnp.asarray(weights), jnp.asarray(shift),
+                block_size=self.dindex.block_size, n_docs=self.n_docs,
+                k=kk, tile_p=self.dindex.tile_p)
+        elif self.gather_mode == "resident":
+            if self.dindex.csc_doc_ids is None:
+                raise ValueError("resident gather requested but this "
+                                 "retriever was built blocked-only")
+            # accumulator window grows only if k outruns it (the shard
+            # scoreboard needs k ≤ block height); fragment count buckets
+            # inside fragment_plan
+            rblock = bucket_pow2(kk, floor=self.block_size)
+            fp = fragment_plan(self.index, uniq_batch, block_size=rblock,
+                               frag=self.dindex.frag)
+            dids = default_doc_ids(fp.vis_blocks, kk, self.n_docs, rblock)
+            ids, vals = ops.bm25_retrieve_resident(
+                put_descriptor_array(fp.desc), jnp.asarray(weights),
+                self.dindex.csc_doc_ids, self.dindex.csc_scores,
+                jnp.asarray(dids), jnp.asarray(shift), block_size=rblock,
+                frag=self.dindex.frag, k=kk, n_docs=self.n_docs)
+        else:
+            # host-gather fallback: chunk height grows only if k outruns
+            # it; posting/chunk dims bucket inside the gather. The uploads
+            # below are the per-batch posting copies the resident path
+            # eliminates — routed through the counting helper on purpose.
+            acc_block = bucket_pow2(kk, floor=self.acc_block)
+            gp = gather_posting_runs(self.index, uniq_batch,
+                                     acc_block=acc_block, tile=self.tile,
+                                     cache=self.run_cache)
+            tok, slot, sc, cand = put_posting_arrays(
+                gp.token_ids, gp.slot_ids, gp.scores, gp.candidates)
+            ids, vals = ops.bm25_retrieve_gathered(
+                tok, slot, sc, jnp.asarray(uniq_tab), jnp.asarray(weights),
+                cand, jnp.asarray(shift), acc_block=gp.acc_block, k=kk,
+                n_docs=self.n_docs, tile_p=min(self.tile, gp.p_pad))
         return (np.asarray(ids[:b]).astype(np.int64) + self.index.doc_offset,
                 np.asarray(vals[:b]))
 
 
-_SCORERS = {"scipy": ScipyBM25, "blocked": BlockedRetriever,
-            "gathered": GatheredRetriever}
+class BlockedRetriever(DeviceRetriever):
+    """Forced full-scan alias of :class:`DeviceRetriever` (compat shim)."""
+
+    def __init__(self, index: BM25Index, *, block_size: int = 512,
+                 tile: int = 512, q_max: int = 32, **kwargs):
+        super().__init__(index, regime="blocked", block_size=block_size,
+                         tile=tile, q_max=q_max, **kwargs)
+
+
+class GatheredRetriever(DeviceRetriever):
+    """Forced query-gathered alias of :class:`DeviceRetriever`."""
+
+    def __init__(self, index: BM25Index, *, tile: int = 512,
+                 acc_block: int = 512, q_max: int = 32, **kwargs):
+        super().__init__(index, regime="gathered", tile=tile,
+                         acc_block=acc_block, q_max=q_max, **kwargs)
+
+
+_SCORERS = {"scipy": ScipyBM25, "auto": DeviceRetriever,
+            "blocked": BlockedRetriever, "gathered": GatheredRetriever}
 
 
 @dataclass
@@ -238,13 +314,14 @@ class ShardRuntime:
 
     index: BM25Index
     delay: Callable[[], float] | None = None     # test hook: seconds to sleep
-    scorer: str = "scipy"                        # "scipy"|"blocked"|"gathered"
+    scorer: str = "scipy"          # "scipy"|"auto"|"blocked"|"gathered"
+    scorer_opts: dict = field(default_factory=dict)  # device-scorer kwargs
 
     def __post_init__(self):
         if self.scorer not in _SCORERS:
             raise ValueError(f"unknown scorer {self.scorer!r}; "
                              f"available: {sorted(_SCORERS)}")
-        self._scorer = _SCORERS[self.scorer](self.index)
+        self._scorer = _SCORERS[self.scorer](self.index, **self.scorer_opts)
 
     def warmup(self, k: int) -> None:
         """Pre-compile the device scorer so query #1 skips compilation."""
@@ -284,35 +361,79 @@ class RetrievalResult:
     latency_s: float
 
 
+def _same_shard(a: BM25Index, b: BM25Index) -> bool:
+    """Byte-identical postings, doc range AND shift vector — safe to keep
+    the resident device arrays of ``a``'s runtime for ``b``. ``doc_lens``
+    must match too: a boundary moving through posting-less documents
+    changes the shard's doc range without changing a single posting, and
+    reusing the old runtime would then serve documents a neighbor shard
+    now owns (duplicate results after the merge)."""
+    return a is b or (
+        int(a.doc_offset) == int(b.doc_offset)
+        and np.array_equal(a.doc_lens, b.doc_lens)
+        and np.array_equal(a.indptr, b.indptr)
+        and np.array_equal(a.doc_ids, b.doc_ids)
+        and np.array_equal(a.scores, b.scores)
+        and np.array_equal(a.nonoccurrence, b.nonoccurrence))
+
+
 class RetrievalEngine:
     def __init__(self, shards: Sequence[BM25Index], *, k: int = 10,
                  deadline_s: float = 0.5, quorum: float = 0.75,
                  max_workers: int = 8,
                  delay: Callable[[int], Callable[[], float] | None] = None,
-                 scorer: str = "scipy", warmup: bool = True):
+                 scorer: str = "scipy", warmup: bool = True,
+                 scorer_opts: dict | None = None):
         self.k = k
         self.deadline_s = deadline_s
         self.quorum = quorum
         self.scorer = scorer
+        self.scorer_opts = dict(scorer_opts or {})
         self.warmup = warmup
         self._delay_factory = delay
         self._pool = ThreadPoolExecutor(max_workers=max_workers)
         self._build_runtimes(list(shards))
 
     def _build_runtimes(self, shards: list[BM25Index]) -> None:
-        self.shards = shards
-        self.runtimes = [
-            ShardRuntime(s, delay=self._delay_factory(i)
-                         if self._delay_factory else None,
-                         scorer=self.scorer)
-            for i, s in enumerate(shards)
-        ]
-        if self.warmup:
-            # compile the device scorers at BUILD time (and after every
-            # rescale) so the first live query never pays jit compilation —
-            # on the floor buckets, which absorb typical traffic.
-            for rt in self.runtimes:
+        """(Re)build shard runtimes, REUSING any whose postings didn't move.
+
+        Rescale re-uploads only the shards whose postings changed: a
+        runtime whose index is byte-identical to a new shard keeps its
+        device-resident arrays and compiled-fn cache (no re-upload, no
+        re-warmup). ``last_build_stats`` records the split — a same-count
+        rescale reuses everything, a boundary-moving one rebuilds only the
+        moved shards.
+        """
+        old = list(getattr(self, "runtimes", []))
+        pool: dict[tuple, list[ShardRuntime]] = {}
+        for rt in old:
+            key = (int(rt.index.doc_offset), int(rt.index.doc_ids.size))
+            pool.setdefault(key, []).append(rt)
+        runtimes, reused = [], 0
+        for i, s in enumerate(shards):
+            delay = self._delay_factory(i) if self._delay_factory else None
+            cands = pool.get((int(s.doc_offset), int(s.doc_ids.size)), [])
+            hit = next((rt for rt in cands if _same_shard(rt.index, s)),
+                       None)
+            if hit is not None:
+                cands.remove(hit)
+                hit.delay = delay
+                runtimes.append(hit)
+                reused += 1
+                continue
+            rt = ShardRuntime(s, delay=delay, scorer=self.scorer,
+                              scorer_opts=self.scorer_opts)
+            if self.warmup:
+                # compile the device scorers at BUILD time (and after every
+                # rescale) so the first live query never pays jit
+                # compilation — on the floor buckets, which absorb typical
+                # traffic.
                 rt.warmup(self.k)
+            runtimes.append(rt)
+        self.shards = shards
+        self.runtimes = runtimes
+        self.last_build_stats = {"reused": reused,
+                                 "built": len(shards) - reused}
 
     # -- control plane ------------------------------------------------------
     def rescale(self, n_shards: int) -> None:

@@ -1,0 +1,469 @@
+"""Device-resident index + cost-model planner (the zero-copy serving path).
+
+Pins the PR-3 contract at every layer:
+
+* **sparse** — ``DeviceIndex`` uploads posting arrays once (counted by the
+  ``TRANSFERS`` instrumentation); ``fragment_plan`` compiles a batch into
+  block-grouped run fragments that exactly cover Σ df; the descriptor-only
+  mode of ``gather_posting_runs`` never copies postings; the hot-token LRU
+  makes the host fallback byte-identical while re-gathering hot runs once.
+* **kernel** — the scalar-prefetch resident kernel and the two-level
+  (chunk→shard) reduction are exact against the ``ScipyBM25`` oracle on
+  all five variants, including robertson's negative IDF where default
+  (never-touched) documents must outrank matched ones.
+* **core** — ``plan_retrieval`` picks full-scan for head-heavy batches on
+  tiny vocabularies (Σ df ≈ nnz), gathered for tail batches on large
+  corpora, honors forced regimes, and is monotone in the work ratio.
+* **serve** — one ``DeviceRetriever`` behind ``scorer="auto"``; steady-state
+  ``retrieve_batch`` on a resident index ships ZERO posting bytes
+  host→device; ``rescale`` reuses runtimes for shards whose postings did
+  not move (no re-upload).
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from conftest import given, make_corpus, settings, st
+from repro.core import (BM25Params, ScipyBM25, build_index,
+                        build_sharded_indexes, default_doc_ids,
+                        dense_oracle_scores, pad_queries, plan_retrieval,
+                        topk_numpy)
+from repro.core.retrieval import DEFAULT_CROSSOVER
+from repro.serve import (BlockedRetriever, DeviceRetriever,
+                         GatheredRetriever, RetrievalEngine)
+from repro.sparse.block_csr import (TRANSFERS, DeviceIndex, PostingRunCache,
+                                    fragment_plan, gather_posting_runs,
+                                    reset_transfer_stats)
+
+ALL_VARIANTS = ["robertson", "atire", "lucene", "bm25l", "bm25+"]
+
+SMALL = dict(block_size=16, tile=16, acc_block=16, frag=8, q_max=8)
+
+
+# -- tentpole: scalar-prefetch resident path == ScipyBM25 oracle -------------
+
+@pytest.mark.parametrize("method", ALL_VARIANTS)
+def test_resident_matches_oracle_all_variants(method, rng):
+    corpus = make_corpus(rng, n_docs=90, n_vocab=64, max_len=20)
+    idx = build_index(corpus, 64, params=BM25Params(method=method))
+    dr = DeviceRetriever(idx, regime="gathered", gather="resident", **SMALL)
+    queries = [rng.integers(0, 64, size=rng.integers(1, 6)).astype(np.int32)
+               for _ in range(4)]
+    ids, vals = dr.retrieve_batch(queries, 7)
+    assert dr.last_plan.sum_df < idx.nnz  # really did less than a full scan
+    sc = ScipyBM25(idx)
+    for i, q in enumerate(queries):
+        oracle = sc.score(q)
+        _, ref_v = topk_numpy(oracle[None], 7)
+        np.testing.assert_allclose(vals[i], ref_v[0], atol=1e-4)
+        # returned ids carry their exact oracle scores
+        np.testing.assert_allclose(oracle[ids[i]], vals[i], atol=1e-4)
+
+
+def test_resident_defaults_beat_negative_scores():
+    """robertson head tokens score NEGATIVE; docs in blocks the batch never
+    visits score exactly 0 and must win — the resident path recovers them
+    via the unvisited-block default splice."""
+    rng = np.random.default_rng(7)
+    corpus = [rng.integers(0, 6, size=rng.integers(3, 10)).astype(np.int32)
+              for _ in range(40)]
+    idx = build_index(corpus, 6, params=BM25Params(method="robertson"))
+    dr = DeviceRetriever(idx, regime="gathered", gather="resident", **SMALL)
+    q = np.array([0, 1], dtype=np.int32)          # head tokens, negative IDF
+    ids, vals = dr.retrieve_batch([q], 10)
+    oracle = ScipyBM25(idx).score(q)
+    _, ref_v = topk_numpy(oracle[None], 10)
+    np.testing.assert_allclose(vals[0], ref_v[0], atol=1e-5)
+    np.testing.assert_allclose(oracle[ids[0]], vals[0], atol=1e-5)
+    assert (vals[0] == 0.0).any()                 # defaults actually won
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 2 ** 31), k=st.integers(1, 12),
+       variant=st.sampled_from(ALL_VARIANTS))
+def test_property_resident_equals_topk_numpy(seed, k, variant):
+    rng = np.random.default_rng(seed)
+    v = int(rng.integers(20, 80))
+    corpus = [rng.integers(0, v, size=rng.integers(1, 25)).astype(np.int32)
+              for _ in range(int(rng.integers(20, 120)))]
+    k = min(k, len(corpus))
+    idx = build_index(corpus, v, params=BM25Params(method=variant))
+    dr = DeviceRetriever(idx, regime="gathered", gather="resident", **SMALL)
+    queries = [rng.integers(0, v, size=rng.integers(1, 7)).astype(np.int32)
+               for _ in range(3)]
+    ids, vals = dr.retrieve_batch(queries, k)
+    sc = ScipyBM25(idx)
+    for i, q in enumerate(queries):
+        oracle = sc.score(q)
+        _, ref_v = topk_numpy(oracle[None], k)
+        np.testing.assert_allclose(vals[i], ref_v[0], atol=1e-4)
+        np.testing.assert_allclose(oracle[ids[i]], vals[i], atol=1e-4)
+
+
+def test_resident_degenerate_queries(rng):
+    """Empty queries and df=0 tokens produce NO fragments — results must
+    still be the exact all-defaults top-k."""
+    corpus = make_corpus(rng, n_docs=30, n_vocab=50)
+    for method in ("lucene", "bm25l"):            # sparse + shifted
+        idx = build_index(corpus, 50, params=BM25Params(method=method))
+        dr = DeviceRetriever(idx, regime="gathered", gather="resident",
+                             **SMALL)
+        sc = ScipyBM25(idx)
+        for q in (np.zeros(0, dtype=np.int32),
+                  np.array([48, 49], dtype=np.int32)):  # likely-sparse tail
+            ids, vals = dr.retrieve_batch([q], 5)
+            oracle = sc.score(q)
+            _, ref_v = topk_numpy(oracle[None], 5)
+            np.testing.assert_allclose(vals[0], ref_v[0], atol=1e-5)
+            np.testing.assert_allclose(oracle[ids[0]], vals[0], atol=1e-5)
+
+
+# -- tentpole: zero per-batch posting copies on a resident index -------------
+
+def test_steady_state_ships_zero_posting_bytes(rng):
+    """THE acceptance invariant: after build, batched serving on a resident
+    index performs no host→device posting-array transfer — only O(U)
+    descriptor/query traffic. The host-gather fallback, by contrast, ships
+    postings every batch (that contrast is what the counters prove)."""
+    corpus = make_corpus(rng, n_docs=120, n_vocab=60)
+    idx = build_index(corpus, 60, params=BM25Params(method="lucene"))
+    reset_transfer_stats()
+    dr = DeviceRetriever(idx, regime="auto", gather="resident", **SMALL)
+    build_uploads = TRANSFERS.posting_uploads
+    assert build_uploads > 0                      # the one-time residency
+    dr.warmup(k=5)                                # compile both regimes
+    reset_transfer_stats()
+    qs = [rng.integers(0, 60, size=4).astype(np.int32) for _ in range(5)]
+    for regime in (None, "blocked", "gathered"):  # auto + both forced
+        for _ in range(2):
+            dr.retrieve_batch(qs, 5, regime=regime)
+    assert TRANSFERS.posting_uploads == 0, vars(TRANSFERS)
+    assert TRANSFERS.posting_bytes == 0
+    assert TRANSFERS.descriptor_uploads > 0       # descriptors DID flow
+    # contrast: the host-gather fallback pays O(Σ df) uploads per batch
+    host = DeviceRetriever(idx, regime="gathered", gather="host", **SMALL)
+    reset_transfer_stats()
+    host.retrieve_batch(qs, 5)
+    assert TRANSFERS.posting_uploads > 0
+    assert TRANSFERS.posting_bytes > 0
+
+
+def test_fragment_plan_covers_sum_df_and_groups_blocks(rng):
+    corpus = make_corpus(rng, n_docs=100, n_vocab=40, max_len=25)
+    idx = build_index(corpus, 40, params=BM25Params())
+    uniq = np.unique(rng.integers(0, 40, size=6)).astype(np.int64)
+    fp = fragment_plan(idx, uniq, block_size=16, frag=8)
+    df = np.diff(idx.indptr)
+    assert fp.sum_df == int(df[uniq].sum())
+    d = fp.desc
+    n = fp.n_frags
+    # fragments exactly cover Σ df, padding slots carry zero valid
+    assert int(d[1, :n].sum()) == fp.sum_df
+    assert (d[1, n:] == 0).all()
+    # every fragment's postings really belong to (token, block)
+    for j in range(n):
+        start, valid, u, blk = d[0, j], d[1, j], d[2, j], d[3, j]
+        lo, hi = idx.indptr[uniq[u]], idx.indptr[uniq[u] + 1]
+        assert lo <= start and start + valid <= hi
+        docs = idx.doc_ids[start:start + valid]
+        assert (docs // 16 == blk).all()
+    # block-grouped: first/last flags delimit maximal constant-block spans
+    blocks = d[3, :n]
+    assert (np.flatnonzero(d[4, :n] == 1)
+            == np.flatnonzero(np.r_[True, blocks[1:] != blocks[:-1]])).all()
+    np.testing.assert_array_equal(fp.vis_blocks, np.unique(blocks))
+    # descriptor-only gather emits the same traversal plan, no copies
+    rd = gather_posting_runs(idx, uniq, descriptors_only=True)
+    assert rd.sum_df == fp.sum_df
+    np.testing.assert_array_equal(rd.lens, df[uniq])
+
+
+def test_default_doc_ids_skips_visited_blocks():
+    dids = default_doc_ids(np.array([0, 2]), k=5, n_docs=50, block_size=16)
+    # blocks 1 and 3 are unvisited -> ids 16.. then 48..
+    np.testing.assert_array_equal(dids, [16, 17, 18, 19, 20])
+    dids = default_doc_ids(np.array([0, 1, 2]), k=5, n_docs=50,
+                           block_size=16)
+    np.testing.assert_array_equal(dids, [48, 49, 50, 50, 50])  # padded
+    assert (default_doc_ids(np.arange(4), 3, 50, 16) == 50).all()
+
+
+# -- cost-model planner -------------------------------------------------------
+
+def test_planner_head_heavy_tiny_vocab_full_scans(rng):
+    """Tiny vocabulary + head-heavy batch: Σ df ≈ nnz, the gather would
+    touch every tile anyway — the planner must pick the full scan."""
+    corpus = [rng.integers(0, 8, size=rng.integers(5, 15)).astype(np.int32)
+              for _ in range(80)]
+    idx = build_index(corpus, 8, params=BM25Params())
+    dr = DeviceRetriever(idx, regime="auto", gather="resident", **SMALL)
+    qs = [np.arange(8, dtype=np.int32) for _ in range(4)]   # all tokens
+    ids, vals = dr.retrieve_batch(qs, 5)
+    assert dr.last_plan.regime == "blocked"
+    assert dr.last_plan.work_ratio < DEFAULT_CROSSOVER
+    oracle = ScipyBM25(idx).score(qs[0])
+    np.testing.assert_allclose(oracle[ids[0]], vals[0], atol=1e-4)
+
+
+def test_planner_tail_batch_large_corpus_gathers(rng):
+    """Large vocabulary + tail tokens: Σ df ≪ nnz — must gather."""
+    corpus = make_corpus(rng, n_docs=200, n_vocab=500, max_len=30)
+    idx = build_index(corpus, 500, params=BM25Params())
+    dr = DeviceRetriever(idx, regime="auto", gather="resident", **SMALL)
+    q = np.unique(rng.integers(400, 500, size=3)).astype(np.int32)
+    ids, vals = dr.retrieve_batch([q], 5)
+    assert dr.last_plan.regime == "gathered"
+    assert dr.last_plan.work_ratio >= DEFAULT_CROSSOVER
+    oracle = ScipyBM25(idx).score(q)
+    np.testing.assert_allclose(oracle[ids[0]], vals[0], atol=1e-4)
+
+
+def test_planner_forced_aliases_honored(rng):
+    """blocked/gathered scorers force their regime regardless of the work
+    ratio; the plan still records the evidence and the forced flag."""
+    corpus = make_corpus(rng, n_docs=60, n_vocab=200)
+    idx = build_index(corpus, 200, params=BM25Params())
+    q = [np.array([5], dtype=np.int32)]           # tail-ish: auto => gathered
+    br = BlockedRetriever(idx, block_size=16, tile=16, q_max=8)
+    br.retrieve_batch(q, 3)
+    assert br.last_plan.regime == "blocked" and br.last_plan.forced
+    gr = GatheredRetriever(idx, tile=16, acc_block=16, q_max=8)
+    gr.retrieve_batch(q, 3)
+    assert gr.last_plan.regime == "gathered" and gr.last_plan.forced
+    # both give the same exact answer
+    np.testing.assert_allclose(br.retrieve(q[0], 3)[1],
+                               gr.retrieve(q[0], 3)[1], atol=1e-5)
+
+
+@settings(max_examples=30, deadline=None)
+@given(sum_df=st.integers(0, 10 ** 6), nnz=st.integers(1, 10 ** 7),
+       crossover=st.floats(0.5, 16.0))
+def test_property_planner_monotone_and_total(sum_df, nnz, crossover):
+    """The decision is total, respects the crossover threshold, and is
+    monotone: shrinking Σ df (cheaper gather) never flips gathered→blocked."""
+    p = plan_retrieval(sum_df, nnz, crossover=crossover)
+    assert p.regime in ("blocked", "gathered") and not p.forced
+    if sum_df and p.work_ratio >= crossover:
+        assert p.regime == "gathered"
+    smaller = plan_retrieval(sum_df // 2, nnz, crossover=crossover)
+    if p.regime == "gathered":
+        assert smaller.regime == "gathered"
+    assert plan_retrieval(sum_df, nnz, regime="blocked",
+                          crossover=crossover).forced
+
+
+# -- satellite: two-level (chunk -> shard) reduce -----------------------------
+
+def test_two_level_reduce_matches_two_step_merge(rng):
+    """two_level=True winners == host merge of the per-chunk winners, on a
+    layout with many chunks (the traffic the reduction eliminates)."""
+    from repro.kernels.bm25_gather_score import bm25_gather_score_topk
+    from repro.sparse.block_csr import pack_query_batch
+    corpus = make_corpus(rng, n_docs=150, n_vocab=30, max_len=25)
+    idx = build_index(corpus, 30, params=BM25Params(method="robertson"))
+    queries = [rng.integers(0, 30, size=5).astype(np.int32)
+               for _ in range(3)]
+    toks, wts, uniq = pad_queries(queries, 8, return_uniq=True)
+    gp = gather_posting_runs(idx, uniq, acc_block=16, tile=16)
+    assert gp.n_chunks > 1                        # the reduce has work to do
+    uniq_tab, weights = pack_query_batch(toks, wts, u_max=32, uniq=uniq)
+    args = (jnp.asarray(gp.token_ids), jnp.asarray(gp.slot_ids),
+            jnp.asarray(gp.scores), jnp.asarray(uniq_tab),
+            jnp.asarray(weights), jnp.asarray(gp.candidates))
+    for k in (1, 4, 9):
+        v2, i2 = bm25_gather_score_topk(*args, acc_block=16, k=k, tile_p=16,
+                                        two_level=True)
+        v1, i1 = bm25_gather_score_topk(*args, acc_block=16, k=k, tile_p=16)
+        assert v2.shape == (k, v1.shape[2])       # [k, B], not [nc, k, B]
+        nc, _, b = v1.shape
+        fv = np.transpose(np.asarray(v1), (2, 0, 1)).reshape(b, nc * k)
+        fi = np.transpose(np.asarray(i1), (2, 0, 1)).reshape(b, nc * k)
+        order = np.argsort(-fv, kind="stable", axis=1)[:, :k]
+        np.testing.assert_allclose(np.asarray(v2).T,
+                                   np.take_along_axis(fv, order, 1),
+                                   atol=1e-5)
+        # ids agree wherever values are finite (ties may reorder ids)
+        finite = np.asarray(v2).T > np.finfo(np.float32).min / 2
+        got_sets = [set(np.asarray(i2).T[r][finite[r]])
+                    for r in range(b)]
+        ref_ids = np.take_along_axis(fi, order, 1)
+        for r in range(b):
+            ref_vals = np.take_along_axis(fv, order, 1)[r]
+            scores_of = {i: v for i, v in zip(fi[r], fv[r])}
+            for gid in got_sets[r]:
+                assert any(abs(scores_of.get(gid, np.inf) - rv) < 1e-4
+                           for rv in ref_vals)
+        del ref_ids
+
+
+def test_two_level_falls_back_when_k_exceeds_acc_block(rng):
+    """Regression: with k > acc_block the in-launch fold can only keep
+    acc_block winners — ranks acc_block+1..k would silently become default
+    docs. The ops wrapper must fall back to the exact chunked merge."""
+    from repro.kernels import ops
+    from repro.sparse.block_csr import (pack_query_batch,
+                                        query_nonoccurrence_shift)
+    corpus = make_corpus(rng, n_docs=200, n_vocab=40, max_len=20)
+    idx = build_index(corpus, 40, params=BM25Params(method="lucene"))
+    queries = [rng.integers(0, 40, size=5).astype(np.int32)
+               for _ in range(2)]
+    toks, wts, uniq = pad_queries(queries, 8, return_uniq=True)
+    gp = gather_posting_runs(idx, uniq, acc_block=16, tile=16)
+    uniq_tab, weights = pack_query_batch(toks, wts, u_max=32, uniq=uniq)
+    shift = query_nonoccurrence_shift(idx.nonoccurrence, toks, wts)
+    k = 40                                        # > acc_block = 16
+    ids, vals = ops.bm25_retrieve_gathered(
+        jnp.asarray(gp.token_ids), jnp.asarray(gp.slot_ids),
+        jnp.asarray(gp.scores), jnp.asarray(uniq_tab),
+        jnp.asarray(weights), jnp.asarray(gp.candidates),
+        jnp.asarray(shift), acc_block=16, k=k,
+        n_docs=int(idx.doc_lens.size), tile_p=16)
+    sc = ScipyBM25(idx)
+    for i, q in enumerate(queries):
+        oracle = sc.score(q)
+        _, ref_v = topk_numpy(oracle[None], k)
+        np.testing.assert_allclose(np.asarray(vals)[i], ref_v[0], atol=1e-4)
+        np.testing.assert_allclose(oracle[np.asarray(ids)[i]],
+                                   np.asarray(vals)[i], atol=1e-4)
+
+
+def test_rescale_boundary_through_empty_docs_not_reused(rng):
+    """Regression: a reshard boundary moving through posting-LESS documents
+    changes a shard's doc range without changing any posting byte. Reusing
+    the old runtime would leave the same global docs owned by TWO shards
+    (duplicate merged results). doc_lens must participate in the match."""
+    corpus = [rng.integers(0, 12, size=5).astype(np.int32) for _ in range(10)]
+    corpus[3] = np.zeros(0, np.int32)             # empty docs at the
+    corpus[4] = np.zeros(0, np.int32)             # 2-way shard boundary
+    p = BM25Params(method="robertson")            # empty docs score 0: top
+    shards = build_sharded_indexes(corpus, 12, 2, params=p)
+    eng = RetrievalEngine(shards, k=6, deadline_s=30.0, scorer="auto",
+                          scorer_opts=dict(gather="resident", **SMALL))
+    eng.rescale(3)                                # bounds move through 3-4
+    q = np.array([0, 1], dtype=np.int32)
+    r = eng.retrieve(q)
+    assert len(set(r.ids.tolist())) == r.ids.size, r.ids   # no duplicates
+    oracle = dense_oracle_scores(corpus, 12, q, p)
+    _, ref_v = topk_numpy(oracle[None], 6)
+    np.testing.assert_allclose(np.sort(r.scores), np.sort(ref_v[0]),
+                               atol=1e-4)
+    np.testing.assert_allclose(oracle[r.ids], r.scores, atol=1e-4)
+
+
+# -- satellite: hot-token LRU for the host-gather fallback --------------------
+
+def test_run_cache_identical_results_and_hits(rng):
+    corpus = make_corpus(rng, n_docs=80, n_vocab=40)
+    idx = build_index(corpus, 40, params=BM25Params())
+    uniq = np.unique(rng.integers(0, 40, size=8)).astype(np.int64)
+    cold = gather_posting_runs(idx, uniq, acc_block=16, tile=16)
+    cache = PostingRunCache(capacity=64)
+    g1 = gather_posting_runs(idx, uniq, acc_block=16, tile=16, cache=cache)
+    assert cache.misses == uniq.size and cache.hits == 0
+    g2 = gather_posting_runs(idx, uniq, acc_block=16, tile=16, cache=cache)
+    assert cache.hits == uniq.size                # second batch: all hot
+    for g in (g1, g2):
+        np.testing.assert_array_equal(g.token_ids, cold.token_ids)
+        np.testing.assert_array_equal(g.slot_ids, cold.slot_ids)
+        np.testing.assert_array_equal(g.scores, cold.scores)
+        np.testing.assert_array_equal(g.candidates, cold.candidates)
+
+
+def test_run_cache_lru_eviction():
+    cache = PostingRunCache(capacity=2)
+    for t in (1, 2, 3):
+        cache.put(t, np.array([t]), np.array([float(t)]))
+    assert len(cache) == 2
+    assert cache.get(1) is None                   # evicted (oldest)
+    assert cache.get(3) is not None
+    cache.get(2)                                  # touch 2 -> 3 is now LRU
+    cache.put(4, np.array([4]), np.array([4.0]))
+    assert cache.get(3) is None and cache.get(2) is not None
+
+
+def test_host_retriever_uses_cache_across_batches(rng):
+    corpus = make_corpus(rng, n_docs=60, n_vocab=30)
+    idx = build_index(corpus, 30, params=BM25Params(method="bm25+"))
+    dr = DeviceRetriever(idx, regime="gathered", gather="host",
+                         run_cache=32, **SMALL)
+    sc = ScipyBM25(idx)
+    q = rng.integers(0, 30, size=5).astype(np.int32)
+    for _ in range(3):                            # same hot tokens repeat
+        ids, vals = dr.retrieve_batch([q], 6)
+        oracle = sc.score(q)
+        np.testing.assert_allclose(oracle[ids[0]], vals[0], atol=1e-4)
+    assert dr.run_cache.hits > 0
+
+
+# -- serve: one retriever via scorer="auto", elastic reuse --------------------
+
+def test_engine_auto_scorer_exact_batch(rng):
+    corpus = make_corpus(rng, n_docs=120, n_vocab=60)
+    p = BM25Params(method="bm25l")
+    shards = build_sharded_indexes(corpus, 60, 3, params=p)
+    eng = RetrievalEngine(shards, k=9, deadline_s=30.0, scorer="auto",
+                          scorer_opts=dict(gather="resident", **SMALL))
+    qs = [rng.integers(0, 60, size=5).astype(np.int32) for _ in range(4)]
+    rb = eng.retrieve_batch(qs)
+    assert rb.ids.shape == (4, 9) and not rb.degraded
+    for i, q in enumerate(qs):
+        oracle = dense_oracle_scores(corpus, 60, q, p)
+        _, ref_v = topk_numpy(oracle[None], 9)
+        np.testing.assert_allclose(rb.scores[i], ref_v[0], atol=1e-3)
+        for d, s in zip(rb.ids[i], rb.scores[i]):
+            assert abs(oracle[d] - s) < 1e-3
+        r1 = eng.retrieve(q)
+        np.testing.assert_allclose(r1.scores, rb.scores[i], atol=1e-5)
+
+
+def test_rescale_reuses_unchanged_shards(rng):
+    """Same-count rescale keeps every runtime (zero new posting uploads);
+    a boundary-moving rescale rebuilds only what moved."""
+    corpus = make_corpus(rng, n_docs=60, n_vocab=30)
+    shards = build_sharded_indexes(corpus, 30, 4, params=BM25Params())
+    eng = RetrievalEngine(shards, k=3, deadline_s=30.0, scorer="auto",
+                          scorer_opts=dict(gather="resident", **SMALL))
+    assert eng.last_build_stats == {"reused": 0, "built": 4}
+    reset_transfer_stats()
+    eng.rescale(4)                                # boundaries unchanged
+    assert eng.last_build_stats == {"reused": 4, "built": 0}
+    assert TRANSFERS.posting_uploads == 0         # nothing re-uploaded
+    eng.rescale(2)                                # boundaries move
+    assert eng.last_build_stats["built"] > 0
+    q = rng.integers(0, 30, size=4).astype(np.int32)
+    r = eng.retrieve(q)
+    oracle = dense_oracle_scores(corpus, 30, q, BM25Params())
+    _, ref_v = topk_numpy(oracle[None], 3)
+    np.testing.assert_allclose(np.sort(r.scores), np.sort(ref_v[0]),
+                               atol=1e-3)
+
+
+def test_auto_engine_survives_rescale_to_empty_shards(rng):
+    corpus = make_corpus(rng, n_docs=3, n_vocab=20)
+    shards = build_sharded_indexes(corpus, 20, 2, params=BM25Params())
+    eng = RetrievalEngine(shards, k=2, deadline_s=10.0, scorer="auto",
+                          scorer_opts=dict(gather="resident", **SMALL))
+    eng.rescale(5)                                # 3 docs over 5 shards
+    q = rng.integers(0, 20, size=3).astype(np.int32)
+    r = eng.retrieve(q)
+    oracle = dense_oracle_scores(corpus, 20, q, BM25Params())
+    _, ref_v = topk_numpy(oracle[None], 2)
+    np.testing.assert_allclose(np.sort(r.scores), np.sort(ref_v[0]),
+                               atol=1e-3)
+
+
+def test_device_index_memory_flags(rng):
+    """Forced-regime builds skip the layout they will never touch."""
+    corpus = make_corpus(rng, n_docs=40, n_vocab=20)
+    idx = build_index(corpus, 20, params=BM25Params())
+    gathered_only = DeviceIndex.build(idx, with_blocked=False, frag=8)
+    assert gathered_only.blk_tok is None
+    assert gathered_only.csc_doc_ids is not None
+    blocked_only = DeviceIndex.build(idx, with_csc=False)
+    assert blocked_only.csc_doc_ids is None and blocked_only.blk_tok \
+        is not None
+    dr = DeviceRetriever(idx, regime="gathered", gather="resident", **SMALL)
+    with pytest.raises(ValueError, match="gathered-only"):
+        dr.retrieve_batch([np.array([1], np.int32)], 2, regime="blocked")
