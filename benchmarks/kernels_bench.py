@@ -13,7 +13,6 @@ import time
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
 from repro.core import (BM25Params, DeviceIndex, build_index, pad_queries,
                         score_batch, suggest_p_max)

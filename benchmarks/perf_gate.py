@@ -1,0 +1,202 @@
+"""CI perf-trend gate over the BENCH_3 planner sweep.
+
+Compares a candidate ``BENCH_3.json`` (PR head) against a baseline run
+(the PR's base ref re-run on the SAME runner, or the committed
+``BENCH_baseline.json`` when no base checkout is available) and FAILS the
+job when either:
+
+* any planner-cell latency column regresses by more than ``--max-ratio``
+  (default 1.25 = +25%) AND by more than ``--abs-floor-s`` absolute
+  seconds (wall-clock noise floor — single-digit-ms cells jitter far more
+  than 25% on shared CI runners), or
+* any candidate cell ships nonzero steady-state bytes on a resident
+  channel: posting bytes on the resident path, or posting/descriptor
+  bytes under ``plan="device"`` — the residency invariants must hold at
+  EVERY scale the sweep touches, not just in tier-1's toy cells.
+
+Cells are matched on ``(n_docs, n_vocab, profile, batch, k)``; cells or
+columns present on only one side are reported as ``new``/``dropped`` but
+do not regress-fail (schema drift across refs is expected — the
+comparison covers the intersection). An EMPTY intersection, however, is
+itself a failure: with zero comparable latency cells the gate would pass
+vacuously, which is exactly how a sweep-grid change would otherwise
+silently disable it (``--allow-empty-intersection`` is the explicit
+escape hatch for an intentional grid migration — use it in the PR that
+changes the grid and refreshes the baseline, then drop it). The full
+comparison lands as a markdown table, appended to ``--summary`` (pass
+``"$GITHUB_STEP_SUMMARY"`` in CI) and echoed to stdout.
+
+``--inject-slowdown F`` multiplies every candidate latency by ``F``
+before comparing — the dry-run switch that DEMONSTRATES the gate trips on
+a synthetic >25% regression without committing one (the baseline compared
+against its own slowed-down copy; any pair with matching grids works):
+
+    PYTHONPATH=src python -m benchmarks.perf_gate \
+        --baseline BENCH_baseline.json --candidate BENCH_baseline.json \
+        --inject-slowdown 1.5   # must exit 1
+
+To refresh the committed baseline after an INTENTIONAL perf change:
+``PYTHONPATH=src python -m benchmarks.planner --fast --out
+BENCH_baseline.json`` and commit the result with the PR that changes the
+performance.
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+
+CELL_KEY = ("n_docs", "n_vocab", "profile", "batch", "k")
+
+LATENCY_COLS = ("auto_batch_s", "blocked_batch_s", "gathered_batch_s")
+
+# (column, human label) pairs that must be exactly zero on the candidate
+RESIDENCY_COLS = (
+    ("posting_bytes_per_batch_resident", "resident posting bytes"),
+    ("posting_bytes_per_batch_device_plan", "device-plan posting bytes"),
+    ("descriptor_bytes_per_batch_device_plan",
+     "device-plan descriptor bytes"),
+)
+
+
+def cell_key(cell: dict) -> tuple:
+    return tuple(cell.get(k) for k in CELL_KEY)
+
+
+def compare(baseline: dict, candidate: dict, *, max_ratio: float = 1.25,
+            abs_floor_s: float = 0.002,
+            allow_empty_intersection: bool = False
+            ) -> tuple[list[dict], list[str]]:
+    """Diff two planner-sweep results -> (table rows, failure messages)."""
+    base_cells = {cell_key(c): c for c in baseline.get("cells", [])}
+    had_base = bool(base_cells)
+    rows, failures, matched = [], [], 0
+    for cand in candidate.get("cells", []):
+        key = cell_key(cand)
+        base = base_cells.pop(key, None)
+        for col in LATENCY_COLS:
+            if col not in cand:
+                continue
+            row = {"cell": key, "metric": col, "candidate_s": cand[col]}
+            if base is None or col not in base:
+                row.update(baseline_s=None, ratio=None, status="new")
+            else:
+                matched += 1
+                ratio = cand[col] / max(base[col], 1e-9)
+                regressed = (ratio > max_ratio
+                             and cand[col] - base[col] > abs_floor_s)
+                row.update(baseline_s=base[col], ratio=round(ratio, 3),
+                           status="REGRESSED" if regressed else "ok")
+                if regressed:
+                    failures.append(
+                        f"{key} {col}: {base[col]:.4f}s -> "
+                        f"{cand[col]:.4f}s ({ratio:.2f}x > "
+                        f"{max_ratio:.2f}x)")
+            rows.append(row)
+        for col, label in RESIDENCY_COLS:
+            bytes_shipped = cand.get(col, 0)
+            rows.append({"cell": key, "metric": col,
+                         "candidate_s": bytes_shipped, "baseline_s": 0,
+                         "ratio": None,
+                         "status": "LEAK" if bytes_shipped else "ok"})
+            if bytes_shipped:
+                failures.append(
+                    f"{key}: {bytes_shipped} {label} per steady-state "
+                    f"batch (must be 0)")
+    for key in base_cells:
+        rows.append({"cell": key, "metric": "-", "candidate_s": None,
+                     "baseline_s": None, "ratio": None, "status": "dropped"})
+    if matched == 0 and had_base and not allow_empty_intersection:
+        # zero comparable cells would make the latency gate pass
+        # VACUOUSLY — the silent-disable path a sweep-grid change opens
+        failures.append(
+            "no latency cell matched between baseline and candidate — "
+            "the latency gate would be vacuous. Keep the sweep grid "
+            "stable, refresh BENCH_baseline.json, or pass "
+            "--allow-empty-intersection in the grid-migration PR.")
+    return rows, failures
+
+
+def to_markdown(rows: list[dict], failures: list[str], *,
+                max_ratio: float) -> str:
+    lines = [
+        "## Planner perf-trend gate",
+        "",
+        f"Threshold: fail above {max_ratio:.2f}x per latency cell; any "
+        "nonzero resident posting/descriptor bytes fails.",
+        "",
+        "| cell (docs, vocab, profile, B, k) | metric | baseline | "
+        "candidate | ratio | status |",
+        "|---|---|---|---|---|---|",
+    ]
+    for r in rows:
+        fmt = (lambda v: "-" if v is None
+               else (f"{v:.4f}" if isinstance(v, float) else str(v)))
+        status = r["status"]
+        if status in ("REGRESSED", "LEAK"):
+            status = f"**{status}**"
+        lines.append(
+            f"| {r['cell']} | {r['metric']} | {fmt(r['baseline_s'])} | "
+            f"{fmt(r['candidate_s'])} | {fmt(r['ratio'])} | {status} |")
+    lines.append("")
+    if failures:
+        lines.append(f"### ❌ {len(failures)} gate failure(s)")
+        lines.extend(f"- {f}" for f in failures)
+    else:
+        lines.append("### ✅ no regressions, residency invariants hold")
+    return "\n".join(lines) + "\n"
+
+
+def main(argv: list[str] | None = None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--baseline", required=True,
+                    help="baseline BENCH_3-format JSON")
+    ap.add_argument("--candidate", required=True,
+                    help="candidate BENCH_3-format JSON (PR head)")
+    ap.add_argument("--max-ratio", type=float, default=1.25,
+                    help="fail when candidate/baseline exceeds this "
+                         "(default 1.25 = +25%%)")
+    ap.add_argument("--abs-floor-s", type=float, default=0.002,
+                    help="ignore regressions smaller than this many "
+                         "absolute seconds (CI noise floor)")
+    ap.add_argument("--summary", default=None,
+                    help="append the markdown table to this file "
+                         "(e.g. \"$GITHUB_STEP_SUMMARY\")")
+    ap.add_argument("--inject-slowdown", type=float, default=None,
+                    help="dry run: multiply candidate latencies by this "
+                         "factor to DEMONSTRATE the gate trips")
+    ap.add_argument("--allow-empty-intersection", action="store_true",
+                    help="do not fail when zero cells match (ONLY for an "
+                         "intentional sweep-grid migration PR)")
+    args = ap.parse_args(argv)
+
+    with open(args.baseline) as f:
+        baseline = json.load(f)
+    with open(args.candidate) as f:
+        candidate = json.load(f)
+    if args.inject_slowdown is not None:
+        for c in candidate.get("cells", []):
+            for col in LATENCY_COLS:
+                if col in c:
+                    c[col] = c[col] * args.inject_slowdown
+
+    rows, failures = compare(
+        baseline, candidate, max_ratio=args.max_ratio,
+        abs_floor_s=args.abs_floor_s,
+        allow_empty_intersection=args.allow_empty_intersection)
+    md = to_markdown(rows, failures, max_ratio=args.max_ratio)
+    print(md)
+    if args.summary:
+        with open(args.summary, "a") as f:
+            f.write(md)
+    if failures:
+        print(f"perf gate FAILED ({len(failures)} finding(s))",
+              file=sys.stderr)
+        return 1
+    print("perf gate passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -119,12 +119,22 @@ def bench_cell(n_docs: int, n_vocab: int, profile: str, *, batch: int = 8,
     host.retrieve_batch(queries, k)
     bytes_host = TRANSFERS.posting_bytes
     res = DeviceRetriever(idx, regime="gathered", gather="resident",
-                          tile=tile)
+                          plan="host", tile=tile)
     res.retrieve_batch(queries, k)
     reset_transfer_stats()
     res.retrieve_batch(queries, k)
     bytes_res, bytes_desc = (TRANSFERS.posting_bytes,
                              TRANSFERS.descriptor_bytes)
+    # device-side planning: the fragment table is born on device, so the
+    # steady-state batch ships NEITHER postings NOR descriptors — the
+    # perf-trend gate (benchmarks.perf_gate) fails on any nonzero byte
+    dev = DeviceRetriever(idx, regime="gathered", gather="resident",
+                          plan="device", tile=tile)
+    dev.retrieve_batch(queries, k)                # settle the nf bucket
+    reset_transfer_stats()
+    dev.retrieve_batch(queries, k)
+    bytes_res_dev, bytes_desc_dev = (TRANSFERS.posting_bytes,
+                                     TRANSFERS.descriptor_bytes)
 
     return {
         "n_docs": n_docs, "n_vocab": n_vocab, "batch": batch, "k": k,
@@ -145,6 +155,8 @@ def bench_cell(n_docs: int, n_vocab: int, profile: str, *, batch: int = 8,
         "posting_bytes_per_batch_host_gather": int(bytes_host),
         "posting_bytes_per_batch_resident": int(bytes_res),
         "descriptor_bytes_per_batch_resident": int(bytes_desc),
+        "posting_bytes_per_batch_device_plan": int(bytes_res_dev),
+        "descriptor_bytes_per_batch_device_plan": int(bytes_desc_dev),
     }
 
 
@@ -191,6 +203,12 @@ def run(*, fast: bool = False) -> dict:
                 c["worst_vs_auto"] >= 2.0 for c in cells),
             "resident_posting_bytes_all_zero": all(
                 c["posting_bytes_per_batch_resident"] == 0 for c in cells),
+            # plan="device": zero posting AND zero descriptor bytes — the
+            # fully-device-resident steady state the perf gate enforces
+            "device_plan_bytes_all_zero": all(
+                c["posting_bytes_per_batch_device_plan"] == 0
+                and c["descriptor_bytes_per_batch_device_plan"] == 0
+                for c in cells),
             "note": "CPU wall times; Pallas kernels run in interpret mode "
                     "— compare paths relatively. Re-run on TPU and copy "
                     "suggested_crossover into "

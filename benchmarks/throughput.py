@@ -20,7 +20,6 @@ from __future__ import annotations
 
 import time
 
-import numpy as np
 
 from repro.core import (BM25Params, DeviceIndex, RankBM25Baseline, ScipyBM25,
                         build_index, pad_queries, score_batch, suggest_p_max,

@@ -11,7 +11,7 @@ from __future__ import annotations
 
 import numpy as np
 
-from repro.core import BM25Params, BM25Retriever
+from repro.core import BM25Retriever
 from repro.data.corpus import SyntheticCorpus, ndcg_at_k
 
 _SUFFIXES = ["", "s", "ed", "ing", "ly"]

@@ -20,7 +20,6 @@ Two device cells (extra, beyond the 40 assigned cells):
 
 from __future__ import annotations
 
-import functools
 
 import jax
 import jax.numpy as jnp

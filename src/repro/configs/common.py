@@ -10,8 +10,8 @@ for the roofline's useful-compute ratio.
 from __future__ import annotations
 
 import functools
-from dataclasses import dataclass, field
-from typing import Any, Callable
+from dataclasses import dataclass
+from typing import Callable
 
 import jax
 import jax.numpy as jnp

@@ -19,7 +19,6 @@ Both are host-side and used by tests (exactness) and benchmarks (Table 1).
 
 from __future__ import annotations
 
-import math
 from typing import Sequence
 
 import numpy as np

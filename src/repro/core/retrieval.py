@@ -47,6 +47,15 @@ from .scoring import DeviceIndex, score_query
 
 DEFAULT_CROSSOVER = 2.0
 
+# With DEVICE-side fragment planning (``sparse.fragment_device``) the
+# gathered regime no longer pays the per-batch O(Σ df) host descriptor walk
+# or the descriptor upload — the fixed overhead CROSSOVER folds in shrinks,
+# so the break-even moves TOWARD the gather. The discount below scales the
+# default crossover when the caller plans on device; like the crossover
+# itself it is a calibration constant — re-measure on TPU with
+# ``python -m benchmarks.planner`` after kernel/schedule changes.
+DEVICE_PLAN_DISCOUNT = 0.75
+
 
 @dataclass
 class RetrievalPlan:
@@ -58,10 +67,12 @@ class RetrievalPlan:
     work_ratio: float       # nnz / max(sum_df, 1)
     crossover: float        # threshold used
     forced: bool            # True when the operator pinned the regime
+    plan: str = "host"      # where the fragment table is built
 
 
 def plan_retrieval(sum_df: int, nnz: int, *, regime: str = "auto",
-                   crossover: float | None = None) -> RetrievalPlan:
+                   crossover: float | None = None,
+                   plan: str = "host") -> RetrievalPlan:
     """Pick full-scan vs gathered for one batch (free — no device work).
 
     ``regime="blocked"``/``"gathered"`` force that regime (the plan still
@@ -69,10 +80,21 @@ def plan_retrieval(sum_df: int, nnz: int, *, regime: str = "auto",
     ``"auto"`` compares the batch's work ratio against ``crossover``
     (default :data:`DEFAULT_CROSSOVER`). A batch with no postings at all is
     trivially gathered (nothing to scan beats scanning everything).
+
+    ``plan="device"`` records that the gathered regime's fragment table is
+    built on device — its descriptor-build cost is then free on the host,
+    so the DEFAULT crossover is scaled by :data:`DEVICE_PLAN_DISCOUNT`
+    (an explicit ``crossover`` is always used verbatim).
     """
     if regime not in ("auto", "blocked", "gathered"):
         raise ValueError(f"unknown regime {regime!r}")
-    c = DEFAULT_CROSSOVER if crossover is None else float(crossover)
+    if plan not in ("host", "device"):
+        raise ValueError(f"unknown plan mode {plan!r}")
+    if crossover is None:
+        c = DEFAULT_CROSSOVER * (DEVICE_PLAN_DISCOUNT if plan == "device"
+                                 else 1.0)
+    else:
+        c = float(crossover)
     ratio = nnz / max(sum_df, 1)
     if regime != "auto":
         chosen, forced = regime, True
@@ -81,7 +103,8 @@ def plan_retrieval(sum_df: int, nnz: int, *, regime: str = "auto",
     else:
         chosen, forced = ("gathered" if ratio >= c else "blocked"), False
     return RetrievalPlan(regime=chosen, sum_df=int(sum_df), nnz=int(nnz),
-                         work_ratio=float(ratio), crossover=c, forced=forced)
+                         work_ratio=float(ratio), crossover=c,
+                         forced=forced, plan=plan)
 
 
 def default_doc_ids(vis_blocks: np.ndarray, k: int, n_docs: int,
@@ -394,8 +417,6 @@ def make_sharded_retrieve(mesh: Mesh, shard_axes: tuple[str, ...], *,
     batch-shared), broadcast to ``[B]`` for a uniform interface;
     :func:`sharded_retrieve_adaptive` wraps it with larger-bucket retries.
     """
-    n_shards = int(np.prod([mesh.shape[a] for a in shard_axes]))
-
     def local_score_topk(idx_arrays, q_tokens, q_weights):
         # idx_arrays leaves have a leading shard dim of size 1 inside shard_map
         indptr, doc_ids, scores, nonocc, offsets, counts = (

@@ -165,7 +165,6 @@ def dense_score_matrix(tf_matrix: Array, n_docs: int, dl: Array,
     the eager-sparse (+ shifted) implementations. ``tf_matrix`` is dense
     ``|V| × |C|`` term frequencies.
     """
-    n_vocab = tf_matrix.shape[0]
     df = (tf_matrix > 0).sum(axis=1).astype(np.float64)
     l_avg = float(dl.mean())
     out = np.zeros_like(tf_matrix, dtype=np.float64)

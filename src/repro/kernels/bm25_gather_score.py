@@ -246,6 +246,42 @@ def bm25_gather_score_topk(token_ids: jax.Array, slot_ids: jax.Array,
     )(token_ids, slot_ids, scores, uniq_tokens, weights, candidates)
 
 
+def _resident_scatter(acc_ref, w_ref, doc, sc, valid, uidx, blk, *,
+                      block_size: int, frag: int):
+    """Scatter one fragment's postings into the block accumulator.
+
+    The ONE scoring definition shared by the single- and double-buffered
+    resident kernels — identical operations in identical order, so the
+    two paths are bit-identical (the double-buffer test asserts it).
+    """
+    ok = (jax.lax.broadcasted_iota(jnp.int32, (frag, 1), 0)
+          < valid)                                       # [frag, 1]
+    w_row = pl.load(w_ref, (pl.ds(uidx, 1), slice(None)))  # [1, B]
+    contrib = jnp.where(ok, sc[:, None], 0.0) * w_row    # [frag, B]
+    # over-read tail postings (ok == False) may carry arbitrary doc
+    # ids, but their contrib rows are zero — a spurious one-hot match
+    # adds exactly 0.
+    loc = doc - blk * block_size
+    d_iota = jax.lax.broadcasted_iota(jnp.int32, (block_size, frag), 0)
+    oneh = (d_iota == loc[None, :]).astype(contrib.dtype)
+    acc_ref[...] += oneh @ contrib                       # [BS, B] MXU
+
+
+def _resident_fold(acc_ref, vals_ref, gid_ref, mv_ref, mi_ref, blk, *,
+                   block_size: int, k: int, n_docs: int):
+    """Fold a finished block accumulator into the shard scoreboard."""
+    neg = jnp.finfo(vals_ref.dtype).min
+    acc = acc_ref[...]                                   # [BS, B]
+    row = jax.lax.broadcasted_iota(jnp.int32, acc.shape, 0)
+    acc = jnp.where(blk * block_size + row < n_docs, acc, neg)
+    prev_v, prev_i = vals_ref[...], gid_ref[...]
+    ext = jnp.concatenate([acc, prev_v], axis=0)
+    _fold_winners(ext, lambda am: blk * block_size + am, prev_i,
+                  mv_ref, mi_ref, n_rows=block_size, k=k)
+    vals_ref[...] = mv_ref[...]
+    gid_ref[...] = mi_ref[...]
+
+
 def _resident_kernel(desc_ref, w_ref, doc_hbm, sc_hbm, vals_ref, gid_ref,
                      acc_ref, dbuf, sbuf, dsem, ssem, mv_ref, mi_ref, *,
                      block_size: int, frag: int, k: int, n_docs: int):
@@ -260,6 +296,11 @@ def _resident_kernel(desc_ref, w_ref, doc_hbm, sc_hbm, vals_ref, gid_ref,
     current document block's ``[block_size, B]`` accumulator. Block-final
     fragments mask tail-padding docs and fold the block into the running
     shard ``[k, B]`` scoreboard (two-level reduce).
+
+    This SINGLE-BUFFER variant issues its two DMAs sequentially and waits
+    before scoring — the exactness oracle for the double-buffered pipeline
+    (:func:`_resident_kernel_db`), same role the two-step chunk merge
+    plays for the two-level reduce.
     """
     i = pl.program_id(0)
     start = desc_ref[0, i]
@@ -289,53 +330,132 @@ def _resident_kernel(desc_ref, w_ref, doc_hbm, sc_hbm, vals_ref, gid_ref,
         cp_s.start()
         cp_d.wait()
         cp_s.wait()
-        doc = dbuf[0, :]                                     # [frag] int32
-        sc = sbuf[0, :]                                      # [frag] f32
-        ok = (jax.lax.broadcasted_iota(jnp.int32, (frag, 1), 0)
-              < valid)                                       # [frag, 1]
-        w_row = pl.load(w_ref, (pl.ds(uidx, 1), slice(None)))  # [1, B]
-        contrib = jnp.where(ok, sc[:, None], 0.0) * w_row    # [frag, B]
-        # over-read tail postings (ok == False) may carry arbitrary doc
-        # ids, but their contrib rows are zero — a spurious one-hot match
-        # adds exactly 0.
-        loc = doc - blk * block_size
-        d_iota = jax.lax.broadcasted_iota(jnp.int32, (block_size, frag), 0)
-        oneh = (d_iota == loc[None, :]).astype(contrib.dtype)
-        acc_ref[...] += oneh @ contrib                       # [BS, B] MXU
+        _resident_scatter(acc_ref, w_ref, dbuf[0, :], sbuf[0, :], valid,
+                          uidx, blk, block_size=block_size, frag=frag)
 
     @pl.when(last == 1)
     def _reduce():
-        acc = acc_ref[...]                                   # [BS, B]
-        row = jax.lax.broadcasted_iota(jnp.int32, acc.shape, 0)
-        acc = jnp.where(blk * block_size + row < n_docs, acc, neg)
-        prev_v, prev_i = vals_ref[...], gid_ref[...]
-        ext = jnp.concatenate([acc, prev_v], axis=0)
-        _fold_winners(ext, lambda am: blk * block_size + am, prev_i,
-                      mv_ref, mi_ref, n_rows=block_size, k=k)
-        vals_ref[...] = mv_ref[...]
-        gid_ref[...] = mi_ref[...]
+        _resident_fold(acc_ref, vals_ref, gid_ref, mv_ref, mi_ref, blk,
+                       block_size=block_size, k=k, n_docs=n_docs)
+
+
+def _resident_kernel_db(desc_ref, w_ref, doc_hbm, sc_hbm, vals_ref, gid_ref,
+                        acc_ref, dbuf0, sbuf0, dbuf1, sbuf1, dsem0, ssem0,
+                        dsem1, ssem1, mv_ref, mi_ref, *, block_size: int,
+                        frag: int, k: int, n_docs: int):
+    """Double-buffered variant: fragment f+1's DMAs fly during f's scatter.
+
+    Same math as :func:`_resident_kernel` (both call
+    :func:`_resident_scatter`/:func:`_resident_fold`, so outputs are
+    bit-identical); only the copy schedule changes. Two (doc, score)
+    scratch slots alternate by fragment parity — the two-slot + two-
+    semaphore pattern proven in ``kernels/embedding_bag.py``: grid step
+    ``f`` starts fragment ``f+1``'s copies into the idle slot BEFORE
+    waiting on its own, so on real hardware the HBM reads of the next
+    fragment overlap the one-hot scatter matmul of the current one
+    (interpret mode executes the copies eagerly — what the CPU tests
+    validate). Every fragment is copied, padding included (``start`` is 0
+    there and the resident arrays over-allocate a full ``frag`` tail), so
+    start/wait stay balanced with no cross-step control flow; padding
+    still contributes nothing because the scatter is gated on
+    ``valid > 0``.
+    """
+    i = pl.program_id(0)
+    nf = pl.num_programs(0)
+    start = desc_ref[0, i]
+    valid = desc_ref[1, i]
+    uidx = desc_ref[2, i]
+    blk = desc_ref[3, i]
+    first = desc_ref[4, i]
+    last = desc_ref[5, i]
+    even = i % 2 == 0
+    neg = jnp.finfo(vals_ref.dtype).min
+
+    def copies(s, dbuf, sbuf, dsem, ssem):
+        return (pltpu.make_async_copy(
+                    doc_hbm.at[pl.ds(0, 1), pl.ds(s, frag)], dbuf, dsem),
+                pltpu.make_async_copy(
+                    sc_hbm.at[pl.ds(0, 1), pl.ds(s, frag)], sbuf, ssem))
+
+    @pl.when(i == 0)
+    def _init_out():
+        vals_ref[...] = jnp.full_like(vals_ref, neg)
+        gid_ref[...] = jnp.full_like(gid_ref, -1)
+        for cp in copies(start, dbuf0, sbuf0, dsem0, ssem0):
+            cp.start()                            # warm-up: fragment 0
+
+    @pl.when(first == 1)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # prefetch fragment i+1 into the slot this step does NOT consume
+    @pl.when(i + 1 < nf)
+    def _prefetch():
+        nstart = desc_ref[0, i + 1]
+
+        @pl.when(even)
+        def _into_slot1():
+            for cp in copies(nstart, dbuf1, sbuf1, dsem1, ssem1):
+                cp.start()
+
+        @pl.when(jnp.logical_not(even))
+        def _into_slot0():
+            for cp in copies(nstart, dbuf0, sbuf0, dsem0, ssem0):
+                cp.start()
+
+    # wait on THIS fragment's slot (unconditionally — semaphores must
+    # balance even for padding fragments)
+    @pl.when(even)
+    def _wait_slot0():
+        for cp in copies(start, dbuf0, sbuf0, dsem0, ssem0):
+            cp.wait()
+
+    @pl.when(jnp.logical_not(even))
+    def _wait_slot1():
+        for cp in copies(start, dbuf1, sbuf1, dsem1, ssem1):
+            cp.wait()
+
+    @pl.when(valid > 0)
+    def _score():
+        doc = jnp.where(even, dbuf0[0, :], dbuf1[0, :])   # [frag] int32
+        sc = jnp.where(even, sbuf0[0, :], sbuf1[0, :])    # [frag] f32
+        _resident_scatter(acc_ref, w_ref, doc, sc, valid, uidx, blk,
+                          block_size=block_size, frag=frag)
+
+    @pl.when(last == 1)
+    def _reduce():
+        _resident_fold(acc_ref, vals_ref, gid_ref, mv_ref, mi_ref, blk,
+                       block_size=block_size, k=k, n_docs=n_docs)
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("block_size", "frag", "k", "n_docs", "interpret"),
+    static_argnames=("block_size", "frag", "k", "n_docs", "double_buffer",
+                     "interpret"),
 )
 def bm25_resident_score_topk(desc: jax.Array, weights: jax.Array,
                              doc_ids_res: jax.Array, scores_res: jax.Array,
                              *, block_size: int, frag: int, k: int,
-                             n_docs: int, interpret: bool | None = None
+                             n_docs: int, double_buffer: bool = True,
+                             interpret: bool | None = None
                              ) -> tuple[jax.Array, jax.Array]:
     """Fragment descriptors × resident index -> shard (values, ids) [k, B].
 
     ``desc`` is the ``[6, nf_pad]`` int32 table from
-    ``sparse.block_csr.fragment_plan`` (scalar-prefetched to SMEM so it can
-    drive DMA descriptors); ``doc_ids_res``/``scores_res`` are the
-    ``[1, nnz_pad]`` HBM-resident CSC arrays of a
-    ``sparse.block_csr.DeviceIndex`` — the ONLY posting data the kernel
-    touches, and it never crosses the host→device boundary per batch.
-    Winners carry global doc ids; blocks the batch never visits are absent
-    (their docs score raw 0 — the caller splices default documents, same
-    contract as the host-gathered path).
+    ``sparse.block_csr.fragment_plan`` — or its device-built twin
+    (``sparse.fragment_device.plan_fragments_device``), which never leaves
+    HBM — scalar-prefetched to SMEM so it can drive DMA descriptors;
+    ``doc_ids_res``/``scores_res`` are the ``[1, nnz_pad]`` HBM-resident
+    CSC arrays of a ``sparse.block_csr.DeviceIndex`` — the ONLY posting
+    data the kernel touches, and it never crosses the host→device boundary
+    per batch. Winners carry global doc ids; blocks the batch never visits
+    are absent (their docs score raw 0 — the caller splices default
+    documents, same contract as the host-gathered path).
+
+    ``double_buffer=True`` (default) overlaps fragment ``f+1``'s posting
+    DMAs with fragment ``f``'s scatter (two scratch slots, embedding_bag's
+    pattern); ``False`` keeps the sequential-copy kernel — the exactness
+    oracle the bit-identity tests compare against.
     """
     nf = desc.shape[1]
     u, b = weights.shape
@@ -344,6 +464,23 @@ def bm25_resident_score_topk(desc: jax.Array, weights: jax.Array,
     if interpret is None:
         interpret = jax.default_backend() != "tpu"
 
+    tile_scratch = [
+        pltpu.VMEM((1, frag), jnp.int32),                # doc-id tile
+        pltpu.VMEM((1, frag), jnp.float32),              # score tile
+        pltpu.SemaphoreType.DMA,
+        pltpu.SemaphoreType.DMA,
+    ]
+    if double_buffer:
+        tile_scratch = [
+            pltpu.VMEM((1, frag), jnp.int32),            # slot-0 doc tile
+            pltpu.VMEM((1, frag), jnp.float32),          # slot-0 score tile
+            pltpu.VMEM((1, frag), jnp.int32),            # slot-1 doc tile
+            pltpu.VMEM((1, frag), jnp.float32),          # slot-1 score tile
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+            pltpu.SemaphoreType.DMA,
+        ]
     grid_spec = pltpu.PrefetchScalarGridSpec(
         num_scalar_prefetch=1,                    # desc table -> SMEM
         grid=(nf,),
@@ -356,18 +493,16 @@ def bm25_resident_score_topk(desc: jax.Array, weights: jax.Array,
             pl.BlockSpec((k, b), lambda i, d: (0, 0)),       # shard values
             pl.BlockSpec((k, b), lambda i, d: (0, 0)),       # shard ids
         ),
-        scratch_shapes=[
-            pltpu.VMEM((block_size, b), weights.dtype),      # block acc
-            pltpu.VMEM((1, frag), jnp.int32),                # doc-id tile
-            pltpu.VMEM((1, frag), jnp.float32),              # score tile
-            pltpu.SemaphoreType.DMA,
-            pltpu.SemaphoreType.DMA,
-            pltpu.VMEM((k, b), weights.dtype),               # fold staging
-            pltpu.VMEM((k, b), jnp.int32),
-        ],
+        scratch_shapes=(
+            [pltpu.VMEM((block_size, b), weights.dtype)]     # block acc
+            + tile_scratch
+            + [pltpu.VMEM((k, b), weights.dtype),            # fold staging
+               pltpu.VMEM((k, b), jnp.int32)]
+        ),
     )
+    kernel = _resident_kernel_db if double_buffer else _resident_kernel
     return pl.pallas_call(
-        functools.partial(_resident_kernel, block_size=block_size,
+        functools.partial(kernel, block_size=block_size,
                           frag=frag, k=k, n_docs=n_docs),
         grid_spec=grid_spec,
         out_shape=(
@@ -375,5 +510,6 @@ def bm25_resident_score_topk(desc: jax.Array, weights: jax.Array,
             jax.ShapeDtypeStruct((k, b), jnp.int32),
         ),
         interpret=interpret,
-        name="bm25_resident_score_topk",
+        name="bm25_resident_score_topk_db" if double_buffer
+        else "bm25_resident_score_topk",
     )(desc, weights, doc_ids_res, scores_res)

@@ -128,30 +128,36 @@ def bm25_retrieve_gathered(token_ids: jax.Array, slot_ids: jax.Array,
 
 
 @functools.partial(
-    jax.jit, static_argnames=("block_size", "frag", "k", "n_docs"))
+    jax.jit, static_argnames=("block_size", "frag", "k", "n_docs",
+                              "double_buffer"))
 def bm25_retrieve_resident(desc: jax.Array, weights: jax.Array,
                            doc_ids_res: jax.Array, scores_res: jax.Array,
                            def_ids: jax.Array, nonocc_shift: jax.Array, *,
-                           block_size: int, frag: int, k: int, n_docs: int
+                           block_size: int, frag: int, k: int, n_docs: int,
+                           double_buffer: bool = True
                            ) -> tuple[jax.Array, jax.Array]:
     """Device-resident retrieval: fragment descriptors -> (ids, scores) [B, k].
 
     The zero-posting-copy steady-state path: ``doc_ids_res``/``scores_res``
     are the HBM-resident CSC arrays of a ``sparse.block_csr.DeviceIndex``
     (uploaded once at engine build/rescale); the per-batch operands are the
-    ``[6, nf]`` fragment table, the ``[U, B]`` query-weight table, ``k``
-    host-picked default doc ids from unvisited blocks
-    (``core.retrieval.default_doc_ids``), and the ``[B]`` §2.1 shift — all
-    O(U + k + B), none of it postings. The kernel already returns merged
-    shard winners (two-level reduce), so the only post-processing is the
-    default-document splice (docs in unvisited blocks score raw 0, which
-    matters for negative-IDF variants and undersized candidate sets) and
-    the rank-invariant shift add.
+    ``[6, nf]`` fragment table (host-built, or already device-resident
+    from ``sparse.fragment_device`` — then NOTHING here crosses
+    host→device but the query tables), the ``[U, B]`` query-weight table,
+    ``k`` default doc ids from unvisited blocks
+    (``core.retrieval.default_doc_ids`` or the device builder's), and the
+    ``[B]`` §2.1 shift — all O(U + k + B), none of it postings. The kernel
+    already returns merged shard winners (two-level reduce), so the only
+    post-processing is the default-document splice (docs in unvisited
+    blocks score raw 0, which matters for negative-IDF variants and
+    undersized candidate sets) and the rank-invariant shift add.
+    ``double_buffer`` selects the overlapped-DMA kernel schedule (output
+    is bit-identical either way).
     """
     kk = min(k, n_docs)
     vals, gids = bm25_resident_score_topk(
         desc, weights, doc_ids_res, scores_res, block_size=block_size,
-        frag=frag, k=kk, n_docs=n_docs)
+        frag=frag, k=kk, n_docs=n_docs, double_buffer=double_buffer)
     # the ONE splice definition (core.retrieval), fed the precomputed
     # unvisited-block default ids instead of the j-th-missing search
     ids, mvals = splice_default_docs(vals.T, gids.T, None, kk, n_docs,

@@ -23,7 +23,6 @@ from __future__ import annotations
 
 import math
 import re
-from typing import Any
 
 import jax
 import numpy as np

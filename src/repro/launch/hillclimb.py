@@ -13,7 +13,6 @@ to benchmarks/out/hillclimb.json next to the baselines in dryrun.json.
 """
 
 import argparse
-import json
 
 
 def _variants():

@@ -12,7 +12,6 @@ when the pool shrinks.
 
 from __future__ import annotations
 
-import math
 
 import jax
 from jax.sharding import Mesh

@@ -13,7 +13,7 @@ and feeds the two-stage top-k kernel.
 
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass, replace
 from typing import Any
 
 import jax

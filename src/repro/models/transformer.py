@@ -28,7 +28,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .common import (apply_rope, causal_window_mask, normal_init, rms_norm,
+from .common import (causal_window_mask, normal_init, rms_norm,
                      split_keys)
 from ..dist.sharding import constrain, dp_spmd_axes
 
@@ -500,7 +500,6 @@ def decode_step(cfg: LMConfig, params: dict, cache: dict, tokens: jax.Array
     x = params["embed"].astype(cfg.dtype)[tokens][:, None, :]   # [B,1,D]
     if cfg.embed_scale:
         x = x * jnp.asarray(np.sqrt(cfg.d_model), cfg.dtype)
-    windows = cfg.layer_windows()
     thetas = cfg.layer_thetas()
     new_k, new_v = [], []
     new_ks, new_vs = [], []

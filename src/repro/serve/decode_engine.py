@@ -22,7 +22,6 @@ from ..models import transformer
 from ..models.common import rms_norm
 from ..models.transformer import (LMConfig, _heads, _rope_dyn, _unembed,
                                   mlp_block, moe_block)
-from ..dist.sharding import constrain
 
 
 def decode_step_ragged(cfg: LMConfig, params: dict, cache: dict,
@@ -38,7 +37,6 @@ def decode_step_ragged(cfg: LMConfig, params: dict, cache: dict,
     x = params["embed"].astype(cfg.dtype)[tokens][:, None, :]
     if cfg.embed_scale:
         x = x * jnp.asarray(np.sqrt(cfg.d_model), cfg.dtype)
-    windows = cfg.layer_windows()
     thetas = cfg.layer_thetas()
     scale = hd ** -0.5
     new_k, new_v = [], []

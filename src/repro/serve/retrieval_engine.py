@@ -153,11 +153,25 @@ class DeviceRetriever(_DeviceRetrieverBase):
 
     The gathered regime has two executions:
 
-    * ``gather="resident"`` — fragment descriptors (``fragment_plan``) go
-      to SMEM and the scalar-prefetch kernel DMAs posting tiles straight
-      out of the resident index. Per-batch host→device traffic is O(U)
-      descriptors + query tables; posting bytes shipped: **zero**
-      (asserted by tests via ``sparse.block_csr.TRANSFERS``).
+    * ``gather="resident"`` — fragment descriptors go to SMEM and the
+      scalar-prefetch kernel DMAs posting tiles straight out of the
+      resident index (double-buffered: fragment f+1's copies overlap f's
+      scatter; ``double_buffer=False`` keeps the sequential oracle).
+      Where the fragment table is built is the ``plan`` axis:
+
+      - ``plan="device"`` — the table is jit-built FROM the resident CSC
+        arrays (``sparse.fragment_device``); the host never reads its CSC
+        copy and per-batch host→device traffic is query tables only —
+        zero posting AND zero descriptor bytes (tier-1 asserts both).
+        ``host_arrays="drop"`` then releases the host posting copy
+        entirely (O(V)/O(n_docs) metadata stays).
+      - ``plan="host"`` — ``fragment_plan`` walks the host CSC copy and
+        ships the O(Σ df/frag) descriptor table per batch (the PR-3
+        behavior; still zero posting bytes).
+
+      Default ``plan=None`` resolves to device on TPU, host elsewhere
+      (interpret mode favors the cheaper host build); ``last_plan.plan``
+      records the choice per batch.
     * ``gather="host"`` — the candidate-compacted host gather (fallback
       for CPU/interpret mode, where fragment-at-a-time DMA interpretation
       is slow); ships O(Σ df) postings per batch, with a hot-token LRU
@@ -169,16 +183,19 @@ class DeviceRetriever(_DeviceRetrieverBase):
     Budgets stay **adaptive**: fragment counts, posting tiles and chunk
     counts are sized from the batch's ACTUAL demand, pow2-bucketed
     (``bucket_pow2``) so recompiles stay O(log max-demand) and nothing is
-    ever silently truncated. ``acc_block`` (host-gather chunk height)
-    stays SMALL — the one-hot scatter costs ``acc_block`` MACs/posting, so
-    big candidate sets get MORE chunks, keeping work linear in Σ df.
+    ever silently truncated (the device fragment builder turns its
+    nf-bucket overflow flag into a larger-bucket retry). ``acc_block``
+    (host-gather chunk height) stays SMALL — the one-hot scatter costs
+    ``acc_block`` MACs/posting, so big candidate sets get MORE chunks,
+    keeping work linear in Σ df.
     """
 
     def __init__(self, index: BM25Index, *, regime: str = "auto",
                  block_size: int = 512, tile: int = 512,
                  acc_block: int = 512, q_max: int = 32, frag: int = 512,
                  crossover: float | None = None, gather: str | None = None,
-                 run_cache: int = 256):
+                 plan: str | None = None, double_buffer: bool = True,
+                 host_arrays: str = "keep", run_cache: int = 256):
         from ..sparse.block_csr import DeviceIndex, PostingRunCache
         if regime not in ("auto", "blocked", "gathered"):
             raise ValueError(f"unknown regime {regime!r}")
@@ -187,9 +204,27 @@ class DeviceRetriever(_DeviceRetrieverBase):
             gather = "resident" if jax.default_backend() == "tpu" else "host"
         if gather not in ("resident", "host"):
             raise ValueError(f"unknown gather mode {gather!r}")
+        if plan is None:
+            import jax
+            plan = ("device" if gather == "resident"
+                    and jax.default_backend() == "tpu" else "host")
+        if plan not in ("host", "device"):
+            raise ValueError(f"unknown plan mode {plan!r}")
+        if plan == "device" and gather != "resident":
+            raise ValueError('plan="device" builds fragment tables from '
+                             'the resident CSC arrays — it requires '
+                             'gather="resident"')
+        if host_arrays not in ("keep", "drop"):
+            raise ValueError(f"unknown host_arrays mode {host_arrays!r}")
+        if host_arrays == "drop" and plan != "device":
+            raise ValueError('host_arrays="drop" removes the arrays the '
+                             'host fragment planner reads — it requires '
+                             'plan="device"')
         self.index = index
         self.regime = regime
         self.gather_mode = gather
+        self.plan_mode = plan
+        self.double_buffer = double_buffer
         self.q_max = q_max                       # bucket floor, not a cap
         self.block_size = block_size
         self.tile = tile
@@ -201,7 +236,16 @@ class DeviceRetriever(_DeviceRetrieverBase):
         self.dindex = DeviceIndex.build(
             index, block_size=block_size, tile=tile, frag=frag,
             with_blocked=regime in ("auto", "blocked"),
-            with_csc=regime in ("auto", "gathered") and gather == "resident")
+            with_csc=regime in ("auto", "gathered") and gather == "resident",
+            host_arrays=host_arrays)
+        self._nf_state = {}                      # steady-state nf bucket
+        if host_arrays == "drop":
+            # serving now reads only metadata: release the O(nnz) host
+            # posting copy (a private stripped view — the caller's index
+            # object is untouched)
+            from dataclasses import replace
+            self.index = replace(index, doc_ids=np.zeros(0, np.int32),
+                                 scores=np.zeros(0, np.float32))
         self.last_plan = None
 
     def warmup(self, *, k: int) -> None:
@@ -239,7 +283,7 @@ class DeviceRetriever(_DeviceRetrieverBase):
         kk = min(k, self.n_docs)
         plan = plan_retrieval(self.dindex.sum_df(uniq_batch),
                               self.dindex.nnz, regime=regime or self.regime,
-                              crossover=self.crossover)
+                              crossover=self.crossover, plan=self.plan_mode)
         self.last_plan = plan
         if plan.regime == "blocked":
             if self.dindex.blk_tok is None:
@@ -257,16 +301,28 @@ class DeviceRetriever(_DeviceRetrieverBase):
                                  "retriever was built blocked-only")
             # accumulator window grows only if k outruns it (the shard
             # scoreboard needs k ≤ block height); fragment count buckets
-            # inside fragment_plan
+            # inside the planners
             rblock = bucket_pow2(kk, floor=self.block_size)
-            fp = fragment_plan(self.index, uniq_batch, block_size=rblock,
-                               frag=self.dindex.frag)
-            dids = default_doc_ids(fp.vis_blocks, kk, self.n_docs, rblock)
+            if self.plan_mode == "device":
+                # fragment table + default ids born ON device from the
+                # resident CSC arrays — no host CSC read, no descriptor
+                # upload (the tier-1 zero-descriptor-bytes invariant)
+                from ..sparse.fragment_device import plan_fragments_device
+                desc, dids, _nf = plan_fragments_device(
+                    self.dindex, uniq_tab, sum_df=plan.sum_df, k=kk,
+                    block_size=rblock, state=self._nf_state)
+            else:
+                fp = fragment_plan(self.index, uniq_batch,
+                                   block_size=rblock, frag=self.dindex.frag)
+                dids = jnp.asarray(default_doc_ids(fp.vis_blocks, kk,
+                                                   self.n_docs, rblock))
+                desc = put_descriptor_array(fp.desc)
             ids, vals = ops.bm25_retrieve_resident(
-                put_descriptor_array(fp.desc), jnp.asarray(weights),
+                desc, jnp.asarray(weights),
                 self.dindex.csc_doc_ids, self.dindex.csc_scores,
-                jnp.asarray(dids), jnp.asarray(shift), block_size=rblock,
-                frag=self.dindex.frag, k=kk, n_docs=self.n_docs)
+                dids, jnp.asarray(shift), block_size=rblock,
+                frag=self.dindex.frag, k=kk, n_docs=self.n_docs,
+                double_buffer=self.double_buffer)
         else:
             # host-gather fallback: chunk height grows only if k outruns
             # it; posting/chunk dims bucket inside the gather. The uploads

@@ -526,35 +526,46 @@ class PostingRunCache:
     run copies. Bounded by ``capacity`` entries, least-recently-used out
     first. The resident device path never needs this — its index never
     leaves HBM.
+
+    get/put are lock-guarded: the serving engine's thread pool may run the
+    SAME shard's scorer for concurrent requests, and an unguarded
+    ``move_to_end``/``popitem`` race corrupts the OrderedDict. Entries for
+    a given token are immutable snapshots of the index, so cross-request
+    interleaving is otherwise harmless (a double put stores equal arrays).
     """
 
     def __init__(self, capacity: int = 256):
+        import threading
         self.capacity = int(capacity)
         self._runs: OrderedDict[int, tuple[np.ndarray, np.ndarray]] = \
             OrderedDict()
+        self._lock = threading.Lock()
         self.hits = 0
         self.misses = 0
 
     def __len__(self) -> int:
-        return len(self._runs)
+        with self._lock:
+            return len(self._runs)
 
     def get(self, token: int):
-        run = self._runs.get(token)
-        if run is None:
-            self.misses += 1
-            return None
-        self._runs.move_to_end(token)
-        self.hits += 1
-        return run
+        with self._lock:
+            run = self._runs.get(token)
+            if run is None:
+                self.misses += 1
+                return None
+            self._runs.move_to_end(token)
+            self.hits += 1
+            return run
 
     def put(self, token: int, doc_ids: np.ndarray, scores: np.ndarray
             ) -> None:
         if self.capacity <= 0:
             return
-        self._runs[token] = (doc_ids, scores)
-        self._runs.move_to_end(token)
-        while len(self._runs) > self.capacity:
-            self._runs.popitem(last=False)
+        with self._lock:
+            self._runs[token] = (doc_ids, scores)
+            self._runs.move_to_end(token)
+            while len(self._runs) > self.capacity:
+                self._runs.popitem(last=False)
 
 
 @dataclass
@@ -571,7 +582,13 @@ class DeviceIndex:
     planner and fragment compiler need, which is why plan costs are free.
 
     Holding both layouts costs ≤2× posting memory; pass ``with_blocked`` /
-    ``with_csc`` False to drop the regime you will never force.
+    ``with_csc`` False to drop the regime you will never force. With
+    DEVICE-side fragment planning (``sparse.fragment_device``) nothing on
+    the serving path reads the host CSC copy either — ``host_arrays=
+    "drop"`` then releases it (``host`` becomes None; only the O(V)
+    ``indptr``/``df`` metadata stays, which the planner and bucket sizing
+    need). The host-gather fallback and ``PostingRunCache`` keep their
+    copy — drop only what device planning made dead weight.
     """
 
     host: object            # BM25Index — descriptor metadata + fallbacks
@@ -586,6 +603,7 @@ class DeviceIndex:
     frag: int
     csc_doc_ids: object = None   # [1, nnz_pad] int32 device (or None)
     csc_scores: object = None    # [1, nnz_pad] f32 device (or None)
+    csc_indptr: object = None    # [V+1] int32 device (device plan builder)
     blk_tok: object = None       # [nb, p_pad] int32 device (or None)
     blk_loc: object = None
     blk_sc: object = None
@@ -593,7 +611,10 @@ class DeviceIndex:
     @staticmethod
     def build(index, *, block_size: int = 512, tile: int = 512,
               frag: int = 512, with_blocked: bool = True,
-              with_csc: bool = True) -> "DeviceIndex":
+              with_csc: bool = True,
+              host_arrays: str = "keep") -> "DeviceIndex":
+        if host_arrays not in ("keep", "drop"):
+            raise ValueError(f"unknown host_arrays mode {host_arrays!r}")
         nnz = int(index.doc_ids.size)
         di = DeviceIndex(
             host=index, indptr=index.indptr, df=np.diff(index.indptr),
@@ -604,18 +625,25 @@ class DeviceIndex:
             # pad so any fragment DMA [start, start+frag) stays in bounds
             # (starts are < nnz; padding postings carry score 0 / doc 0 and
             # are masked by the fragment's valid length anyway)
+            assert nnz < 2 ** 31, "int32 resident CSC positions"
             nnz_pad = _round_up(max(nnz, 1), frag) + frag
             doc = np.zeros((1, nnz_pad), np.int32)
             sc = np.zeros((1, nnz_pad), np.float32)
             doc[0, :nnz] = index.doc_ids
             sc[0, :nnz] = index.scores
             di.csc_doc_ids, di.csc_scores = put_posting_arrays(doc, sc)
+            # one-time O(V) upload so fragment tables can be built on
+            # device (counted as the descriptor traffic it replaces)
+            di.csc_indptr = put_descriptor_array(
+                index.indptr.astype(np.int32))
         if with_blocked:
             bp = block_postings_from_index(index, block_size=block_size,
                                            tile=tile)
             di.tile_p = min(tile, bp.nnz_pad)
             di.blk_tok, di.blk_loc, di.blk_sc = put_posting_arrays(
                 bp.token_ids, bp.local_doc, bp.scores)
+        if host_arrays == "drop":
+            di.host = None               # serving must never read it again
         return di
 
     def sum_df(self, uniq_tokens: np.ndarray) -> int:

@@ -17,8 +17,7 @@ Design points for 1000+ nodes (validated in tests at small scale):
 
 from __future__ import annotations
 
-import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Callable, Iterator
 
 import jax

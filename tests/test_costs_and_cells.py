@@ -10,8 +10,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.launch.costs import (collective_bytes_multiplied, jaxpr_cost,
-                                traced_cost)
+from repro.launch.costs import collective_bytes_multiplied, traced_cost
 
 
 def test_scan_flops_multiplied():

@@ -1,7 +1,6 @@
 """EGNN equivariance/invariance properties (the paper's defining test)."""
 
 import numpy as np
-import pytest
 from conftest import given, settings, st
 
 import jax
@@ -98,7 +97,6 @@ def test_neighbor_sampler_shapes_static():
 def test_egnn_molecule_training_reduces_loss():
     from repro.data.graphs import batched_molecules
     from repro.train import AdamW, init_train_state, make_train_step
-    from dataclasses import replace
     import functools
     cfg = egnn.EGNNConfig(name="m", n_layers=2, d_hidden=16, d_feat=11,
                           n_out=1, readout="graph")

@@ -1,0 +1,153 @@
+"""The CI perf-trend gate's comparison logic (benchmarks.perf_gate).
+
+The gate is CODE, so its failure modes are tier-1-testable without a CI
+run: a synthetic >25% cell regression must trip it, noise under the
+absolute floor must not, nonzero resident posting/descriptor bytes must
+trip it, and schema drift (cells/columns on one side only) must degrade
+to reporting, never crash. ``main`` is exercised end-to-end including the
+``--inject-slowdown`` dry-run switch the PR uses to demonstrate the gate.
+"""
+
+import copy
+import json
+
+import pytest
+
+from benchmarks.perf_gate import CELL_KEY, compare, main, to_markdown
+
+
+def _cell(n_docs=1000, n_vocab=50, profile="head", batch=8, k=10,
+          auto=0.10, blocked=0.20, gathered=0.05, **extra):
+    c = {"n_docs": n_docs, "n_vocab": n_vocab, "profile": profile,
+         "batch": batch, "k": k, "auto_batch_s": auto,
+         "blocked_batch_s": blocked, "gathered_batch_s": gathered,
+         "posting_bytes_per_batch_resident": 0,
+         "posting_bytes_per_batch_device_plan": 0,
+         "descriptor_bytes_per_batch_device_plan": 0}
+    c.update(extra)
+    return c
+
+
+def _bench(*cells):
+    return {"cells": list(cells), "summary": {}}
+
+
+def test_gate_passes_identical_runs():
+    base = _bench(_cell(), _cell(profile="tail"))
+    rows, failures = compare(base, copy.deepcopy(base))
+    assert failures == []
+    assert all(r["status"] == "ok" for r in rows)
+
+
+def test_gate_trips_on_25pct_regression():
+    base = _bench(_cell(), _cell(profile="tail"))
+    cand = copy.deepcopy(base)
+    cand["cells"][1]["gathered_batch_s"] *= 1.5      # one cell, one column
+    rows, failures = compare(base, cand, max_ratio=1.25)
+    assert len(failures) == 1
+    assert "gathered_batch_s" in failures[0] and "tail" in failures[0]
+    assert sum(r["status"] == "REGRESSED" for r in rows) == 1
+
+
+def test_gate_ignores_noise_under_absolute_floor():
+    """3x on a 1ms cell is scheduler jitter, not a regression — the
+    absolute floor keeps tiny cells from flapping the gate."""
+    base = _bench(_cell(auto=0.001, blocked=0.001, gathered=0.001))
+    cand = _bench(_cell(auto=0.003, blocked=0.001, gathered=0.001))
+    _, failures = compare(base, cand, max_ratio=1.25, abs_floor_s=0.005)
+    assert failures == []
+    _, failures = compare(base, cand, max_ratio=1.25, abs_floor_s=0.0)
+    assert len(failures) == 1                        # floor off: it trips
+
+
+def test_gate_trips_on_residency_leak():
+    base = _bench(_cell())
+    for col in ("posting_bytes_per_batch_resident",
+                "posting_bytes_per_batch_device_plan",
+                "descriptor_bytes_per_batch_device_plan"):
+        cand = _bench(_cell(**{col: 4096}))
+        rows, failures = compare(base, cand)
+        assert len(failures) == 1 and "4096" in failures[0], col
+        assert any(r["status"] == "LEAK" for r in rows)
+
+
+def test_gate_tolerates_schema_drift():
+    """Cells/columns on only one side report as new/dropped, never fail —
+    the baseline ref may predate the current bench schema."""
+    old_cell = {k: v for k, v in _cell().items()
+                if not k.endswith("device_plan")}
+    del old_cell["auto_batch_s"]                     # column drift too
+    base = _bench(old_cell, _cell(profile="dropped-only"))
+    cand = _bench(_cell(), _cell(profile="brand-new"))
+    rows, failures = compare(base, cand)
+    assert failures == []
+    statuses = {r["status"] for r in rows}
+    assert "new" in statuses and "dropped" in statuses
+
+
+def test_gate_fails_on_empty_intersection():
+    """Zero comparable cells = vacuous gate: a sweep-grid change must not
+    silently disable the latency comparison. The escape hatch is explicit
+    opt-in, and an empty baseline (first run ever) stays permitted."""
+    base = _bench(_cell(n_docs=1000))
+    cand = _bench(_cell(n_docs=9999))             # disjoint grids
+    _, failures = compare(base, cand)
+    assert len(failures) == 1 and "vacuous" in failures[0]
+    _, failures = compare(base, cand, allow_empty_intersection=True)
+    assert failures == []
+    _, failures = compare({"cells": []}, cand)    # no baseline at all
+    assert failures == []
+
+
+def test_main_empty_intersection_exit_codes(tmp_path):
+    b, c = tmp_path / "b.json", tmp_path / "c.json"
+    b.write_text(json.dumps(_bench(_cell(n_docs=1))))
+    c.write_text(json.dumps(_bench(_cell(n_docs=2))))
+    argv = ["--baseline", str(b), "--candidate", str(c)]
+    assert main(argv) == 1
+    assert main(argv + ["--allow-empty-intersection"]) == 0
+
+
+def test_markdown_lists_failures_and_cells():
+    base = _bench(_cell())
+    cand = _bench(_cell(gathered=0.5))
+    rows, failures = compare(base, cand)
+    md = to_markdown(rows, failures, max_ratio=1.25)
+    assert "REGRESSED" in md and "gate failure" in md
+    assert str(_cell()["n_docs"]) in md
+    md_ok = to_markdown(*compare(base, base), max_ratio=1.25)
+    assert "no regressions" in md_ok
+
+
+def test_main_inject_slowdown_dry_run(tmp_path, capsys):
+    """The PR's demonstration path: identical runs pass, the injected
+    1.5x slowdown makes the gate exit nonzero, and the summary file gets
+    the table either way."""
+    bench = _bench(_cell(), _cell(profile="tail"))
+    b = tmp_path / "base.json"
+    c = tmp_path / "cand.json"
+    s = tmp_path / "summary.md"
+    b.write_text(json.dumps(bench))
+    c.write_text(json.dumps(bench))
+    argv = ["--baseline", str(b), "--candidate", str(c),
+            "--summary", str(s)]
+    assert main(argv) == 0
+    assert "no regressions" in s.read_text()
+    assert main(argv + ["--inject-slowdown", "1.5"]) == 1
+    out = capsys.readouterr()
+    assert "REGRESSED" in out.out
+    assert "REGRESSED" in s.read_text()              # appended
+
+
+def test_cell_key_covers_sweep_axes():
+    # the sweep is keyed by corpus/vocab/profile/batch/k — a reminder that
+    # adding a sweep axis must extend the key or cells will collide
+    assert set(CELL_KEY) == {"n_docs", "n_vocab", "profile", "batch", "k"}
+
+
+@pytest.mark.parametrize("ratio,expect", [(1.2, 0), (1.3, 1)])
+def test_threshold_boundary(ratio, expect):
+    base = _bench(_cell(gathered=0.1))
+    cand = _bench(_cell(gathered=0.1 * ratio))
+    _, failures = compare(base, cand, max_ratio=1.25)
+    assert len(failures) == expect

@@ -3,7 +3,6 @@
 import numpy as np
 import pytest
 
-import jax.numpy as jnp
 
 from conftest import given, make_corpus, settings, st
 from repro.core import (BM25Params, DeviceIndex, ScipyBM25, build_index,

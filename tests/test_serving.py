@@ -1,6 +1,5 @@
 """Serving: hedged sharded retrieval, elastic re-shard, decode engine."""
 
-import time
 
 import numpy as np
 import pytest

@@ -1,6 +1,5 @@
 """Tokenizer: sklearn regex split, Elastic stopwords, Snowball stemming."""
 
-import numpy as np
 import pytest
 
 from repro.core import Tokenizer

@@ -1,10 +1,8 @@
 """Top-k selection: paper's argpartition path, XLA path, two-stage merges."""
 
 import numpy as np
-import pytest
 from conftest import given, settings, st
 
-import jax
 import jax.numpy as jnp
 
 from repro.core import blockwise_topk, topk_jax, topk_numpy
