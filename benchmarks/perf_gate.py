@@ -49,7 +49,8 @@ import sys
 
 CELL_KEY = ("n_docs", "n_vocab", "profile", "batch", "k")
 
-LATENCY_COLS = ("auto_batch_s", "blocked_batch_s", "gathered_batch_s")
+LATENCY_COLS = ("auto_batch_s", "blocked_batch_s", "gathered_batch_s",
+                "resident_batch_s", "pruned_batch_s")
 
 # (column, human label) pairs that must be exactly zero on the candidate
 RESIDENCY_COLS = (
@@ -57,7 +58,19 @@ RESIDENCY_COLS = (
     ("posting_bytes_per_batch_device_plan", "device-plan posting bytes"),
     ("descriptor_bytes_per_batch_device_plan",
      "device-plan descriptor bytes"),
+    ("posting_bytes_per_batch_pruned", "pruned posting bytes"),
+    ("posting_bytes_per_batch_pruned_device_plan",
+     "pruned device-plan posting bytes"),
+    ("descriptor_bytes_per_batch_pruned_device_plan",
+     "pruned device-plan descriptor bytes"),
 )
+
+# deterministic-for-fixed-seed counters that must not COLLAPSE: unlike wall
+# clock they carry no runner noise, so a big drop means the pruning logic
+# stopped cutting work (e.g. bounds silently loosened), even if latency
+# hides it in noise. Fails when candidate < (1 - max drop) × baseline.
+SKIP_RATE_COL = "pruned_skip_rate"
+SKIP_RATE_MAX_DROP = 0.5
 
 
 def cell_key(cell: dict) -> tuple:
@@ -94,6 +107,30 @@ def compare(baseline: dict, candidate: dict, *, max_ratio: float = 1.25,
                         f"{cand[col]:.4f}s ({ratio:.2f}x > "
                         f"{max_ratio:.2f}x)")
             rows.append(row)
+        if SKIP_RATE_COL in cand or SKIP_RATE_COL in (base or {}):
+            # a candidate that silently STOPS reporting the counter is the
+            # most total skip-rate collapse — treat the missing column as
+            # rate 0 so it trips, instead of vacuously passing
+            rate = cand.get(SKIP_RATE_COL, 0.0)
+            base_rate = (base or {}).get(SKIP_RATE_COL)
+            row = {"cell": key, "metric": SKIP_RATE_COL,
+                   "candidate_s": rate}
+            if base_rate is None:
+                row.update(baseline_s=None, ratio=None, status="new")
+            else:
+                collapsed = (base_rate > 0
+                             and rate < (1.0 - SKIP_RATE_MAX_DROP)
+                             * base_rate)
+                row.update(baseline_s=base_rate,
+                           ratio=round(rate / max(base_rate, 1e-9), 3),
+                           status="COLLAPSED" if collapsed else "ok")
+                if collapsed:
+                    failures.append(
+                        f"{key} {SKIP_RATE_COL}: {base_rate:.4f} -> "
+                        f"{rate:.4f} (skip-rate collapse: >"
+                        f"{SKIP_RATE_MAX_DROP:.0%} drop — the pruning "
+                        f"logic stopped cutting work)")
+            rows.append(row)
         for col, label in RESIDENCY_COLS:
             bytes_shipped = cand.get(col, 0)
             rows.append({"cell": key, "metric": col,
@@ -104,9 +141,18 @@ def compare(baseline: dict, candidate: dict, *, max_ratio: float = 1.25,
                 failures.append(
                     f"{key}: {bytes_shipped} {label} per steady-state "
                     f"batch (must be 0)")
-    for key in base_cells:
+    for key, cell in base_cells.items():
         rows.append({"cell": key, "metric": "-", "candidate_s": None,
                      "baseline_s": None, "ratio": None, "status": "dropped"})
+        if SKIP_RATE_COL in cell:
+            # plain latency cells may drift across refs (schema evolution);
+            # a PRUNED cell disappearing wholesale is the silent-disable
+            # path of the skip-rate gate, so it fails like a collapse
+            failures.append(
+                f"{key}: pruned cell present in the baseline is missing "
+                f"from the candidate — the skip-rate gate would be "
+                f"vacuous (keep the pruned sweep cells, or refresh the "
+                f"baseline in the PR that intentionally changes them)")
     if matched == 0 and had_base and not allow_empty_intersection:
         # zero comparable cells would make the latency gate pass
         # VACUOUSLY — the silent-disable path a sweep-grid change opens
@@ -124,7 +170,9 @@ def to_markdown(rows: list[dict], failures: list[str], *,
         "## Planner perf-trend gate",
         "",
         f"Threshold: fail above {max_ratio:.2f}x per latency cell; any "
-        "nonzero resident posting/descriptor bytes fails.",
+        "nonzero resident posting/descriptor bytes fails; a "
+        f">{SKIP_RATE_MAX_DROP:.0%} pruned-skip-rate drop at a fixed "
+        "cell fails.",
         "",
         "| cell (docs, vocab, profile, B, k) | metric | baseline | "
         "candidate | ratio | status |",
@@ -134,7 +182,7 @@ def to_markdown(rows: list[dict], failures: list[str], *,
         fmt = (lambda v: "-" if v is None
                else (f"{v:.4f}" if isinstance(v, float) else str(v)))
         status = r["status"]
-        if status in ("REGRESSED", "LEAK"):
+        if status in ("REGRESSED", "LEAK", "COLLAPSED"):
             status = f"**{status}**"
         lines.append(
             f"| {r['cell']} | {r['metric']} | {fmt(r['baseline_s'])} | "

@@ -1,4 +1,4 @@
-"""BENCH_3 — cost-model planner vs forced regimes + residency transfer audit.
+"""BENCH_3/BENCH_4 — planner vs forced regimes, residency audit, pruning.
 
 The PR-3 perf story has two claims:
 
@@ -24,7 +24,25 @@ ratios) — copy it into ``core.retrieval.DEFAULT_CROSSOVER`` after running
 on TPU to re-calibrate (CPU wall times run the Pallas kernels in interpret
 mode; compare paths relatively).
 
-Written to ``BENCH_3.json`` by ``benchmarks/run.py`` or standalone:
+The PR-5 pruning claims ride the same sweep (``bench_pruned_cell``):
+
+3. **Pruning**: on head-df cells whose queries mix Zipf-head tokens with a
+   few deep-tail terms (the coordination pattern block-max pruning exists
+   for — the top-k threshold clears every block the tail terms never
+   touch, so most of the HEAD token's posting fragments are provably
+   dead), the pruned regime beats the best existing regime while staying
+   bit-identical. Each pruned cell reports the skip rate (fraction of
+   planned fragments never DMA'd — pre-launch compaction + in-kernel
+   skips), fragments planned vs DMA'd, latency vs both existing regimes
+   AND vs the unpruned resident path, and the steady-state transfer audit
+   (posting bytes zero under both planners; descriptor bytes zero under
+   ``plan="device"``). ``benchmarks.perf_gate`` fails on a >50% skip-rate
+   drop at a fixed cell (a silent pruning regression would otherwise only
+   show up as latency noise).
+
+Written to ``BENCH_3.json`` (full sweep, the perf-gate input) and
+``BENCH_4.json`` (the pruned-regime cells + summary) by ``benchmarks/
+run.py`` or standalone:
 
     PYTHONPATH=src python -m benchmarks.planner [--fast]
 """
@@ -47,9 +65,19 @@ def _profile_queries(rng: np.random.Generator, profile: str, n_vocab: int,
     """head: top-df ranks (Zipf rank order = df order); tail: low-df ranks;
     dense: long queries over the WHOLE vocabulary — the batch's unique
     tokens approach |V| and Σ df approaches nnz (work ratio → 1), which is
-    the full-scan regime's home turf."""
+    the full-scan regime's home turf; head_mixed: one head token plus a
+    few deep-tail terms — Σ df stays head-dominated (>90% from the head
+    token) but the tail terms' coordination lifts the top-k threshold
+    past every block they never touch, the block-max pruning pattern."""
     if profile == "head":
         pool = np.arange(0, max(8, n_vocab // 100))
+    elif profile == "head_mixed":
+        head = np.arange(0, max(8, n_vocab // 100))
+        tail = np.arange(4 * n_vocab // 5, n_vocab)
+        return [np.concatenate([rng.choice(head, size=1),
+                                rng.choice(tail, size=max(1, q_len - 2))]
+                               ).astype(np.int32)
+                for _ in range(batch)]
     elif profile == "dense":
         pool = np.arange(n_vocab)
         q_len = max(q_len, 4 * n_vocab // batch)
@@ -160,21 +188,131 @@ def bench_cell(n_docs: int, n_vocab: int, profile: str, *, batch: int = 8,
     }
 
 
+def bench_pruned_cell(n_docs: int, n_vocab: int, *, profile: str =
+                      "head_mixed", batch: int = 2, k: int = 10,
+                      block_size: int = 64, avg_len: int = 60,
+                      tile: int = 2048, repeats: int = 3) -> dict:
+    """One pruned-regime cell: latency + skip rate + transfer audit.
+
+    Measures all four executions on the SAME batch — blocked, gathered
+    (serving default), the unpruned resident gather (the pruned regime's
+    direct substrate) and pruned — plus the pruning evidence the perf
+    gate tracks: ``pruned_skip_rate`` is the fraction of planned
+    fragments never DMA'd (pre-launch compaction + in-kernel skips;
+    deterministic for fixed seed and code, so a drop means the pruning
+    logic regressed, not the runner). ``block_size`` defaults finer than
+    the serving default: block-max bounds sharpen as blocks shrink, and
+    the resident kernel's fragment grid is what pays for loose ones.
+    """
+    from repro.serve import DeviceRetriever, PrunedRetriever
+    from repro.sparse.block_csr import TRANSFERS, reset_transfer_stats
+
+    corpus = zipf_corpus(n_docs, n_vocab, avg_len=avg_len)
+    idx = build_index(corpus, n_vocab, params=BM25Params())
+    rng = np.random.default_rng(3)
+    queries = _profile_queries(rng, profile, n_vocab, batch, q_len=5)
+
+    blocked = DeviceRetriever(idx, regime="blocked", tile=tile)
+    gathered = DeviceRetriever(idx, regime="gathered", tile=tile)
+    resident = DeviceRetriever(idx, regime="gathered", gather="resident",
+                               block_size=block_size, frag=512, tile=tile)
+    # same postings + grid throughout the cell: later builds adopt the
+    # resident CSC arrays / block-max table instead of re-uploading
+    # (exercises the rescale reuse path at bench scale, and keeps the
+    # CI bench-smoke job's wall time and memory flat)
+    pruned = PrunedRetriever(idx, block_size=block_size, frag=512,
+                             tile=tile, reuse_from=resident.dindex)
+    paths = {
+        "blocked": lambda: blocked.retrieve_batch(queries, k),
+        "gathered": lambda: gathered.retrieve_batch(queries, k),
+        "resident": lambda: resident.retrieve_batch(queries, k),
+        "pruned": lambda: pruned.retrieve_batch(queries, k),
+    }
+    for fn in paths.values():
+        fn()                                     # compile/warm every path
+    times = {name: np.inf for name in paths}
+    for _ in range(repeats):
+        for name, fn in paths.items():
+            gc.collect()
+            gc.disable()
+            t0 = time.perf_counter()
+            fn()
+            times[name] = min(times[name], time.perf_counter() - t0)
+            gc.enable()
+    plan = pruned.last_plan
+    dmad = plan.frags_planned - plan.frags_pruned - plan.frags_skipped
+    skip_rate = ((plan.frags_planned - dmad) / plan.frags_planned
+                 if plan.frags_planned else 0.0)
+    best_existing = min(times["blocked"], times["gathered"],
+                        times["resident"])
+
+    # steady-state transfer audit for the pruned regime, both planners
+    reset_transfer_stats()
+    pruned.retrieve_batch(queries, k)
+    bytes_post, bytes_desc = (TRANSFERS.posting_bytes,
+                              TRANSFERS.descriptor_bytes)
+    dev = PrunedRetriever(idx, plan="device", block_size=block_size,
+                          frag=512, tile=tile, reuse_from=pruned.dindex)
+    dev.retrieve_batch(queries, k)               # settle buckets
+    reset_transfer_stats()
+    dev.retrieve_batch(queries, k)
+    bytes_post_dev, bytes_desc_dev = (TRANSFERS.posting_bytes,
+                                      TRANSFERS.descriptor_bytes)
+
+    # does auto route this batch to the pruned regime?
+    auto = DeviceRetriever(idx, regime="auto", gather="resident",
+                           block_size=block_size, frag=512, tile=tile,
+                           reuse_from=pruned.dindex)
+    auto.retrieve_batch(queries, k)
+
+    return {
+        "n_docs": n_docs, "n_vocab": n_vocab, "batch": batch, "k": k,
+        "profile": profile, "block_size": block_size, "nnz": int(idx.nnz),
+        "sum_df": int(plan.sum_df),
+        "blocked_batch_s": round(times["blocked"], 4),
+        "gathered_batch_s": round(times["gathered"], 4),
+        "resident_batch_s": round(times["resident"], 4),
+        "pruned_batch_s": round(times["pruned"], 4),
+        "pruned_vs_best_existing": round(
+            best_existing / max(times["pruned"], 1e-9), 2),
+        "frags_planned": int(plan.frags_planned),
+        "frags_pruned_prelaunch": int(plan.frags_pruned),
+        "frags_skipped_inkernel": int(plan.frags_skipped),
+        "frags_dmad": int(dmad),
+        "pruned_skip_rate": round(float(skip_rate), 4),
+        "survivor_frac_estimate": round(float(plan.survivor_frac or 1.0),
+                                        4),
+        "auto_picked": auto.last_plan.regime,
+        "posting_bytes_per_batch_pruned": int(bytes_post),
+        "descriptor_bytes_per_batch_pruned": int(bytes_desc),
+        "posting_bytes_per_batch_pruned_device_plan": int(bytes_post_dev),
+        "descriptor_bytes_per_batch_pruned_device_plan":
+            int(bytes_desc_dev),
+    }
+
+
 def run(*, fast: bool = False) -> dict:
     from repro.core.retrieval import DEFAULT_CROSSOVER
     if fast:
         grid = [(1_000, 50), (1_000, 2_000), (3_000, 5_000)]
+        pruned_grid = [(3_000, 5_000, 2, 10), (3_000, 5_000, 4, 10)]
     else:
         grid = [(2_000, 50), (5_000, 5_000), (20_000, 10_000),
                 (50_000, 10_000)]
+        pruned_grid = [(20_000, 10_000, 2, 10), (50_000, 10_000, 2, 10),
+                       (50_000, 10_000, 4, 10), (50_000, 10_000, 2, 4)]
     cells = [bench_cell(n, v, profile,
                         repeats=4 if n >= 20_000 else 8)
              for n, v in grid
              for profile in (("head", "tail", "dense") if v <= 2_000
                              else ("head", "tail"))]
+    pruned_cells = [bench_pruned_cell(n, v, batch=b, k=k,
+                                      repeats=3 if n >= 20_000 else 6)
+                    for n, v, b, k in pruned_grid]
 
     # implied crossover: the boundary between cells the full scan wins and
-    # cells the gather wins, in work-ratio space
+    # cells the gather wins, in work-ratio space (planner cells only — the
+    # pruned cells appended below carry a different column set)
     blocked_win = [c["work_ratio_nnz_over_sum_df"] for c in cells
                    if c["blocked_batch_s"] < c["gathered_batch_s"]]
     gathered_win = [c["work_ratio_nnz_over_sum_df"] for c in cells
@@ -185,8 +323,23 @@ def run(*, fast: bool = False) -> dict:
         suggested = 1.0                           # gather always won
     else:
         suggested = float(max(blocked_win)) * 2
+    pruned_summary = {
+        "pruned_beats_best_existing_2x_somewhere": any(
+            c["pruned_vs_best_existing"] >= 2.0 for c in pruned_cells),
+        "pruned_skip_rates": [c["pruned_skip_rate"] for c in pruned_cells],
+        "pruned_bytes_all_zero": all(
+            c["posting_bytes_per_batch_pruned"] == 0
+            and c["posting_bytes_per_batch_pruned_device_plan"] == 0
+            and c["descriptor_bytes_per_batch_pruned_device_plan"] == 0
+            for c in pruned_cells),
+        "note": "pruned cells: head_mixed queries (1 Zipf-head token + "
+                "deep-tail terms), block_size 64 — see bench_pruned_cell. "
+                "Exactness is tier-1-asserted (bit-identical to the "
+                "single-buffer oracle); these cells measure the work cut.",
+    }
     return {
-        "cells": cells,
+        "cells": cells + pruned_cells,
+        "pruned": {"cells": pruned_cells, "summary": pruned_summary},
         "summary": {
             "crossover_used": DEFAULT_CROSSOVER,
             "suggested_crossover": round(suggested, 2),
@@ -222,6 +375,8 @@ def main() -> None:
     ap.add_argument("--fast", action="store_true",
                     help="tiny corpora (CI bench-smoke sized)")
     ap.add_argument("--out", default="BENCH_3.json")
+    ap.add_argument("--out4", default="BENCH_4.json",
+                    help="pruned-regime cells + summary ('' to skip)")
     args = ap.parse_args()
     t0 = time.time()
     result = run(fast=args.fast)
@@ -231,9 +386,16 @@ def main() -> None:
               flush=True)
     print("bench3_summary," + ",".join(
         f"{k}={v}" for k, v in result["summary"].items()))
+    print("bench4_summary," + ",".join(
+        f"{k}={v}" for k, v in result["pruned"]["summary"].items()))
     with open(args.out, "w") as f:
         json.dump(result, f, indent=1)
-    print(f"done in {time.time() - t0:.1f}s -> {args.out}")
+    outs = [args.out]
+    if args.out4:
+        with open(args.out4, "w") as f:
+            json.dump(result["pruned"], f, indent=1)
+        outs.append(args.out4)
+    print(f"done in {time.time() - t0:.1f}s -> {', '.join(outs)}")
 
 
 if __name__ == "__main__":

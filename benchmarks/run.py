@@ -50,6 +50,8 @@ def main() -> None:
             f"{k}={v}" for k, v in r.items()), flush=True)
     with open("BENCH_3.json", "w") as f:
         json.dump(results["bench3_planner"], f, indent=1)
+    with open("BENCH_4.json", "w") as f:
+        json.dump(results["bench3_planner"]["pruned"], f, indent=1)
 
     sizes = ((1000, 3000), (5000, 10000)) if args.fast else \
         ((2000, 5000), (10000, 20000), (50000, 50000))
@@ -63,6 +65,12 @@ def main() -> None:
     for r in results["table2_tokenization"]:
         print("table2," + ",".join(f"{k}={v}" for k, v in r.items()),
               flush=True)
+
+    results["tokenize_throughput"] = tokenization.run_throughput(
+        n_docs=1000 if args.fast else 3000)
+    print("tokenize_throughput," + ",".join(
+        f"{k}={v}" for k, v in results["tokenize_throughput"].items()),
+        flush=True)
 
     results["table3_variants"] = variants.run(n_docs=n_docs)
     for r in results["table3_variants"]:

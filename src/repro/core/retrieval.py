@@ -56,37 +56,75 @@ DEFAULT_CROSSOVER = 2.0
 # ``python -m benchmarks.planner`` after kernel/schedule changes.
 DEVICE_PLAN_DISCOUNT = 0.75
 
+# The PRUNED regime executes the gathered machinery over only the fragments
+# whose block-max upper bound can still beat the top-k threshold — its
+# modeled cost is the gathered cost scaled by the estimated surviving-work
+# fraction, DIVIDED by this discount: the survivor estimate is discounted
+# for the fixed overhead pruning adds (the bound matmul, the seed pass that
+# certifies the threshold, and the re-scored seed blocks), so pruning must
+# be expected to cut at least (1 - PRUNE_DISCOUNT) of the gathered work
+# before the planner will pick it. Calibrate from the BENCH_4 pruned cells
+# (``python -m benchmarks.planner`` — re-run ON TPU; the suggested
+# procedure is in ROADMAP's three-regime section).
+PRUNE_DISCOUNT = 0.5
+
 
 @dataclass
 class RetrievalPlan:
-    """One batch's regime decision plus the evidence it was made on."""
+    """One batch's regime decision plus the evidence it was made on.
 
-    regime: str             # "blocked" | "gathered"
+    The ``frags_*`` counters are filled in by the executing retriever
+    (zero until then): ``frags_planned`` is the batch's full fragment
+    count, ``frags_pruned`` how many the pre-launch threshold compaction
+    removed, ``frags_skipped`` how many more the in-kernel scoreboard test
+    skipped mid-launch.
+    """
+
+    regime: str             # "blocked" | "gathered" | "pruned"
     sum_df: int             # Σ df over the batch's unique tokens
     nnz: int                # the shard's posting count (full-scan work)
     work_ratio: float       # nnz / max(sum_df, 1)
     crossover: float        # threshold used
     forced: bool            # True when the operator pinned the regime
     plan: str = "host"      # where the fragment table is built
+    survivor_frac: float | None = None  # pruning-work estimate fed to auto
+    frags_planned: int = 0
+    frags_pruned: int = 0
+    frags_skipped: int = 0
 
 
 def plan_retrieval(sum_df: int, nnz: int, *, regime: str = "auto",
                    crossover: float | None = None,
-                   plan: str = "host") -> RetrievalPlan:
-    """Pick full-scan vs gathered for one batch (free — no device work).
+                   plan: str = "host",
+                   survivor_frac: float | None = None) -> RetrievalPlan:
+    """Pick full-scan vs gathered vs pruned for one batch (free — no
+    device work).
 
-    ``regime="blocked"``/``"gathered"`` force that regime (the plan still
-    records the evidence, so forced decisions stay debuggable);
-    ``"auto"`` compares the batch's work ratio against ``crossover``
-    (default :data:`DEFAULT_CROSSOVER`). A batch with no postings at all is
-    trivially gathered (nothing to scan beats scanning everything).
+    ``regime="blocked"``/``"gathered"``/``"pruned"`` force that regime
+    (the plan still records the evidence, so forced decisions stay
+    debuggable); ``"auto"`` compares modeled per-batch costs:
 
-    ``plan="device"`` records that the gathered regime's fragment table is
-    built on device — its descriptor-build cost is then free on the host,
-    so the DEFAULT crossover is scaled by :data:`DEVICE_PLAN_DISCOUNT`
-    (an explicit ``crossover`` is always used verbatim).
+    * blocked   — ``nnz`` (stream every posting tile);
+    * gathered  — ``crossover × Σ df`` (the crossover folds the gather's
+      per-posting overhead into one constant, so the old rule "gathered
+      iff work ratio ≥ crossover" is exactly this cost comparison);
+    * pruned    — the gathered cost × ``survivor_frac / PRUNE_DISCOUNT``
+      (only when the caller supplies ``survivor_frac``, its block-max
+      estimate of the surviving work fraction): pruning pays bound +
+      seed-pass overhead, so the estimate must undercut
+      :data:`PRUNE_DISCOUNT` before pruning is worth it.
+
+    A batch with no postings at all is trivially gathered (nothing to
+    scan beats scanning everything). Cost ties keep the previous regime
+    ordering (gathered beats blocked at equality, matching the pre-pruned
+    planner exactly when ``survivor_frac`` is None).
+
+    ``plan="device"`` records that the fragment table is built on device —
+    its descriptor-build cost is then free on the host, so the DEFAULT
+    crossover is scaled by :data:`DEVICE_PLAN_DISCOUNT` (an explicit
+    ``crossover`` is always used verbatim).
     """
-    if regime not in ("auto", "blocked", "gathered"):
+    if regime not in ("auto", "blocked", "gathered", "pruned"):
         raise ValueError(f"unknown regime {regime!r}")
     if plan not in ("host", "device"):
         raise ValueError(f"unknown plan mode {plan!r}")
@@ -101,10 +139,19 @@ def plan_retrieval(sum_df: int, nnz: int, *, regime: str = "auto",
     elif sum_df == 0:
         chosen, forced = "gathered", False
     else:
-        chosen, forced = ("gathered" if ratio >= c else "blocked"), False
+        costs = {"gathered": c * sum_df, "blocked": float(nnz)}
+        if survivor_frac is not None:
+            costs["pruned"] = (c * sum_df * float(survivor_frac)
+                               / PRUNE_DISCOUNT)
+        # first-listed wins ties: gathered over blocked (the pre-pruned
+        # rule), either existing regime over pruned (cheaper machinery)
+        chosen = min(costs, key=lambda r: (costs[r],
+                                           list(costs).index(r)))
+        forced = False
     return RetrievalPlan(regime=chosen, sum_df=int(sum_df), nnz=int(nnz),
                          work_ratio=float(ratio), crossover=c,
-                         forced=forced, plan=plan)
+                         forced=forced, plan=plan,
+                         survivor_frac=survivor_frac)
 
 
 def default_doc_ids(vis_blocks: np.ndarray, k: int, n_docs: int,

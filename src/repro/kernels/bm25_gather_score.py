@@ -26,7 +26,7 @@ query-gathered wins everywhere else, and the gap grows linearly with corpus
 size at fixed query df. ``serve.retrieval_engine``'s planner picks per
 batch (``core.retrieval.plan_retrieval``, ``scorer="auto"``).
 
-Two gathered entry points:
+Three gathered entry points:
 
 * ``bm25_gather_score_topk``     — consumes HOST-gathered candidate-compacted
   tiles (the fallback that still ships O(Σ df) postings per batch). With
@@ -42,6 +42,13 @@ Two gathered entry points:
   VMEM accumulator, and block winners fold into the same running ``[k, B]``
   shard scoreboard. No membership search is needed at all — the descriptor
   names the owning query-token row directly.
+* ``bm25_resident_score_topk_pruned`` — the resident path with the
+  block-max skip: an extra ``[nf, B]`` bound-row operand (per-fragment
+  document-block score upper bounds from the resident
+  ``sparse.block_csr.BlockMaxTable``) is tested against the live
+  scoreboard's k-th value before each fragment's DMAs are issued, so
+  fragments no posting can win are never copied at all — exact top-k
+  pruning, bit-identical to the single-buffer kernel.
 """
 
 from __future__ import annotations
@@ -426,6 +433,156 @@ def _resident_kernel_db(desc_ref, w_ref, doc_hbm, sc_hbm, vals_ref, gid_ref,
     def _reduce():
         _resident_fold(acc_ref, vals_ref, gid_ref, mv_ref, mi_ref, blk,
                        block_size=block_size, k=k, n_docs=n_docs)
+
+
+def _resident_kernel_pruned(desc_ref, w_ref, bnd_ref, doc_hbm, sc_hbm,
+                            vals_ref, gid_ref, skip_ref, acc_ref, dbuf, sbuf,
+                            dsem, ssem, mv_ref, mi_ref, *, block_size: int,
+                            frag: int, k: int, n_docs: int):
+    """Threshold-skipping variant: DMAs gated on the live scoreboard.
+
+    Same scatter/fold math as :func:`_resident_kernel` (bit-identical by
+    construction — both call :func:`_resident_scatter` /
+    :func:`_resident_fold`), plus the block-max skip: each fragment's row
+    of ``bnd_ref`` carries its document block's per-query score UPPER
+    bound (``sparse.block_csr.block_upper_bounds``), and the running
+    scoreboard's k-th value (row ``k-1`` — folds emit ranks in descending
+    order) is a certified LOWER bound on every query's final k-th score.
+    When no query's bound reaches its threshold, the fragment's postings
+    cannot alter the scoreboard for ANY query, so both posting DMAs and
+    the one-hot scatter are skipped — this is how a threshold that
+    saturates mid-launch still cuts DMA traffic the pre-launch compaction
+    could not see. Skipping is exact:
+
+    * the board holds full scores of real documents only (a block's
+      fragments are contiguous, so its accumulator is complete when it
+      folds), so row ``k-1`` never overestimates the final k-th score;
+    * the board is constant across one block's fragments (folds happen at
+      block boundaries), so a block skips or scores ATOMICALLY — a
+      partially-scored block cannot leak a too-low score into the fold
+      (and a fully-skipped block's zero accumulator folds harmlessly: the
+      skip condition forces board-min > bound ≥ 0);
+    * bounds are slack-inflated upstream, so f32 accumulation rounding
+      cannot push a real score past its bound.
+
+    ``skip_ref`` counts skipped real fragments — the kernel-level half of
+    the pruned regime's observability (``last_plan.frags_skipped``).
+    """
+    i = pl.program_id(0)
+    start = desc_ref[0, i]
+    valid = desc_ref[1, i]
+    uidx = desc_ref[2, i]
+    blk = desc_ref[3, i]
+    first = desc_ref[4, i]
+    last = desc_ref[5, i]
+    neg = jnp.finfo(vals_ref.dtype).min
+
+    @pl.when(i == 0)
+    def _init_out():
+        vals_ref[...] = jnp.full_like(vals_ref, neg)
+        gid_ref[...] = jnp.full_like(gid_ref, -1)
+        skip_ref[...] = jnp.zeros_like(skip_ref)
+
+    @pl.when(first == 1)
+    def _init_acc():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    # live iff ANY query's threshold is still reachable by this block
+    kth = pl.load(vals_ref, (pl.ds(k - 1, 1), slice(None)))[0, :]   # [B]
+    live = jnp.any(bnd_ref[0, :] >= kth)
+
+    @pl.when((valid > 0) & live)
+    def _score():
+        cp_d = pltpu.make_async_copy(
+            doc_hbm.at[pl.ds(0, 1), pl.ds(start, frag)], dbuf, dsem)
+        cp_s = pltpu.make_async_copy(
+            sc_hbm.at[pl.ds(0, 1), pl.ds(start, frag)], sbuf, ssem)
+        cp_d.start()
+        cp_s.start()
+        cp_d.wait()
+        cp_s.wait()
+        _resident_scatter(acc_ref, w_ref, dbuf[0, :], sbuf[0, :], valid,
+                          uidx, blk, block_size=block_size, frag=frag)
+
+    @pl.when((valid > 0) & jnp.logical_not(live))
+    def _count_skip():
+        skip_ref[...] += jnp.ones_like(skip_ref)
+
+    @pl.when(last == 1)
+    def _reduce():
+        _resident_fold(acc_ref, vals_ref, gid_ref, mv_ref, mi_ref, blk,
+                       block_size=block_size, k=k, n_docs=n_docs)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("block_size", "frag", "k", "n_docs", "interpret"),
+)
+def bm25_resident_score_topk_pruned(desc: jax.Array, weights: jax.Array,
+                                    bounds: jax.Array,
+                                    doc_ids_res: jax.Array,
+                                    scores_res: jax.Array, *,
+                                    block_size: int, frag: int, k: int,
+                                    n_docs: int,
+                                    interpret: bool | None = None
+                                    ) -> tuple[jax.Array, jax.Array,
+                                               jax.Array]:
+    """Pruned-regime resident scorer: skip fragments no posting can win.
+
+    Identical contract to :func:`bm25_resident_score_topk` (single-buffer
+    schedule) with one extra operand and output: ``bounds`` is the
+    ``[nf_pad, B]`` float32 per-fragment block upper-bound table (row f =
+    the batch's score upper bound for fragment f's document block, already
+    slack-inflated), and the third output is the ``[1, 1]`` int32 count of
+    real fragments whose DMAs the in-kernel threshold test skipped.
+    Outputs (values, ids) are BIT-identical to the single-buffer kernel on
+    the same descriptor table — the skip removes only provably-losing
+    work (see :func:`_resident_kernel_pruned` for the argument).
+    """
+    nf = desc.shape[1]
+    u, b = weights.shape
+    assert desc.shape[0] == 6, desc.shape
+    assert bounds.shape == (nf, b), (bounds.shape, nf, b)
+    assert k <= block_size, (k, block_size)
+    if interpret is None:
+        interpret = jax.default_backend() != "tpu"
+
+    grid_spec = pltpu.PrefetchScalarGridSpec(
+        num_scalar_prefetch=1,                    # desc table -> SMEM
+        grid=(nf,),
+        in_specs=[
+            pl.BlockSpec((u, b), lambda i, d: (0, 0)),       # weights VMEM
+            pl.BlockSpec((1, b), lambda i, d: (i, 0)),       # bound row
+            pl.BlockSpec(memory_space=_ANY_SPACE),           # doc ids / HBM
+            pl.BlockSpec(memory_space=_ANY_SPACE),           # scores / HBM
+        ],
+        out_specs=(
+            pl.BlockSpec((k, b), lambda i, d: (0, 0)),       # shard values
+            pl.BlockSpec((k, b), lambda i, d: (0, 0)),       # shard ids
+            pl.BlockSpec((1, 1), lambda i, d: (0, 0)),       # skip count
+        ),
+        scratch_shapes=(
+            [pltpu.VMEM((block_size, b), weights.dtype),     # block acc
+             pltpu.VMEM((1, frag), jnp.int32),               # doc-id tile
+             pltpu.VMEM((1, frag), jnp.float32),             # score tile
+             pltpu.SemaphoreType.DMA,
+             pltpu.SemaphoreType.DMA,
+             pltpu.VMEM((k, b), weights.dtype),              # fold staging
+             pltpu.VMEM((k, b), jnp.int32)]
+        ),
+    )
+    return pl.pallas_call(
+        functools.partial(_resident_kernel_pruned, block_size=block_size,
+                          frag=frag, k=k, n_docs=n_docs),
+        grid_spec=grid_spec,
+        out_shape=(
+            jax.ShapeDtypeStruct((k, b), weights.dtype),
+            jax.ShapeDtypeStruct((k, b), jnp.int32),
+            jax.ShapeDtypeStruct((1, 1), jnp.int32),
+        ),
+        interpret=interpret,
+        name="bm25_resident_score_topk_pruned",
+    )(desc, weights, bounds, doc_ids_res, scores_res)
 
 
 @functools.partial(

@@ -17,7 +17,7 @@ from ..core.retrieval import splice_default_docs
 from .blockwise_topk import blockwise_topk_kernel
 from .bm25_block_score import bm25_block_score, bm25_block_score_topk
 from .bm25_gather_score import bm25_gather_score_topk, \
-    bm25_resident_score_topk
+    bm25_resident_score_topk, bm25_resident_score_topk_pruned
 from .block_segment_sum import block_segment_sum
 from .embedding_bag import embedding_bag_kernel
 
@@ -163,6 +163,39 @@ def bm25_retrieve_resident(desc: jax.Array, weights: jax.Array,
     ids, mvals = splice_default_docs(vals.T, gids.T, None, kk, n_docs,
                                      default_ids=def_ids)
     return ids, mvals + nonocc_shift[:, None]
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_size", "frag", "k", "n_docs"))
+def bm25_retrieve_resident_pruned(desc: jax.Array, weights: jax.Array,
+                                  doc_ids_res: jax.Array,
+                                  scores_res: jax.Array, bounds: jax.Array,
+                                  def_ids: jax.Array,
+                                  nonocc_shift: jax.Array, *,
+                                  block_size: int, frag: int, k: int,
+                                  n_docs: int
+                                  ) -> tuple[jax.Array, jax.Array,
+                                             jax.Array]:
+    """Pruned-regime resident retrieval: (ids, scores, skipped) per batch.
+
+    :func:`bm25_retrieve_resident` with the block-max skip: ``desc`` is the
+    threshold-COMPACTED fragment table (losing blocks already pruned by
+    the planner pass), ``bounds`` the surviving fragments' per-query block
+    upper bounds driving the in-kernel skip of fragments that only become
+    losers once the scoreboard saturates mid-launch. ``def_ids`` MUST come
+    from the UNPRUNED visited-block set: a pruned block's documents score
+    below the threshold, not zero, so they are neither candidates nor
+    default documents. The third output is the in-kernel skip count.
+    Output (ids, scores) are bit-identical to the single-buffer unpruned
+    path on the same batch — pruning removes provably-losing work only.
+    """
+    kk = min(k, n_docs)
+    vals, gids, skipped = bm25_resident_score_topk_pruned(
+        desc, weights, bounds, doc_ids_res, scores_res,
+        block_size=block_size, frag=frag, k=kk, n_docs=n_docs)
+    ids, mvals = splice_default_docs(vals.T, gids.T, None, kk, n_docs,
+                                     default_ids=def_ids)
+    return ids, mvals + nonocc_shift[:, None], skipped[0, 0]
 
 
 def segment_sum_blocked(values: jax.Array, segment_ids: jax.Array, *,

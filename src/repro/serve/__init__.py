@@ -1,9 +1,10 @@
 """Serving stack: sharded retrieval engine with hedging, LM decode engine."""
 
 from .retrieval_engine import (BlockedRetriever, DeviceRetriever,
-                               GatheredRetriever, RetrievalEngine,
-                               ShardRuntime)
+                               GatheredRetriever, PrunedRetriever,
+                               RetrievalEngine, ShardRuntime)
 from .decode_engine import DecodeEngine
 
 __all__ = ["BlockedRetriever", "DeviceRetriever", "GatheredRetriever",
-           "RetrievalEngine", "ShardRuntime", "DecodeEngine"]
+           "PrunedRetriever", "RetrievalEngine", "ShardRuntime",
+           "DecodeEngine"]

@@ -30,10 +30,15 @@ layer over document shards, and the operational concerns become:
       else — run-fragment descriptors go to SMEM, posting tiles are DMA'd
       straight out of the resident index, and the steady-state path ships
       ZERO posting bytes host→device (a host-gather fallback with a
-      hot-token LRU remains for CPU/interpret mode).
+      hot-token LRU remains for CPU/interpret mode);
+    - **pruned**     (O(postings that can still win),
+      ``bm25_resident_score_topk_pruned``) when the resident block-max
+      table estimates enough provably-losing blocks — the gathered
+      machinery minus every fragment whose document block cannot beat
+      the certified top-k threshold. Output stays bit-identical.
 
-  ``scorer="blocked"`` / ``scorer="gathered"`` remain as forced-regime
-  aliases of the same class.
+  ``scorer="blocked"`` / ``scorer="gathered"`` / ``scorer="pruned"``
+  remain as forced-regime aliases of the same class.
 
 * batching — ``retrieve_batch`` runs B queries through ONE kernel launch
   per shard (the batch dimension is free on the MXU), amortizing launch
@@ -143,13 +148,23 @@ class DeviceRetriever(_DeviceRetrieverBase):
     layout and the CSC arrays the resident gather kernel DMAs from) and
     plans every batch through ``core.retrieval.plan_retrieval``:
 
-    * ``regime="auto"`` (default) — compare the batch's Σ df (free, host
-      descriptor table) against nnz; full-scan when the work ratio is
-      below the calibrated crossover, gathered otherwise. The decision is
-      recorded in ``self.last_plan`` for observability.
-    * ``regime="blocked"`` / ``"gathered"`` — force that regime (the
-      planner still runs, so the evidence is logged); these back the
-      :class:`BlockedRetriever` / :class:`GatheredRetriever` aliases.
+    * ``regime="auto"`` (default) — compare the batch's modeled costs:
+      full-scan O(nnz), gathered O(crossover × Σ df), and — when the
+      block-max table is resident — PRUNED, the gathered cost scaled by
+      the estimated surviving-work fraction over ``PRUNE_DISCOUNT``. The
+      decision and the pruning evidence (``survivor_frac``,
+      ``frags_planned/pruned/skipped``) are recorded in ``self.last_plan``
+      for observability.
+    * ``regime="blocked"`` / ``"gathered"`` / ``"pruned"`` — force that
+      regime (the planner still runs, so the evidence is logged); these
+      back the :class:`BlockedRetriever` / :class:`GatheredRetriever` /
+      :class:`PrunedRetriever` aliases.
+
+    The pruned regime is the resident gather plus exact block-max
+    pruning (see :meth:`_retrieve_pruned`): identical output bit-for-bit,
+    strictly less work — fragments whose document block provably cannot
+    place a document in any query's top-k are compacted out before launch
+    and skipped in-kernel once the running threshold saturates further.
 
     The gathered regime has two executions:
 
@@ -195,15 +210,24 @@ class DeviceRetriever(_DeviceRetrieverBase):
                  acc_block: int = 512, q_max: int = 32, frag: int = 512,
                  crossover: float | None = None, gather: str | None = None,
                  plan: str | None = None, double_buffer: bool = True,
-                 host_arrays: str = "keep", run_cache: int = 256):
+                 host_arrays: str = "keep", run_cache: int = 256,
+                 bmax_dtype: str = "auto", reuse_from=None):
         from ..sparse.block_csr import DeviceIndex, PostingRunCache
-        if regime not in ("auto", "blocked", "gathered"):
+        if regime not in ("auto", "blocked", "gathered", "pruned"):
             raise ValueError(f"unknown regime {regime!r}")
         if gather is None:
             import jax
-            gather = "resident" if jax.default_backend() == "tpu" else "host"
+            # pruning is a resident-path concept (it gates fragment DMAs
+            # against the resident block-max table), so a forced pruned
+            # build resolves to the resident gather even off-TPU
+            gather = ("resident" if regime == "pruned"
+                      or jax.default_backend() == "tpu" else "host")
         if gather not in ("resident", "host"):
             raise ValueError(f"unknown gather mode {gather!r}")
+        if regime == "pruned" and gather != "resident":
+            raise ValueError('regime="pruned" gates resident fragment DMAs '
+                             'against the block-max table — it requires '
+                             'gather="resident"')
         if plan is None:
             import jax
             plan = ("device" if gather == "resident"
@@ -233,11 +257,15 @@ class DeviceRetriever(_DeviceRetrieverBase):
         self.n_docs = int(index.doc_lens.size)
         self.run_cache = (PostingRunCache(run_cache)
                           if gather == "host" and run_cache > 0 else None)
+        with_csc = (regime in ("auto", "gathered", "pruned")
+                    and gather == "resident")
         self.dindex = DeviceIndex.build(
             index, block_size=block_size, tile=tile, frag=frag,
             with_blocked=regime in ("auto", "blocked"),
-            with_csc=regime in ("auto", "gathered") and gather == "resident",
-            host_arrays=host_arrays)
+            with_csc=with_csc,
+            with_bmax=with_csc and regime in ("auto", "pruned"),
+            bmax_dtype=bmax_dtype,
+            host_arrays=host_arrays, reuse_from=reuse_from)
         self._nf_state = {}                      # steady-state nf bucket
         if host_arrays == "drop":
             # serving now reads only metadata: release the O(nnz) host
@@ -258,6 +286,12 @@ class DeviceRetriever(_DeviceRetrieverBase):
             self.retrieve_batch([q], kk, regime="blocked")
         if self.regime in ("auto", "gathered"):
             self.retrieve_batch([q], kk, regime="gathered")
+        if self.regime == "pruned":
+            # auto engines compile the pruned kernels lazily on the first
+            # batch the cost model routes there — warming all three per
+            # shard would triple build latency for a regime many shards
+            # never enter
+            self.retrieve_batch([q], kk, regime="pruned")
 
     def retrieve_batch(self, query_tokens: Sequence[np.ndarray], k: int,
                        *, regime: str | None = None
@@ -281,10 +315,49 @@ class DeviceRetriever(_DeviceRetrieverBase):
         b, uniq_batch, uniq_tab, weights, shift = \
             self._pack_batch(query_tokens)
         kk = min(k, self.n_docs)
+        # the pruned regime needs the block-max table and an accumulator
+        # window matching its block grid (k can outgrow the block height)
+        prune_ok = (self.gather_mode == "resident"
+                    and self.dindex.bmax is not None
+                    and kk <= self.dindex.block_size)
+        want = regime or self.regime
+        survivor_frac, prune_ub = None, None
+        # the host estimate feeds the auto cost model and (under host
+        # planning) hands its bound matrix to the execution pass; a FORCED
+        # pruned regime under device planning consumes neither — skip the
+        # O(U·nb·B) host matmul on that hot path
+        if prune_ok and (want == "auto"
+                         or (want == "pruned" and self.plan_mode == "host")):
+            from ..sparse.block_csr import estimate_prune_survivors
+            survivor_frac, prune_ub = estimate_prune_survivors(
+                self.dindex.bmax, uniq_tab, weights, k=kk, b_true=b)
         plan = plan_retrieval(self.dindex.sum_df(uniq_batch),
-                              self.dindex.nnz, regime=regime or self.regime,
-                              crossover=self.crossover, plan=self.plan_mode)
+                              self.dindex.nnz, regime=want,
+                              crossover=self.crossover, plan=self.plan_mode,
+                              survivor_frac=survivor_frac)
         self.last_plan = plan
+        if plan.regime == "pruned":
+            if self.gather_mode != "resident":
+                raise ValueError('regime="pruned" requires '
+                                 'gather="resident"')
+            if self.dindex.csc_doc_ids is None or self.dindex.bmax is None:
+                raise ValueError("pruned regime requested but this "
+                                 "retriever was built without the "
+                                 "resident CSC index + block-max table")
+            if kk <= self.dindex.block_size:
+                ids, vals = self._retrieve_pruned(uniq_batch, uniq_tab,
+                                                  weights, shift, kk, plan,
+                                                  b_true=b, ub=prune_ub)
+                return (np.asarray(ids[:b]).astype(np.int64)
+                        + self.index.doc_offset, np.asarray(vals[:b]))
+            # k outgrew the block-max grid (degenerate: the scoreboard
+            # spans whole blocks, nothing can prune) — run the exact
+            # unpruned resident path under the pruned label
+            plan = plan_retrieval(plan.sum_df, plan.nnz, regime="gathered",
+                                  crossover=self.crossover,
+                                  plan=self.plan_mode)
+            plan.regime, plan.forced = "pruned", True
+            self.last_plan = plan
         if plan.regime == "blocked":
             if self.dindex.blk_tok is None:
                 raise ValueError("blocked regime requested but this "
@@ -341,6 +414,118 @@ class DeviceRetriever(_DeviceRetrieverBase):
         return (np.asarray(ids[:b]).astype(np.int64) + self.index.doc_offset,
                 np.asarray(vals[:b]))
 
+    def _retrieve_pruned(self, uniq_batch, uniq_tab, weights, shift, kk,
+                         plan, *, b_true, ub=None):
+        """Block-max pruned resident execution (exact; see ROADMAP).
+
+        Three stages, under either planner:
+
+        1. **Seed** — the full fragment table is compacted down to the few
+           highest-upper-bound blocks and scored through the single-buffer
+           resident kernel; the resulting scoreboard's k-th row is a REAL
+           document's full score per query, i.e. a certified lower bound
+           on each final k-th score (the threshold τ).
+        2. **Compact** — fragments of blocks whose summed query-side upper
+           bound beats τ for NO query are compacted out of the table
+           before launch (the seed blocks always survive: each holds a
+           document scoring ≥ its own bound's τ contribution), and the
+           fragment bucket re-sizes so the kernel grid shrinks with the
+           surviving work.
+        3. **Skip** — the survivors run through the pruned kernel, whose
+           per-fragment scoreboard test keeps cutting DMAs as the running
+           threshold saturates past the seed estimate mid-launch.
+
+        Under ``plan="host"`` the bound matmul/compaction run on numpy
+        and the compacted table + bound rows ship as descriptors; under
+        ``plan="device"`` everything is derived from the resident
+        block-max table and CSC arrays — zero descriptor bytes, same as
+        the unpruned device plan. Default-document ids always come from
+        the UNPRUNED visited-block set: a pruned block's documents score
+        below τ, not zero.
+        """
+        import jax.numpy as jnp
+
+        from ..core.retrieval import default_doc_ids
+        from ..core.scoring import bucket_pow2
+        from ..kernels import ops
+        from ..kernels.bm25_gather_score import bm25_resident_score_topk
+        from ..sparse.block_csr import (block_upper_bounds, fragment_plan,
+                                        prune_fragment_plan,
+                                        put_descriptor_array,
+                                        select_seed_blocks)
+        bm = self.dindex.bmax
+        rblock = self.dindex.block_size
+        frag = self.dindex.frag
+        w_dev = jnp.asarray(weights)
+        csc_doc, csc_sc = self.dindex.csc_doc_ids, self.dindex.csc_scores
+        if self.plan_mode == "device":
+            from ..sparse.fragment_device import (block_bounds_device,
+                                                  compact_fragment_table,
+                                                  plan_fragments_device,
+                                                  prune_fragment_mask,
+                                                  seed_fragment_mask)
+            desc_full, dids, _ = plan_fragments_device(
+                self.dindex, uniq_tab, sum_df=plan.sum_df, k=kk,
+                block_size=rblock, state=self._nf_state)
+            nf_planned = int(np.asarray((desc_full[1] > 0).sum()))
+            ub_dev = block_bounds_device(
+                bm.device, bm.scale_dev,
+                jnp.asarray(np.asarray(uniq_tab, np.int32)), w_dev,
+                quantized=bm.quantized)
+            # pow2 batch-padding columns are sliced off after retrieval —
+            # their trivial thresholds must not veto pruning (real empty
+            # queries keep theirs: their all-tied folds must replay
+            # exactly)
+            col = jnp.arange(ub_dev.shape[1], dtype=jnp.int32)
+            ub_dev = jnp.where(col[None, :] < b_true, ub_dev, -jnp.inf)
+            from ..sparse.block_csr import seed_block_budget
+            seed_keep = seed_fragment_mask(desc_full, ub_dev,
+                                           n_seed=seed_block_budget(kk))
+            seed_desc, n_sk = compact_fragment_table(desc_full, seed_keep)
+            sb = bucket_pow2(max(int(n_sk), 1), floor=8)
+            sv, _ = bm25_resident_score_topk(
+                seed_desc[:, :sb], w_dev, csc_doc, csc_sc,
+                block_size=rblock, frag=frag, k=kk, n_docs=self.n_docs,
+                double_buffer=False)
+            tau = sv[kk - 1]
+            keep = prune_fragment_mask(desc_full, ub_dev, tau)
+            desc_c, n_kp = compact_fragment_table(desc_full, keep)
+            nf_surv = int(n_kp)
+            desc = desc_c[:, :bucket_pow2(max(nf_surv, 1), floor=8)]
+            bounds = ub_dev[desc[3], :]
+        else:
+            fp = fragment_plan(self.index, uniq_batch, block_size=rblock,
+                               frag=frag)
+            nf_planned = fp.n_frags
+            if ub is None:
+                ub = block_upper_bounds(bm, uniq_tab, weights)
+                ub[:, b_true:] = -np.inf      # see device branch comment
+            dids = jnp.asarray(default_doc_ids(fp.vis_blocks, kk,
+                                               self.n_docs, rblock))
+            if fp.n_frags:
+                seed_keep = select_seed_blocks(ub, fp.vis_blocks, k=kk,
+                                               block_size=rblock)
+                seed_fp = prune_fragment_plan(fp, seed_keep)
+                sv, _ = bm25_resident_score_topk(
+                    put_descriptor_array(seed_fp.desc), w_dev, csc_doc,
+                    csc_sc, block_size=rblock, frag=frag, k=kk,
+                    n_docs=self.n_docs, double_buffer=False)
+                tau = np.asarray(sv)[kk - 1]                 # [B]
+                pf = prune_fragment_plan(fp, (ub >= tau[None, :]).any(1))
+            else:
+                pf = fp
+            nf_surv = pf.n_frags
+            desc = put_descriptor_array(pf.desc)
+            bounds = put_descriptor_array(ub[pf.desc[3]])
+        ids, vals, skipped = ops.bm25_retrieve_resident_pruned(
+            desc, w_dev, csc_doc, csc_sc, bounds, dids,
+            jnp.asarray(shift), block_size=rblock, frag=frag, k=kk,
+            n_docs=self.n_docs)
+        plan.frags_planned = nf_planned
+        plan.frags_pruned = nf_planned - nf_surv
+        plan.frags_skipped = int(skipped)
+        return ids, vals
+
 
 class BlockedRetriever(DeviceRetriever):
     """Forced full-scan alias of :class:`DeviceRetriever` (compat shim)."""
@@ -360,8 +545,18 @@ class GatheredRetriever(DeviceRetriever):
                          acc_block=acc_block, q_max=q_max, **kwargs)
 
 
+class PrunedRetriever(DeviceRetriever):
+    """Forced block-max-pruned alias of :class:`DeviceRetriever`."""
+
+    def __init__(self, index: BM25Index, *, tile: int = 512,
+                 q_max: int = 32, **kwargs):
+        super().__init__(index, regime="pruned", tile=tile, q_max=q_max,
+                         **kwargs)
+
+
 _SCORERS = {"scipy": ScipyBM25, "auto": DeviceRetriever,
-            "blocked": BlockedRetriever, "gathered": GatheredRetriever}
+            "blocked": BlockedRetriever, "gathered": GatheredRetriever,
+            "pruned": PrunedRetriever}
 
 
 @dataclass
@@ -460,12 +655,13 @@ class RetrievalEngine:
         rescale reuses everything, a boundary-moving one rebuilds only the
         moved shards.
         """
+        from ..sparse.block_csr import DeviceIndex
         old = list(getattr(self, "runtimes", []))
         pool: dict[tuple, list[ShardRuntime]] = {}
         for rt in old:
             key = (int(rt.index.doc_offset), int(rt.index.doc_ids.size))
             pool.setdefault(key, []).append(rt)
-        runtimes, reused = [], 0
+        runtimes, reused, blockmax_reused = [], 0, 0
         for i, s in enumerate(shards):
             delay = self._delay_factory(i) if self._delay_factory else None
             cands = pool.get((int(s.doc_offset), int(s.doc_ids.size)), [])
@@ -477,8 +673,27 @@ class RetrievalEngine:
                 runtimes.append(hit)
                 reused += 1
                 continue
+            opts = self.scorer_opts
+            if self.scorer != "scipy":
+                # incremental re-blocking: a boundary that moved through
+                # posting-LESS documents changes a shard's doc range but
+                # not one posting byte — the runtime cannot be reused
+                # wholesale (global ids shift), but its resident layouts
+                # and block-max table can (they depend only on the local
+                # postings), so the rebuild re-uploads nothing
+                donor = next(
+                    (rt for rt in old
+                     if getattr(rt._scorer, "dindex", None) is not None
+                     and DeviceIndex._postings_identical(s, rt.index)),
+                    None)
+                if donor is not None:
+                    opts = {**opts, "reuse_from": donor._scorer.dindex}
             rt = ShardRuntime(s, delay=delay, scorer=self.scorer,
-                              scorer_opts=self.scorer_opts)
+                              scorer_opts=opts)
+            di = getattr(rt._scorer, "dindex", None)
+            if di is not None and di.reused and (
+                    di.reused.get("bmax") or di.reused.get("blocked")):
+                blockmax_reused += 1
             if self.warmup:
                 # compile the device scorers at BUILD time (and after every
                 # rescale) so the first live query never pays jit
@@ -489,7 +704,8 @@ class RetrievalEngine:
         self.shards = shards
         self.runtimes = runtimes
         self.last_build_stats = {"reused": reused,
-                                 "built": len(shards) - reused}
+                                 "built": len(shards) - reused,
+                                 "blockmax_reused": blockmax_reused}
 
     # -- control plane ------------------------------------------------------
     def rescale(self, n_shards: int) -> None:

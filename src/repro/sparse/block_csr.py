@@ -517,6 +517,260 @@ def fragment_plan(index, uniq_tokens: np.ndarray, *, block_size: int,
                         frag)
 
 
+# -- block-max tables (the pruned regime's bound metadata) --------------------
+#
+# Eager scoring makes block-max pruning FREE at build time: every posting's
+# final contribution is already known, so the per-(token, doc-block) maximum
+# is one ``np.maximum.reduceat`` over the CSC run boundaries. The table is
+# clamped at zero (a document MISSING a posting contributes exactly 0, so a
+# negative block max — robertson's negative-IDF differentials — never bounds
+# anything below zero), which is what makes the bound valid on all five
+# variants:
+#
+#     score(d in block b, q) = Σ_t w_t · s(t, d)  ≤  Σ_t w_t · bmax[t, b]
+#
+# for any nonnegative query weights w. The pruned retrieval regime compares
+# that upper bound against a per-query threshold (a REAL document's full
+# score, so a certified lower bound on the final k-th score) and skips every
+# fragment whose block provably cannot alter the scoreboard.
+
+_BOUND_SLACK = 1e-3   # relative inflation covering f32 kernel accumulation
+_BOUND_ABS = 1e-6     # absolute floor so equal-to-zero bounds stay strict
+
+
+@dataclass
+class BlockMaxTable:
+    """Dense per-(token, doc-block) score upper bounds, host + HBM-resident.
+
+    ``host[t, b]`` bounds the stored (shifted) score any document of block
+    ``b`` can receive from token ``t`` — clamped at 0 so the bound also
+    covers documents without the posting (and negative-IDF postings). The
+    column dimension is pow2-bucketed (``nb_pad``) so jit shapes stay
+    stable across rescales; columns ≥ ``n_blocks`` are zero.
+
+    ``quantized=True`` stores u8 codes with a PER-TOKEN scale (one f32 per
+    vocabulary row — a global scale would inflate every low-IDF token's
+    bounds to the corpus-wide maximum's granularity and kill pruning on
+    exactly the Zipf-head tokens that matter), CEIL-quantized (``dequant ≥
+    true max``) so the bound stays conservative; the auto builder picks u8
+    whenever the f32 table would exceed a quarter of the posting bytes —
+    the HBM budget the resident index is allowed to spend on pruning
+    metadata. ``device``/``scale_dev`` mirror the table in HBM (uploaded
+    once per (re)build, descriptor-class traffic).
+    """
+
+    host: np.ndarray        # [V, nb_pad] float32, or uint8 codes
+    scale: np.ndarray       # [V] f32 per-token dequant scale (1s for f32)
+    quantized: bool
+    block_size: int
+    n_blocks: int           # true block count (before pow2 padding)
+    nb_pad: int
+    over_budget: bool       # even u8 exceeded the ≤1/4-posting-bytes target
+    device: object = None   # same table, HBM-resident (jax array)
+    scale_dev: object = None
+
+    @property
+    def nbytes(self) -> int:
+        return int(self.host.nbytes
+                   + (self.scale.nbytes if self.quantized else 0))
+
+    def rows(self, tokens: np.ndarray) -> np.ndarray:
+        """Dequantized f32 bound rows for ``tokens`` (clipped to range)."""
+        safe = np.clip(np.asarray(tokens, dtype=np.int64), 0,
+                       self.host.shape[0] - 1)
+        r = self.host[safe].astype(np.float32)
+        return r * self.scale[safe][:, None] if self.quantized else r
+
+
+def build_block_max(index, *, block_size: int, dtype: str = "auto"
+                    ) -> BlockMaxTable:
+    """One vectorized pass COO → block-max table (build-time byproduct).
+
+    The CSC invariant (postings sorted by token, then doc id) makes every
+    (token, doc-block) pair a contiguous run of the posting stream, so the
+    per-run maxima are a single ``np.maximum.reduceat`` over the run
+    boundaries — O(nnz), no per-token loop, shared with nothing (the
+    fragment planners find the same boundaries per *batch*; this runs once
+    per build over ALL tokens).
+
+    ``dtype``: ``"f32"`` / ``"u8"`` force the storage; ``"auto"`` picks f32
+    when it fits the ≤1/4-posting-bytes budget, else the u8 ceil-quantized
+    form (u8 is kept even when it too overflows the budget — recorded in
+    ``over_budget`` — because the pruned regime is opt-in via the planner).
+    """
+    if dtype not in ("auto", "f32", "u8"):
+        raise ValueError(f"unknown block-max dtype {dtype!r}")
+    v = int(index.n_vocab)
+    n_docs = int(index.doc_lens.size)
+    n_blocks = max(1, -(-n_docs // block_size))
+    nb_pad = bucket_pow2(n_blocks, floor=8)
+    table = np.zeros((v, nb_pad), dtype=np.float32)
+    nnz = int(index.doc_ids.size)
+    if nnz:
+        df = np.diff(index.indptr)
+        tok = np.repeat(np.arange(v, dtype=np.int64), df)
+        blk = index.doc_ids.astype(np.int64) // block_size
+        new = np.empty(nnz, dtype=bool)
+        new[0] = True
+        new[1:] = (tok[1:] != tok[:-1]) | (blk[1:] != blk[:-1])
+        run_at = np.flatnonzero(new)
+        run_max = np.maximum.reduceat(index.scores, run_at)
+        # clamp: docs without the posting contribute 0, so the bound is
+        # max(0, run max) — also neutralizes negative-IDF differentials
+        table[tok[run_at], blk[run_at]] = np.maximum(run_max, 0.0)
+    posting_budget = nnz * 8 // 4            # doc_ids i32 + scores f32
+    if dtype == "auto":
+        dtype = "f32" if table.nbytes <= posting_budget else "u8"
+    if dtype == "u8":
+        # PER-TOKEN scales: each row quantizes against its own maximum, so
+        # a tiny-IDF token's bounds keep 1/255 relative resolution instead
+        # of the corpus-max granularity
+        mx = table.max(axis=1)
+        scale = np.where(mx > 0, mx / 255.0, 1.0).astype(np.float32)
+        codes = np.ceil(table / scale[:, None]).astype(np.int64)
+        host = np.clip(codes, 0, 255).astype(np.uint8)  # dequant ≥ true
+        quantized = True
+    else:
+        host, scale, quantized = table, np.ones(v, np.float32), False
+    bm = BlockMaxTable(host=host, scale=scale, quantized=quantized,
+                       block_size=block_size, n_blocks=n_blocks,
+                       nb_pad=nb_pad,
+                       over_budget=host.nbytes > max(posting_budget, 1))
+    bm.device = put_descriptor_array(host)
+    bm.scale_dev = put_descriptor_array(scale)   # ones when unquantized
+    return bm
+
+
+def block_upper_bounds(bmax: BlockMaxTable, uniq_tab: np.ndarray,
+                       weights: np.ndarray) -> np.ndarray:
+    """Per-(block, query) score upper bounds for one packed batch.
+
+    ``uniq_tab``/``weights`` are the kernel's own query operands
+    (``pack_query_batch`` layout: sentinel rows carry zero weight, so
+    clipping their token id is harmless). Computed in f64 and inflated by
+    ``_BOUND_SLACK`` so the f32 kernel's accumulation rounding can never
+    push a real score past its bound — inflation only ever makes pruning
+    MORE conservative, never wrong. Returns ``[nb_pad, B]`` float32.
+    """
+    rows = bmax.rows(uniq_tab).astype(np.float64)        # [U, nb_pad]
+    ub = rows.T @ weights.astype(np.float64)             # [nb_pad, B]
+    return (ub * (1.0 + _BOUND_SLACK) + _BOUND_ABS).astype(np.float32)
+
+
+def prune_fragment_plan(fp: FragmentPlan, keep_blocks: np.ndarray
+                        ) -> FragmentPlan:
+    """Compact a fragment table to the fragments of surviving blocks.
+
+    ``keep_blocks`` is a boolean mask over block ids (``[nb]``, nb ≥ max
+    block id + 1). Pruning is BLOCK-granular, so the surviving fragments
+    keep their relative order and their first/last accumulator flags stay
+    consistent (whole blocks leave, never a block's interior). The
+    returned plan's ``vis_blocks`` is preserved UNPRUNED — the
+    default-document splice must keep treating pruned blocks as visited
+    (their documents score below the threshold, not zero) — while
+    ``sum_df`` reflects the surviving posting work and ``nf_pad``
+    re-buckets so the kernel grid shrinks with the pruned work.
+    """
+    n = fp.n_frags
+    d = fp.desc[:, :n]
+    keep = keep_blocks[d[3]] if n else np.zeros(0, dtype=bool)
+    sel = d[:, keep]
+    nf = int(sel.shape[1])
+    nf_pad = bucket_pow2(max(nf, 1), floor=8)
+    desc = np.zeros((6, nf_pad), np.int32)
+    desc[:, :nf] = sel
+    return FragmentPlan(desc, fp.vis_blocks, nf, int(sel[1].sum()),
+                        fp.block_size, fp.frag)
+
+
+def estimate_prune_survivors(bmax: BlockMaxTable, uniq_tab: np.ndarray,
+                             weights: np.ndarray, *, k: int,
+                             b_true: int | None = None
+                             ) -> tuple[float, np.ndarray]:
+    """Host estimate of the pruning win, BEFORE any device work.
+
+    The planner needs the surviving-work fraction to decide whether the
+    pruned regime is worth its overhead, but the certified threshold only
+    exists after the seed pass. This estimate stands in: each block's best
+    single-term score ``max_t w_t · bmax[t, b]`` is (approximately) a
+    score some document of the block achieves, so the k-th largest of
+    those across blocks approximates the final k-th score from below —
+    conservative on the variants with nonnegative contributions, a
+    heuristic on robertson (execution stays exact either way; only the
+    regime CHOICE consumes this number). Survivors are the blocks whose
+    full upper bound reaches the estimated threshold for any query;
+    the fraction is over visited blocks (a block-count proxy for the df
+    share — per-block df is not free host metadata).
+
+    ``b_true`` marks the real batch width: columns past it are pow2
+    padding whose results are sliced off, so they are EXCLUDED here and
+    their bound columns returned as -inf — a padding column's trivial
+    0-threshold would otherwise veto every prune (a REAL empty query
+    keeps that veto on purpose: its all-tied output must reproduce the
+    oracle's fold order exactly, so nothing may be pruned for it).
+
+    Returns ``(survivor_frac, ub [nb_pad, B])`` — under HOST planning the
+    execution path reuses the bounds so the matmul is paid once per batch
+    (device planning recomputes them on device and callers skip this
+    estimate unless the auto cost model needs it).
+    """
+    ub = block_upper_bounds(bmax, uniq_tab, weights)
+    b = weights.shape[1]
+    if b_true is not None and b_true < b:
+        ub[:, b_true:] = -np.inf
+    else:
+        b_true = b
+    if b_true == 0:
+        return 1.0, ub
+    visited = ub[:, :b_true].max(axis=1) > 2.0 * _BOUND_ABS
+    nv = int(visited.sum())
+    if nv == 0:
+        return 1.0, ub
+    rows = bmax.rows(uniq_tab)                           # [U, nb_pad]
+    kb = min(k, nv)
+    tau_hat = np.empty(b_true, dtype=np.float32)
+    for q in range(b_true):                              # B is small
+        lb = (rows * weights[:, q:q + 1]).max(axis=0)    # [nb_pad]
+        lb = lb[visited]
+        tau_hat[q] = np.partition(lb, lb.size - kb)[lb.size - kb]
+    surv = visited & (ub[:, :b_true] >= tau_hat[None, :]).any(axis=1)
+    return float(surv.sum() / nv), ub
+
+
+def seed_block_budget(k: int) -> int:
+    """How many highest-bound blocks the threshold-seeding pass scores.
+
+    The k winners can sit in up to k distinct blocks, so a tight seed
+    threshold wants ~k blocks; the cap bounds the re-scored seed work for
+    large k (the in-kernel skip refines whatever the seed pass missed).
+    """
+    return max(2, min(16, k))
+
+
+def select_seed_blocks(ub: np.ndarray, vis_blocks: np.ndarray, *,
+                       k: int, block_size: int) -> np.ndarray:
+    """Threshold-seeding block choice: PER QUERY, the visited blocks with
+    the highest upper bounds — the likeliest homes of that query's top-k
+    documents, so scoring them first yields a tight per-query threshold
+    (:func:`seed_block_budget` blocks each, unioned across the batch; a
+    single shared pick would let one query's hot blocks crowd out the
+    rest, leaving their thresholds loose and the pre-launch compaction
+    toothless). Returns a boolean keep-mask over block ids, shaped like
+    ``ub``'s block axis."""
+    keep = np.zeros(ub.shape[0], dtype=bool)
+    if vis_blocks.size == 0:
+        return keep
+    n_seed = min(int(vis_blocks.size), seed_block_budget(k))
+    score = ub[vis_blocks]                               # [nv, B]
+    for q in range(score.shape[1]):                      # B is small
+        if not np.isfinite(score[:, q]).any():
+            continue                                     # padding column
+        top = vis_blocks[np.argsort(-score[:, q],
+                                    kind="stable")[:n_seed]]
+        keep[top] = True
+    return keep
+
+
 class PostingRunCache:
     """LRU cache of per-token gathered posting runs (host-gather fallback).
 
@@ -607,41 +861,103 @@ class DeviceIndex:
     blk_tok: object = None       # [nb, p_pad] int32 device (or None)
     blk_loc: object = None
     blk_sc: object = None
+    bmax: object = None          # BlockMaxTable (pruned regime) or None
+    reused: dict = None          # which layouts a rescale build recycled
+
+    @staticmethod
+    def _postings_identical(a, b) -> bool:
+        """Byte-identical posting payload (layouts depend on nothing else
+        except the doc count, checked separately where it matters)."""
+        return (a is not None and b is not None
+                and np.array_equal(a.indptr, b.indptr)
+                and np.array_equal(a.doc_ids, b.doc_ids)
+                and np.array_equal(a.scores, b.scores))
 
     @staticmethod
     def build(index, *, block_size: int = 512, tile: int = 512,
               frag: int = 512, with_blocked: bool = True,
-              with_csc: bool = True,
-              host_arrays: str = "keep") -> "DeviceIndex":
+              with_csc: bool = True, with_bmax: bool | None = None,
+              bmax_dtype: str = "auto",
+              host_arrays: str = "keep",
+              reuse_from: "DeviceIndex | None" = None) -> "DeviceIndex":
+        """Upload a shard's resident layouts, recycling ``reuse_from``'s.
+
+        ``reuse_from`` is the incremental re-blocking path for elastic
+        rescales: when the new shard's posting bytes are identical to the
+        old DeviceIndex's (boundaries moved through posting-less documents,
+        or didn't move at all) the already-resident CSC arrays are adopted
+        as-is, and the blocked layout + block-max table are adopted too
+        whenever the block grid still matches (same ``block_size`` and
+        block count) — no host-side re-blocking, no re-upload, zero
+        posting bytes shipped. ``di.reused`` records which layouts were
+        recycled (the engine surfaces it as ``blockmax_reused``).
+        """
         if host_arrays not in ("keep", "drop"):
             raise ValueError(f"unknown host_arrays mode {host_arrays!r}")
+        if with_bmax is None:
+            with_bmax = with_csc
         nnz = int(index.doc_ids.size)
+        n_docs = int(index.doc_lens.size)
         di = DeviceIndex(
             host=index, indptr=index.indptr, df=np.diff(index.indptr),
-            nnz=nnz, n_docs=int(index.doc_lens.size),
+            nnz=nnz, n_docs=n_docs,
             n_vocab=int(index.n_vocab), doc_offset=int(index.doc_offset),
-            block_size=block_size, tile_p=tile, frag=frag)
+            block_size=block_size, tile_p=tile, frag=frag,
+            reused={"csc": False, "blocked": False, "bmax": False})
+        old = reuse_from
+        same_postings = (
+            old is not None and old.host is not None
+            and old.block_size == block_size and old.frag == frag
+            and DeviceIndex._postings_identical(index, old.host))
+        # the blocked layout and the block-max table additionally depend on
+        # the block GRID — a doc-count change through trailing empty docs
+        # only invalidates them when it moves the block count
+        same_grid = (same_postings
+                     and -(-n_docs // block_size)
+                     == -(-old.n_docs // block_size))
         if with_csc:
-            # pad so any fragment DMA [start, start+frag) stays in bounds
-            # (starts are < nnz; padding postings carry score 0 / doc 0 and
-            # are masked by the fragment's valid length anyway)
-            assert nnz < 2 ** 31, "int32 resident CSC positions"
-            nnz_pad = _round_up(max(nnz, 1), frag) + frag
-            doc = np.zeros((1, nnz_pad), np.int32)
-            sc = np.zeros((1, nnz_pad), np.float32)
-            doc[0, :nnz] = index.doc_ids
-            sc[0, :nnz] = index.scores
-            di.csc_doc_ids, di.csc_scores = put_posting_arrays(doc, sc)
-            # one-time O(V) upload so fragment tables can be built on
-            # device (counted as the descriptor traffic it replaces)
-            di.csc_indptr = put_descriptor_array(
-                index.indptr.astype(np.int32))
+            if same_postings and old.csc_doc_ids is not None:
+                di.csc_doc_ids = old.csc_doc_ids
+                di.csc_scores = old.csc_scores
+                di.csc_indptr = old.csc_indptr
+                di.reused["csc"] = True
+            else:
+                # pad so any fragment DMA [start, start+frag) stays in
+                # bounds (starts are < nnz; padding postings carry score 0
+                # / doc 0 and are masked by the fragment's valid length)
+                assert nnz < 2 ** 31, "int32 resident CSC positions"
+                nnz_pad = _round_up(max(nnz, 1), frag) + frag
+                doc = np.zeros((1, nnz_pad), np.int32)
+                sc = np.zeros((1, nnz_pad), np.float32)
+                doc[0, :nnz] = index.doc_ids
+                sc[0, :nnz] = index.scores
+                di.csc_doc_ids, di.csc_scores = put_posting_arrays(doc, sc)
+                # one-time O(V) upload so fragment tables can be built on
+                # device (counted as the descriptor traffic it replaces)
+                di.csc_indptr = put_descriptor_array(
+                    index.indptr.astype(np.int32))
         if with_blocked:
-            bp = block_postings_from_index(index, block_size=block_size,
-                                           tile=tile)
-            di.tile_p = min(tile, bp.nnz_pad)
-            di.blk_tok, di.blk_loc, di.blk_sc = put_posting_arrays(
-                bp.token_ids, bp.local_doc, bp.scores)
+            if same_grid and old.blk_tok is not None \
+                    and old.tile_p == min(tile, old.blk_tok.shape[1]):
+                di.tile_p = old.tile_p
+                di.blk_tok, di.blk_loc, di.blk_sc = (old.blk_tok,
+                                                     old.blk_loc, old.blk_sc)
+                di.reused["blocked"] = True
+            else:
+                bp = block_postings_from_index(index, block_size=block_size,
+                                               tile=tile)
+                di.tile_p = min(tile, bp.nnz_pad)
+                di.blk_tok, di.blk_loc, di.blk_sc = put_posting_arrays(
+                    bp.token_ids, bp.local_doc, bp.scores)
+        if with_bmax and with_csc:
+            if same_grid and old.bmax is not None \
+                    and (bmax_dtype == "auto"
+                         or old.bmax.quantized == (bmax_dtype == "u8")):
+                di.bmax = old.bmax
+                di.reused["bmax"] = True
+            else:
+                di.bmax = build_block_max(index, block_size=block_size,
+                                          dtype=bmax_dtype)
         if host_arrays == "drop":
             di.host = None               # serving must never read it again
         return di

@@ -45,7 +45,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from .block_csr import bucket_pow2
+from .block_csr import _BOUND_ABS, _BOUND_SLACK, bucket_pow2
 
 _I32_BIG = np.iinfo(np.int32).max
 
@@ -219,3 +219,96 @@ def plan_fragments_device(dindex, uniq_tab, *, sum_df: int, k: int,
     if state is not None:
         state["nf"] = nf_pad
     return desc, def_ids, nf_pad
+
+
+# -- device half of the pruned regime ----------------------------------------
+#
+# The threshold-aware pruning pass mirrors the host one
+# (``block_csr.block_upper_bounds`` / ``prune_fragment_plan`` /
+# ``select_seed_blocks``) but reads only the HBM-resident block-max table
+# and the device-built fragment table — under ``plan="device"`` the pruned
+# regime therefore ships ZERO descriptor bytes host→device per batch, same
+# invariant as the unpruned device plan (the compacted table and the bound
+# rows are born on device).
+
+
+@functools.partial(jax.jit, static_argnames=("quantized",))
+def block_bounds_device(table: jax.Array, scale: jax.Array, uniq: jax.Array,
+                        weights: jax.Array, *, quantized: bool) -> jax.Array:
+    """Device port of ``block_csr.block_upper_bounds``: ``[nb_pad, B]``.
+
+    ``table`` is the resident ``[V, nb_pad]`` block-max array (u8 codes
+    when ``quantized`` — dequantized here against the ``[V]`` per-token
+    ``scale`` vector, ceil-quantization keeps the bound conservative);
+    ``uniq``/``weights`` are the batch's packed query operands (sentinel
+    rows carry zero weight). Slack-inflated in lockstep with the host
+    version so both planners prune identically-safely.
+    """
+    safe = jnp.clip(uniq.astype(jnp.int32), 0, table.shape[0] - 1)
+    rows = table[safe].astype(jnp.float32)               # [U, nb_pad]
+    if quantized:
+        rows = rows * scale[safe][:, None]
+    ub = rows.T @ weights                                # [nb_pad, B]
+    return ub * (1.0 + _BOUND_SLACK) + _BOUND_ABS
+
+
+@jax.jit
+def compact_fragment_table(desc: jax.Array, keep: jax.Array
+                           ) -> tuple[jax.Array, jax.Array]:
+    """Stable-partition a ``[6, nf_pad]`` table to the kept columns.
+
+    Surviving fragments keep their relative order (a stable argsort on the
+    drop flag), so the block grouping and first/last accumulator flags
+    stay valid as long as ``keep`` is block-uniform — which the threshold
+    test guarantees (it depends only on the fragment's block). Dropped
+    columns become all-zero padding at the tail. Returns ``(compacted
+    [6, nf_pad], n_kept [])``; the caller slices the static width down to
+    the survivor bucket (pure device slicing, nothing uploaded).
+    """
+    order = jnp.argsort(jnp.logical_not(keep), stable=True)
+    return (jnp.where(keep[order][None, :], desc[:, order], 0),
+            jnp.sum(keep.astype(jnp.int32)))
+
+
+@functools.partial(jax.jit, static_argnames=("n_seed",))
+def seed_fragment_mask(desc: jax.Array, ub: jax.Array, *, n_seed: int
+                       ) -> jax.Array:
+    """Fragments of each query's ``n_seed`` highest-bound visited blocks.
+
+    The threshold-seeding choice (device port of
+    ``block_csr.select_seed_blocks``): PER QUERY, scoring the
+    highest-upper-bound blocks first yields a tight per-query threshold;
+    the per-query picks are unioned (a shared pick would let one query's
+    hot blocks crowd out the rest). Ties at a query's ``n_seed``-th bound
+    admit extra blocks — more seed work, never less correctness. Returns
+    a block-uniform boolean mask over columns.
+    """
+    blk = desc[3]
+    real = desc[1] > 0
+    neg = jnp.finfo(ub.dtype).min
+    # per-(block, query) bound restricted to blocks the batch visits
+    blk_score = jnp.full(ub.shape, neg, ub.dtype).at[blk].max(
+        jnp.where(real[:, None], ub[blk], neg))          # [nb_pad, B]
+    kth = jax.lax.top_k(blk_score.T,
+                        min(n_seed, ub.shape[0]))[0][:, -1]   # [B]
+    kth = jnp.maximum(kth, neg / 2)      # no-visited/padding query: none
+    # the zero-bound floor keeps an all-tied trivial column (a real empty
+    # query: every block bounds at the additive slack) from seeding the
+    # whole table — a zero-bound block cannot tighten any threshold
+    live = blk_score[blk] > 2.0 * _BOUND_ABS
+    return real & jnp.any((blk_score[blk] >= kth[None, :]) & live, axis=1)
+
+
+@jax.jit
+def prune_fragment_mask(desc: jax.Array, ub: jax.Array, tau: jax.Array
+                        ) -> jax.Array:
+    """Survivors of the threshold test: blocks some query can still win.
+
+    ``tau`` is the ``[B]`` per-query threshold (a real document's full
+    kernel-computed score per query — the seed scoreboard's k-th row — so
+    a certified lower bound on each final k-th score; -inf rows disable
+    pruning for that query). A fragment survives iff ANY query's bound
+    reaches its threshold; the test reads only the fragment's block, so
+    the mask is block-uniform and compaction preserves accumulator flags.
+    """
+    return (desc[1] > 0) & jnp.any(ub[desc[3]] >= tau[None, :], axis=1)

@@ -425,10 +425,12 @@ def test_rescale_reuses_unchanged_shards(rng):
     shards = build_sharded_indexes(corpus, 30, 4, params=BM25Params())
     eng = RetrievalEngine(shards, k=3, deadline_s=30.0, scorer="auto",
                           scorer_opts=dict(gather="resident", **SMALL))
-    assert eng.last_build_stats == {"reused": 0, "built": 4}
+    assert eng.last_build_stats == {"reused": 0, "built": 4,
+                                    "blockmax_reused": 0}
     reset_transfer_stats()
     eng.rescale(4)                                # boundaries unchanged
-    assert eng.last_build_stats == {"reused": 4, "built": 0}
+    assert eng.last_build_stats == {"reused": 4, "built": 0,
+                                    "blockmax_reused": 0}
     assert TRANSFERS.posting_uploads == 0         # nothing re-uploaded
     eng.rescale(2)                                # boundaries move
     assert eng.last_build_stats["built"] > 0

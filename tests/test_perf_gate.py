@@ -151,3 +151,54 @@ def test_threshold_boundary(ratio, expect):
     cand = _bench(_cell(gathered=0.1 * ratio))
     _, failures = compare(base, cand, max_ratio=1.25)
     assert len(failures) == expect
+
+
+def test_gate_trips_on_skip_rate_collapse():
+    """The pruned cells' skip rate is deterministic for a fixed seed — a
+    >50% drop means the pruning logic stopped cutting work, and must fail
+    even when every latency column looks fine."""
+    base = _bench(_cell(profile="head_mixed", batch=2,
+                        pruned_batch_s=0.02, resident_batch_s=0.06,
+                        pruned_skip_rate=0.70,
+                        posting_bytes_per_batch_pruned=0))
+    cand = copy.deepcopy(base)
+    cand["cells"][0]["pruned_skip_rate"] = 0.30      # 57% drop
+    rows, failures = compare(base, cand)
+    assert len(failures) == 1 and "skip-rate collapse" in failures[0]
+    assert any(r["status"] == "COLLAPSED" for r in rows)
+    # a drop within the tolerance passes
+    cand["cells"][0]["pruned_skip_rate"] = 0.40      # 43% drop
+    _, failures = compare(base, cand)
+    assert failures == []
+    # pruned latency columns are gated like the others
+    cand = copy.deepcopy(base)
+    cand["cells"][0]["pruned_skip_rate"] = 0.70
+    cand["cells"][0]["pruned_batch_s"] = 0.06        # 3x
+    _, failures = compare(base, cand)
+    assert len(failures) == 1 and "pruned_batch_s" in failures[0]
+    # nonzero pruned-path bytes are a LEAK
+    cand = copy.deepcopy(base)
+    cand["cells"][0]["posting_bytes_per_batch_pruned"] = 128
+    _, failures = compare(base, cand)
+    assert len(failures) == 1 and "pruned posting bytes" in failures[0]
+
+
+def test_gate_trips_when_pruned_cells_or_counter_vanish():
+    """The silent-disable paths: a candidate that stops reporting the
+    skip-rate column (counter renamed) or drops the pruned cells wholesale
+    must fail — both are total collapses the per-cell check can't see."""
+    base = _bench(_cell(profile="head_mixed", batch=2,
+                        pruned_batch_s=0.02, pruned_skip_rate=0.70))
+    cand = copy.deepcopy(base)
+    del cand["cells"][0]["pruned_skip_rate"]         # counter vanished
+    _, failures = compare(base, cand)
+    assert len(failures) == 1 and "skip-rate collapse" in failures[0]
+    cand = copy.deepcopy(base)
+    cand["cells"][0]["profile"] = "head"             # pruned cell replaced
+    _, failures = compare(base, cand, allow_empty_intersection=True)
+    assert any("missing from the candidate" in f for f in failures)
+    # a plain latency cell disappearing still only reports, never fails
+    base2 = _bench(_cell(), _cell(profile="tail"))
+    cand2 = _bench(_cell())
+    _, failures = compare(base2, cand2)
+    assert failures == []

@@ -1,0 +1,400 @@
+"""Block-max pruned retrieval — the third planner regime (exact top-k).
+
+Pins the pruning contract at every layer:
+
+* **sparse** — the block-max table is a true per-(token, block) upper
+  bound on stored scores (clamped at 0, so negative-IDF robertson
+  differentials and missing postings are covered), its u8 form is
+  CEIL-quantized (dequant ≥ true) with per-token scales, and
+  ``prune_fragment_plan`` compacts whole blocks without disturbing
+  fragment order or accumulator flags.
+* **kernel + serve** — the pruned regime's output is BIT-identical (exact
+  float equality, not allclose) to the single-buffer resident oracle on
+  all five BM25 variants, under both planners and both bound dtypes,
+  including empty queries, k ≥ n_docs and batches where everything
+  outside the seed blocks is pruned; pruning provably fires on skewed
+  corpora (both the pre-launch compaction and the in-kernel skip).
+* **core** — ``plan_retrieval`` prices the pruned regime as gathered-cost
+  × survivor_frac / PRUNE_DISCOUNT, never picks it without an estimate,
+  and keeps the blocked/gathered decision bitwise-compatible with the
+  two-regime planner.
+* **engine** — ``scorer="pruned"`` serves exactly; a rescale whose
+  boundaries move through posting-less documents reuses the block-max
+  table and blocked layout (``blockmax_reused``) with zero posting
+  re-uploads.
+"""
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from conftest import make_corpus
+from repro.core import (BM25Params, ScipyBM25, build_index,
+                        build_sharded_indexes, dense_oracle_scores,
+                        plan_retrieval, topk_numpy)
+from repro.core.retrieval import PRUNE_DISCOUNT
+from repro.serve import DeviceRetriever, PrunedRetriever, RetrievalEngine
+from repro.sparse.block_csr import (TRANSFERS, DeviceIndex,
+                                    block_upper_bounds, build_block_max,
+                                    fragment_plan, prune_fragment_plan,
+                                    reset_transfer_stats)
+
+ALL_VARIANTS = ["robertson", "atire", "lucene", "bm25l", "bm25+"]
+
+SMALL = dict(block_size=16, tile=16, frag=8, q_max=8)
+
+
+def _oracle(idx):
+    """The exactness comparator: unpruned single-buffer resident path."""
+    return DeviceRetriever(idx, regime="gathered", gather="resident",
+                           double_buffer=False, acc_block=16, **SMALL)
+
+
+def make_skewed_corpus(rng, n_docs=300, n_vocab=60):
+    """Query token 0 has healthy IDF and a few spiky-tf documents — the
+    score distribution block-max pruning exists for."""
+    corpus = []
+    for d in range(n_docs):
+        base = rng.integers(1, n_vocab, size=10).astype(np.int32)
+        if d % 3 == 0:
+            tf0 = 20 if d % 90 == 0 else 1
+            base = np.concatenate([np.zeros(tf0, np.int32), base])
+        corpus.append(base)
+    return corpus
+
+
+# -- tentpole: bit-identical to the single-buffer oracle ----------------------
+
+@pytest.mark.parametrize("method", ALL_VARIANTS)
+@pytest.mark.parametrize("bmax_dtype", ["f32", "u8"])
+def test_pruned_bit_identical_all_variants(method, bmax_dtype, rng):
+    corpus = make_skewed_corpus(rng)
+    idx = build_index(corpus, 60, params=BM25Params(method=method))
+    oracle = _oracle(idx)
+    pruned = PrunedRetriever(idx, bmax_dtype=bmax_dtype, **SMALL)
+    queries = [np.array([0], np.int32),
+               rng.integers(0, 60, size=4).astype(np.int32),
+               np.zeros(0, np.int32)]               # empty query in-batch
+    for k in (1, 3, 9):
+        i0, v0 = oracle.retrieve_batch(queries, k)
+        i1, v1 = pruned.retrieve_batch(queries, k)
+        np.testing.assert_array_equal(v0, v1)
+        np.testing.assert_array_equal(i0, i1)
+    # scores are also the true BM25 scores (not just self-consistent)
+    sc = ScipyBM25(idx)
+    for i, q in enumerate(queries):
+        oracle_scores = sc.score(q)
+        np.testing.assert_allclose(oracle_scores[i1[i]], v1[i], atol=1e-4)
+
+
+@pytest.mark.parametrize("method", ALL_VARIANTS)
+def test_pruned_device_plan_bit_identical(method, rng):
+    corpus = make_skewed_corpus(rng)
+    idx = build_index(corpus, 60, params=BM25Params(method=method))
+    oracle = _oracle(idx)
+    pruned = PrunedRetriever(idx, plan="device", bmax_dtype="u8", **SMALL)
+    queries = [np.array([0], np.int32),
+               rng.integers(0, 60, size=5).astype(np.int32)]
+    for k in (1, 4):
+        i0, v0 = oracle.retrieve_batch(queries, k)
+        i1, v1 = pruned.retrieve_batch(queries, k)
+        np.testing.assert_array_equal(v0, v1)
+        np.testing.assert_array_equal(i0, i1)
+
+
+def test_prelaunch_compaction_fires_and_auto_picks_pruned(rng):
+    """The regime must PRUNE, not just match: at k=1 the seed threshold
+    beats most blocks before launch, and the cost model routes the batch
+    to the pruned regime on its own."""
+    corpus = make_skewed_corpus(rng)
+    idx = build_index(corpus, 60, params=BM25Params())
+    oracle = _oracle(idx)
+    pruned = PrunedRetriever(idx, **SMALL)
+    q = [np.array([0], np.int32)]
+    i0, v0 = oracle.retrieve_batch(q, 1)
+    i1, v1 = pruned.retrieve_batch(q, 1)
+    np.testing.assert_array_equal(v0, v1)
+    np.testing.assert_array_equal(i0, i1)
+    p1 = pruned.last_plan
+    assert p1.regime == "pruned" and p1.frags_planned > 0
+    assert p1.frags_pruned > p1.frags_planned // 2   # pre-launch compaction
+    auto = DeviceRetriever(idx, regime="auto", gather="resident",
+                           acc_block=16, **SMALL)
+    auto.retrieve_batch(q, 1)
+    assert auto.last_plan.regime == "pruned"
+    assert auto.last_plan.survivor_frac < PRUNE_DISCOUNT
+
+
+def test_inkernel_skip_fires_on_late_saturating_threshold(rng):
+    """The in-kernel scoreboard test must cut DMAs the seed pass could
+    not: two LOOSE decoy blocks (each query token's champion is a
+    different document, so the block bound doubles what any one document
+    scores) win the seeding and leave a weak threshold; the TIGHT winner
+    (one document holding both tokens) folds early in block order, the
+    board jumps past every later block's bound, and the victims' DMAs
+    are skipped mid-launch."""
+    def filler():
+        return rng.integers(5, 40, size=8).astype(np.int32)
+
+    docs = [filler() for _ in range(23 * 16)]
+
+    def setdoc(i, tf0=0, tf1=0):
+        docs[i] = np.concatenate([np.zeros(tf0, np.int32),
+                                  np.ones(tf1, np.int32), filler()])
+
+    for b in (0, 1):                                 # loose decoy blocks
+        setdoc(b * 16, tf0=25)
+        setdoc(b * 16 + 1, tf1=25)
+    setdoc(2 * 16, tf0=15, tf1=15)                   # tight winner, block 2
+    for b in range(3, 23):                           # victim blocks
+        setdoc(b * 16, tf0=4)
+        setdoc(b * 16 + 1, tf1=4)
+    idx = build_index(docs, 40, params=BM25Params())
+    oracle = _oracle(idx)
+    q = [np.array([0, 1], np.int32)]
+    i0, v0 = oracle.retrieve_batch(q, 1)
+    for plan in ("host", "device"):
+        pruned = PrunedRetriever(idx, plan=plan, **SMALL)
+        i1, v1 = pruned.retrieve_batch(q, 1)
+        np.testing.assert_array_equal(v0, v1)
+        np.testing.assert_array_equal(i0, i1)
+        p = pruned.last_plan
+        assert p.frags_skipped > p.frags_planned // 2, vars(p)
+        assert i1[0, 0] == 2 * 16                    # the tight winner won
+
+
+def test_pruned_edge_cases_exact(rng):
+    """Empty batch entries, df-0 tail tokens, k ≥ n_docs, and k past the
+    block size (pruning degenerates to the plain resident path)."""
+    corpus = make_corpus(rng, n_docs=30, n_vocab=50)
+    for method in ("lucene", "robertson"):
+        idx = build_index(corpus, 50, params=BM25Params(method=method))
+        oracle = _oracle(idx)
+        pruned = PrunedRetriever(idx, **SMALL)
+        for qs in ([np.zeros(0, np.int32)],
+                   [np.array([48, 49], np.int32)],
+                   [np.zeros(0, np.int32), np.array([1, 2], np.int32)]):
+            for k in (3, 30, 64):                    # 30 = n_docs, 64 > BS
+                i0, v0 = oracle.retrieve_batch(qs, k)
+                i1, v1 = pruned.retrieve_batch(qs, k)
+                np.testing.assert_array_equal(v0, v1)
+                np.testing.assert_array_equal(i0, i1)
+
+
+def test_all_nonseed_fragments_pruned(rng):
+    """One block owns every winner: everything outside the seed blocks is
+    compacted away and the answer still matches the oracle exactly."""
+    rng_ = np.random.default_rng(5)
+    corpus = []
+    for d in range(200):
+        base = rng_.integers(1, 40, size=8).astype(np.int32)
+        if d < 4:                                    # all spikes in block 0
+            base = np.concatenate([np.zeros(25, np.int32), base])
+        elif d % 5 == 0:
+            base = np.concatenate([np.zeros(1, np.int32), base])
+        corpus.append(base)
+    idx = build_index(corpus, 40, params=BM25Params())
+    oracle = _oracle(idx)
+    pruned = PrunedRetriever(idx, **SMALL)
+    q = [np.array([0], np.int32)]
+    i0, v0 = oracle.retrieve_batch(q, 1)
+    i1, v1 = pruned.retrieve_batch(q, 1)
+    np.testing.assert_array_equal(v0, v1)
+    np.testing.assert_array_equal(i0, i1)
+    p = pruned.last_plan
+    n_seed = max(1, -(-1 // 16)) + 1                 # seed block budget
+    surv = p.frags_planned - p.frags_pruned
+    assert surv > 0
+    # survivors are (at most) the seed blocks' fragments
+    fp = fragment_plan(idx, np.array([0], np.int64), block_size=16, frag=8)
+    per_block = np.bincount(fp.desc[3, :fp.n_frags])
+    assert surv <= int(np.sort(per_block)[-n_seed:].sum())
+
+
+def test_pruned_steady_state_zero_posting_bytes(rng):
+    corpus = make_skewed_corpus(rng)
+    idx = build_index(corpus, 60, params=BM25Params())
+    qs = [np.array([0], np.int32), np.array([3, 7], np.int32)]
+    host = PrunedRetriever(idx, **SMALL)
+    host.retrieve_batch(qs, 3)
+    reset_transfer_stats()
+    host.retrieve_batch(qs, 3)
+    assert TRANSFERS.posting_bytes == 0              # bounds ship as
+    assert TRANSFERS.descriptor_bytes > 0            # descriptors only
+    dev = PrunedRetriever(idx, plan="device", **SMALL)
+    dev.retrieve_batch(qs, 3)
+    reset_transfer_stats()
+    dev.retrieve_batch(qs, 3)
+    assert TRANSFERS.posting_bytes == 0              # device plan: nothing
+    assert TRANSFERS.descriptor_bytes == 0
+
+
+# -- sparse: bound validity and compaction invariants -------------------------
+
+@pytest.mark.parametrize("method", ["robertson", "bm25l"])
+@pytest.mark.parametrize("dtype", ["f32", "u8"])
+def test_block_max_bounds_dominate_scores(method, dtype, rng):
+    """Σ_t w_t·bmax[t, b] really bounds every doc's raw score in b."""
+    corpus = make_corpus(rng, n_docs=80, n_vocab=30, max_len=25)
+    idx = build_index(corpus, 30, params=BM25Params(method=method))
+    bm = build_block_max(idx, block_size=16, dtype=dtype)
+    uniq_tab = np.arange(30, dtype=np.int64)
+    weights = rng.random((30, 4)).astype(np.float32)
+    ub = block_upper_bounds(bm, uniq_tab, weights)
+    for q in range(4):
+        scores = np.zeros(idx.doc_lens.size, np.float64)
+        for t in range(30):
+            lo, hi = idx.indptr[t], idx.indptr[t + 1]
+            scores[idx.doc_ids[lo:hi]] += weights[t, q] * idx.scores[lo:hi]
+        for b in range(bm.n_blocks):
+            blk_scores = scores[b * 16:(b + 1) * 16]
+            if blk_scores.size:
+                assert blk_scores.max() <= ub[b, q] + 1e-6
+
+
+def test_u8_quantization_conservative_per_token(rng):
+    corpus = make_corpus(rng, n_docs=100, n_vocab=40, max_len=20)
+    idx = build_index(corpus, 40, params=BM25Params())
+    f32 = build_block_max(idx, block_size=16, dtype="f32")
+    u8 = build_block_max(idx, block_size=16, dtype="u8")
+    assert u8.quantized and not f32.quantized
+    assert u8.scale.shape == (40,)                   # per-token scales
+    r32, r8 = f32.rows(np.arange(40)), u8.rows(np.arange(40))
+    assert (r8 >= r32 - 1e-7).all()                  # never under-bounds
+    # and stays tight: within one quantization step of the true max
+    step = np.where(u8.scale > 0, u8.scale, 1.0)[:, None]
+    assert (r8 <= r32 + step + 1e-7).all()
+    assert u8.host.nbytes * 4 <= f32.host.nbytes + 4
+
+
+def test_prune_fragment_plan_preserves_structure(rng):
+    corpus = make_corpus(rng, n_docs=120, n_vocab=40, max_len=25)
+    idx = build_index(corpus, 40, params=BM25Params())
+    uniq = np.unique(rng.integers(0, 40, size=8)).astype(np.int64)
+    fp = fragment_plan(idx, uniq, block_size=16, frag=8)
+    blocks = np.unique(fp.desc[3, :fp.n_frags])
+    keep = np.zeros(int(blocks.max()) + 1, dtype=bool)
+    keep[blocks[::2]] = True                         # drop every other block
+    pf = prune_fragment_plan(fp, keep)
+    d = pf.desc[:, :pf.n_frags]
+    assert set(np.unique(d[3])) == set(blocks[::2])
+    # survivors keep order and flags: equal to re-planning by block subset
+    ref = fp.desc[:, :fp.n_frags]
+    ref = ref[:, keep[ref[3]]]
+    np.testing.assert_array_equal(d, ref)
+    first = np.flatnonzero(d[4] == 1)
+    expect = np.flatnonzero(np.r_[True, d[3][1:] != d[3][:-1]])
+    np.testing.assert_array_equal(first, expect)
+    np.testing.assert_array_equal(pf.vis_blocks, fp.vis_blocks)  # UNPRUNED
+    # keep-none compacts to all-padding
+    none = prune_fragment_plan(fp, np.zeros_like(keep))
+    assert none.n_frags == 0 and (none.desc == 0).all()
+
+
+def test_compact_fragment_table_device_matches_host(rng):
+    from repro.sparse.fragment_device import compact_fragment_table
+    corpus = make_corpus(rng, n_docs=100, n_vocab=30, max_len=20)
+    idx = build_index(corpus, 30, params=BM25Params())
+    uniq = np.unique(rng.integers(0, 30, size=6)).astype(np.int64)
+    fp = fragment_plan(idx, uniq, block_size=16, frag=8)
+    blocks = np.unique(fp.desc[3, :fp.n_frags])
+    keep_blocks = np.zeros(int(blocks.max()) + 1, dtype=bool)
+    keep_blocks[blocks[1::2]] = True
+    host = prune_fragment_plan(fp, keep_blocks)
+    mask = np.zeros(fp.nf_pad, dtype=bool)
+    mask[:fp.n_frags] = keep_blocks[fp.desc[3, :fp.n_frags]]
+    dev, n = compact_fragment_table(jnp.asarray(fp.desc), jnp.asarray(mask))
+    assert int(n) == host.n_frags
+    np.testing.assert_array_equal(np.asarray(dev)[:, :host.n_frags],
+                                  host.desc[:, :host.n_frags])
+    assert (np.asarray(dev)[:, host.n_frags:] == 0).all()
+
+
+# -- core: the three-regime cost model ---------------------------------------
+
+def test_planner_prices_pruned_regime():
+    # without an estimate the two-regime decision is unchanged
+    assert plan_retrieval(100, 1000).regime == "gathered"
+    assert plan_retrieval(100, 150).regime == "blocked"
+    # a strong estimate wins over both
+    p = plan_retrieval(100, 1000, survivor_frac=0.1)
+    assert p.regime == "pruned" and p.survivor_frac == 0.1
+    # survivor_frac == PRUNE_DISCOUNT prices pruned == gathered: the
+    # existing regime wins ties
+    assert plan_retrieval(100, 1000,
+                          survivor_frac=PRUNE_DISCOUNT).regime == "gathered"
+    # pruned must also beat the full scan
+    assert plan_retrieval(100, 20, survivor_frac=0.5).regime == "blocked"
+    assert plan_retrieval(100, 20, survivor_frac=0.01).regime == "pruned"
+    # forced regime is recorded as such
+    p = plan_retrieval(100, 1000, regime="pruned")
+    assert p.regime == "pruned" and p.forced
+    with pytest.raises(ValueError):
+        plan_retrieval(1, 1, regime="wand")
+
+
+# -- engine: serving + incremental re-blocking on rescale ---------------------
+
+def test_engine_pruned_scorer_exact(rng):
+    corpus = make_skewed_corpus(rng, n_docs=120, n_vocab=40)
+    p = BM25Params(method="bm25+")
+    shards = build_sharded_indexes(corpus, 40, 3, params=p)
+    eng = RetrievalEngine(shards, k=5, deadline_s=30.0, scorer="pruned",
+                          scorer_opts=dict(**SMALL))
+    qs = [np.array([0], np.int32),
+          rng.integers(0, 40, size=4).astype(np.int32)]
+    rb = eng.retrieve_batch(qs)
+    assert rb.ids.shape == (2, 5) and not rb.degraded
+    for i, q in enumerate(qs):
+        oracle = dense_oracle_scores(corpus, 40, q, p)
+        _, ref_v = topk_numpy(oracle[None], 5)
+        np.testing.assert_allclose(rb.scores[i], ref_v[0], atol=1e-3)
+        np.testing.assert_allclose(oracle[rb.ids[i]], rb.scores[i],
+                                   atol=1e-3)
+
+
+def test_rescale_reuses_blockmax_through_empty_doc_boundary(rng):
+    """Boundary moves through posting-less docs: postings byte-identical,
+    doc range shifted — the runtime rebuilds but recycles the resident
+    layouts + block-max table with ZERO posting re-uploads."""
+    corpus = [rng.integers(0, 12, size=5).astype(np.int32)
+              for _ in range(12)]
+    corpus[4] = np.zeros(0, np.int32)
+    corpus[5] = np.zeros(0, np.int32)
+    shards = build_sharded_indexes(corpus, 12, 2, params=BM25Params())
+    eng = RetrievalEngine(shards, k=3, deadline_s=30.0, scorer="pruned",
+                          scorer_opts=dict(**SMALL))
+    # 2 shards of 6 -> 3 shards of 4: shard 0 keeps docs 0-3 and exactly
+    # its old postings (4, 5 were empty), so its rebuild is incremental
+    reset_transfer_stats()
+    eng.rescale(3)
+    assert eng.last_build_stats["blockmax_reused"] >= 1
+    reused_rt = eng.runtimes[0]._scorer.dindex.reused
+    assert reused_rt["bmax"] and reused_rt["csc"]
+    q = rng.integers(0, 12, size=3).astype(np.int32)
+    r = eng.retrieve(q)
+    oracle = dense_oracle_scores(corpus, 12, q, BM25Params())
+    _, ref_v = topk_numpy(oracle[None], 3)
+    np.testing.assert_allclose(np.sort(r.scores), np.sort(ref_v[0]),
+                               atol=1e-4)
+    np.testing.assert_allclose(oracle[r.ids], r.scores, atol=1e-4)
+
+
+def test_device_index_reuse_requires_identical_postings(rng):
+    corpus = make_corpus(rng, n_docs=40, n_vocab=20)
+    idx = build_index(corpus, 20, params=BM25Params())
+    di = DeviceIndex.build(idx, block_size=16, tile=16, frag=8)
+    di2 = DeviceIndex.build(idx, block_size=16, tile=16, frag=8,
+                            reuse_from=di)
+    assert di2.reused == {"csc": True, "blocked": True, "bmax": True}
+    assert di2.csc_doc_ids is di.csc_doc_ids
+    assert di2.bmax is di.bmax
+    other = build_index(corpus[:-1], 20, params=BM25Params())
+    di3 = DeviceIndex.build(other, block_size=16, tile=16, frag=8,
+                            reuse_from=di)
+    assert di3.reused == {"csc": False, "blocked": False, "bmax": False}
+    # mismatched grid parameters also rebuild
+    di4 = DeviceIndex.build(idx, block_size=32, tile=16, frag=8,
+                            reuse_from=di)
+    assert not di4.reused["bmax"]

@@ -69,3 +69,32 @@ def test_table2_ablation_axes():
             t = Tokenizer(stopwords=stop, stemmer=stem)
             ids = t.tokenize_ids("the quick brown foxes are jumping")
             assert ids.size > 0
+
+
+def test_vectorized_corpus_pass_equals_per_token_loop():
+    """The single-pass factorized tokenizer must reproduce the sequential
+    per-token path EXACTLY — same id streams, same vocabulary, same id
+    assignment order — across every (stopwords × stemmer) configuration,
+    and for frozen-vocab query batches too."""
+    import numpy as np
+    rng = np.random.default_rng(9)
+    words = ["cat", "cats", "running", "runs", "the", "and", "zebra",
+             "zebras", "quickly", "quick", "hat"]
+    docs = [" ".join(rng.choice(words, size=rng.integers(0, 12)))
+            for _ in range(60)]
+    docs[7] = ""                                     # empty document
+    for stop in ("english", None):
+        for stem in ("snowball", None):
+            t_loop = Tokenizer(stopwords=stop, stemmer=stem)
+            t_vec = Tokenizer(stopwords=stop, stemmer=stem)
+            a = t_loop._tokenize_corpus_loop(docs)
+            b = t_vec.tokenize_corpus(docs)
+            for x, y in zip(a, b):
+                np.testing.assert_array_equal(x, y)
+            assert t_loop.vocab.word_to_id == t_vec.vocab.word_to_id
+            qa = [t_loop.tokenize_ids(q, update_vocab=False)
+                  for q in docs[:10] + ["unseen zzz words"]]
+            qb = t_vec.tokenize_queries(docs[:10] + ["unseen zzz words"])
+            for x, y in zip(qa, qb):
+                np.testing.assert_array_equal(x, y)
+            assert t_vec.vocab.word_to_id == t_loop.vocab.word_to_id
