@@ -12,7 +12,11 @@ job when either:
 * any candidate cell ships nonzero steady-state bytes on a resident
   channel: posting bytes on the resident path, or posting/descriptor
   bytes under ``plan="device"`` — the residency invariants must hold at
-  EVERY scale the sweep touches, not just in tier-1's toy cells.
+  EVERY scale the sweep touches, not just in tier-1's toy cells, or
+* the candidate's fault-free degraded-mode cell reports
+  ``degradations_per_batch_healthy > 0`` — a healthy baseline that walks
+  the fallback ladder is a planner/capability bug being silently
+  absorbed, not fault tolerance working.
 
 Cells are matched on ``(n_docs, n_vocab, profile, batch, k)``; cells or
 columns present on only one side are reported as ``new``/``dropped`` but
@@ -71,6 +75,13 @@ RESIDENCY_COLS = (
 # hides it in noise. Fails when candidate < (1 - max drop) × baseline.
 SKIP_RATE_COL = "pruned_skip_rate"
 SKIP_RATE_MAX_DROP = 0.5
+
+# healthy-baseline ladder activity (PR-6): the planner sweep runs with no
+# fault injected, so ANY nonzero degradation rate means the entry regime
+# is failing in production-shaped traffic and the fallback ladder is
+# silently absorbing a real bug. Candidate-side only: old baselines
+# predate the column (schema drift tolerated, like every other column).
+DEGRADED_COL = "degradations_per_batch_healthy"
 
 
 def cell_key(cell: dict) -> tuple:
@@ -153,6 +164,21 @@ def compare(baseline: dict, candidate: dict, *, max_ratio: float = 1.25,
                 f"from the candidate — the skip-rate gate would be "
                 f"vacuous (keep the pruned sweep cells, or refresh the "
                 f"baseline in the PR that intentionally changes them)")
+    degraded = candidate.get("degraded") or {}
+    if DEGRADED_COL in degraded or DEGRADED_COL in candidate.get(
+            "summary", {}):
+        rate = float(degraded.get(DEGRADED_COL,
+                     candidate.get("summary", {}).get(DEGRADED_COL, 0.0)))
+        dkey = tuple(degraded.get(k) for k in CELL_KEY)
+        rows.append({"cell": dkey, "metric": DEGRADED_COL,
+                     "candidate_s": rate, "baseline_s": 0, "ratio": None,
+                     "status": "DEGRADED" if rate > 0 else "ok"})
+        if rate > 0:
+            failures.append(
+                f"{dkey}: {DEGRADED_COL}={rate} in a fault-free baseline "
+                f"run (must be 0) — the entry regime is failing and the "
+                f"fallback ladder is absorbing it (trail sample: "
+                f"{degraded.get('degraded_trail')})")
     if matched == 0 and had_base and not allow_empty_intersection:
         # zero comparable cells would make the latency gate pass
         # VACUOUSLY — the silent-disable path a sweep-grid change opens
@@ -172,7 +198,7 @@ def to_markdown(rows: list[dict], failures: list[str], *,
         f"Threshold: fail above {max_ratio:.2f}x per latency cell; any "
         "nonzero resident posting/descriptor bytes fails; a "
         f">{SKIP_RATE_MAX_DROP:.0%} pruned-skip-rate drop at a fixed "
-        "cell fails.",
+        "cell fails; any healthy-baseline ladder degradation fails.",
         "",
         "| cell (docs, vocab, profile, B, k) | metric | baseline | "
         "candidate | ratio | status |",
@@ -182,7 +208,7 @@ def to_markdown(rows: list[dict], failures: list[str], *,
         fmt = (lambda v: "-" if v is None
                else (f"{v:.4f}" if isinstance(v, float) else str(v)))
         status = r["status"]
-        if status in ("REGRESSED", "LEAK", "COLLAPSED"):
+        if status in ("REGRESSED", "LEAK", "COLLAPSED", "DEGRADED"):
             status = f"**{status}**"
         lines.append(
             f"| {r['cell']} | {r['metric']} | {fmt(r['baseline_s'])} | "

@@ -291,6 +291,98 @@ def bench_pruned_cell(n_docs: int, n_vocab: int, *, profile: str =
     }
 
 
+def bench_degraded_cell(n_docs: int, n_vocab: int, *, batch: int = 4,
+                        k: int = 10, block_size: int = 64,
+                        avg_len: int = 60, tile: int = 2048,
+                        repeats: int = 3, healthy_batches: int = 20
+                        ) -> dict:
+    """Degraded-mode column: what each ladder rung costs at one fixed cell.
+
+    Serves the SAME batch from retrievers whose ENTRY rung is each hop of
+    ``DeviceRetriever._LADDER`` (pruned / resident / host / blocked), then
+    measures one genuinely degraded batch — a deterministic residency
+    fault injected into the host gather, so the latency covers the failed
+    hop PLUS the fallback (here host → numpy oracle: the worst recovery
+    the ladder can take). Results stay exact on every row — degradation
+    trades latency, never scores.
+
+    Also reports ``degradations_per_batch_healthy``: the ladder-hop rate
+    of a fault-free auto retriever over ``healthy_batches`` batches. The
+    perf gate (``benchmarks.perf_gate``) fails on ANY nonzero value — a
+    healthy baseline that degrades is a planner/capability bug being
+    silently absorbed by the fallback machinery.
+    """
+    from repro.serve import DeviceRetriever, PrunedRetriever
+    from repro.serve.faults import inject_faults
+
+    corpus = zipf_corpus(n_docs, n_vocab, avg_len=avg_len)
+    idx = build_index(corpus, n_vocab, params=BM25Params())
+    rng = np.random.default_rng(3)
+    queries = _profile_queries(rng, "head_mixed", n_vocab, batch, q_len=5)
+
+    resident = DeviceRetriever(idx, regime="gathered", gather="resident",
+                               block_size=block_size, frag=512, tile=tile)
+    hops = {
+        "pruned": PrunedRetriever(idx, block_size=block_size, frag=512,
+                                  tile=tile, reuse_from=resident.dindex),
+        "resident": resident,
+        "host": DeviceRetriever(idx, regime="gathered", gather="host",
+                                tile=tile),
+        "blocked": DeviceRetriever(idx, regime="blocked", tile=tile,
+                                   reuse_from=resident.dindex),
+    }
+    times = {}
+    for name, dr in hops.items():
+        dr.retrieve_batch(queries, k)            # compile/warm
+        t = np.inf
+        for _ in range(repeats):
+            gc.collect()
+            gc.disable()
+            t0 = time.perf_counter()
+            dr.retrieve_batch(queries, k)
+            t = min(t, time.perf_counter() - t0)
+            gc.enable()
+        times[name] = t
+
+    # the last rung, measured as a REAL degraded batch: the host gather's
+    # upload fails once per batch, the ladder recovers via the oracle
+    host = hops["host"]
+    spec = {"site": "residency.put_posting_arrays", "kind": "residency",
+            "seed": 0}
+    t_degraded = np.inf
+    for _ in range(repeats):
+        gc.collect()
+        gc.disable()
+        with inject_faults(dict(spec, times=1)):
+            t0 = time.perf_counter()
+            host.retrieve_batch(queries, k)
+            t_degraded = min(t_degraded, time.perf_counter() - t0)
+        gc.enable()
+    trail = [f"{t['from']}->{t['to']}" for t in host.last_plan.degradations]
+
+    auto = DeviceRetriever(idx, regime="auto", gather="resident",
+                           block_size=block_size, frag=512, tile=tile,
+                           reuse_from=resident.dindex)
+    for _ in range(healthy_batches):
+        auto.retrieve_batch(queries, k)
+    h = auto.health()
+    per_batch = (h["batches_degraded"] / h["batches_served"]
+                 if h["batches_served"] else 0.0)
+
+    return {
+        "n_docs": n_docs, "n_vocab": n_vocab, "batch": batch, "k": k,
+        "profile": "head_mixed", "block_size": block_size,
+        "hop_pruned_batch_s": round(times["pruned"], 4),
+        "hop_resident_batch_s": round(times["resident"], 4),
+        "hop_host_batch_s": round(times["host"], 4),
+        "hop_blocked_batch_s": round(times["blocked"], 4),
+        "degraded_batch_s": round(t_degraded, 4),
+        "degraded_trail": trail,
+        "degradations_per_batch_healthy": round(per_batch, 6),
+        "healthy_batches_measured": int(h["batches_served"]),
+    }
+
+
 def run(*, fast: bool = False) -> dict:
     from repro.core.retrieval import DEFAULT_CROSSOVER
     if fast:
@@ -309,6 +401,12 @@ def run(*, fast: bool = False) -> dict:
     pruned_cells = [bench_pruned_cell(n, v, batch=b, k=k,
                                       repeats=3 if n >= 20_000 else 6)
                     for n, v, b, k in pruned_grid]
+    # one fixed cell for the ladder's degraded-mode column (PR-6): the
+    # biggest sweep point, where the hop-cost spread is widest
+    dn, dv = (3_000, 5_000) if fast else (50_000, 10_000)
+    degraded_cell = bench_degraded_cell(
+        dn, dv, repeats=3 if dn >= 20_000 else 6,
+        healthy_batches=10 if fast else 20)
 
     # implied crossover: the boundary between cells the full scan wins and
     # cells the gather wins, in work-ratio space (planner cells only — the
@@ -340,7 +438,12 @@ def run(*, fast: bool = False) -> dict:
     return {
         "cells": cells + pruned_cells,
         "pruned": {"cells": pruned_cells, "summary": pruned_summary},
+        "degraded": degraded_cell,
         "summary": {
+            # the perf gate fails on ANY nonzero value here: a fault-free
+            # baseline run has no business walking the ladder
+            "degradations_per_batch_healthy":
+                degraded_cell["degradations_per_batch_healthy"],
             "crossover_used": DEFAULT_CROSSOVER,
             "suggested_crossover": round(suggested, 2),
             # auto_batch_s = planned regime's measured latency + measured
@@ -388,6 +491,8 @@ def main() -> None:
         f"{k}={v}" for k, v in result["summary"].items()))
     print("bench4_summary," + ",".join(
         f"{k}={v}" for k, v in result["pruned"]["summary"].items()))
+    print("bench3_degraded," + ",".join(
+        f"{k}={v}" for k, v in result["degraded"].items()))
     with open(args.out, "w") as f:
         json.dump(result, f, indent=1)
     outs = [args.out]

@@ -4,7 +4,8 @@ from .index import BM25Index, CorpusStats, build_index, build_sharded_indexes, r
 from .reference import RankBM25Baseline, ScipyBM25, dense_oracle_scores
 from .retrieval import (RetrievalPlan, blockwise_topk, default_doc_ids,
                         merge_topk, merge_topk_batch, plan_retrieval,
-                        sharded_retrieve_adaptive, topk_jax, topk_numpy)
+                        sharded_retrieve_adaptive, topk_jax, topk_numpy,
+                        validate_query_batch)
 from .scoring import (DeviceIndex, batch_posting_budget, bucket_pow2,
                       pad_queries, score_batch, suggest_p_max)
 from .tokenizer import Tokenizer, Vocabulary
@@ -18,7 +19,7 @@ __all__ = [
     "default_doc_ids", "dense_oracle_scores", "get_variant", "merge_topk",
     "merge_topk_batch", "pad_queries", "plan_retrieval", "reshard_index",
     "score_batch", "sharded_retrieve_adaptive", "suggest_p_max", "topk_jax",
-    "topk_numpy",
+    "topk_numpy", "validate_query_batch",
 ]
 
 
@@ -48,7 +49,10 @@ class BM25Retriever:
     def retrieve(self, queries: list[str], k: int = 10, *,
                  q_max: int = 32, p_max: int | None = None):
         assert self._device_index is not None, "call .index() first"
-        q_tokens = self.tokenizer.tokenize_queries(queries)
+        self.query_counters: dict = getattr(self, "query_counters", {})
+        q_tokens = validate_query_batch(
+            self.tokenizer.tokenize_queries(queries),
+            self.bm25_index.n_vocab, counters=self.query_counters)
         toks, wts = pad_queries(q_tokens, q_max)
         if p_max is None:
             p_max = suggest_p_max(self.bm25_index, q_max)
@@ -58,9 +62,14 @@ class BM25Retriever:
         n_over = int(_np.asarray(overflow).sum())
         if n_over:
             import warnings
+
+            # TruncationWarning subclasses RuntimeWarning: pre-taxonomy
+            # filters keep matching, new callers can catch one base class
+            from repro.serve.errors import TruncationWarning
             warnings.warn(
                 f"{n_over}/{len(queries)} queries overflowed the posting "
                 f"budget p_max={p_max}; their scores miss postings — "
-                f"retry with a larger p_max", RuntimeWarning, stacklevel=2)
+                f"retry with a larger p_max", TruncationWarning,
+                stacklevel=2)
         idx, vals = topk_jax(scores, min(k, self.bm25_index.doc_lens.size))
         return idx, vals

@@ -149,8 +149,10 @@ def _corpus_coo(doc_tokens: Sequence[np.ndarray], n_vocab: int
     if lo < 0 or hi >= n_vocab:
         # the key encoding would silently wrap an out-of-range token into a
         # neighboring document's postings — fail loudly instead (the seed's
-        # per-doc path raised IndexError here).
-        raise ValueError(
+        # per-doc path raised IndexError here). InvalidQueryError inherits
+        # ValueError, so pre-taxonomy callers keep working.
+        from repro.serve.errors import InvalidQueryError
+        raise InvalidQueryError(
             f"token ids must be in [0, {n_vocab}); corpus has [{lo}, {hi}]")
     if n * n_vocab < 2 ** 31:
         flat_tok = flat.astype(np.int32, copy=False)

@@ -14,7 +14,7 @@ same code runs on 1 device (tests) and 512 chips (dry-run).
 
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from functools import partial
 
 import jax
@@ -78,6 +78,11 @@ class RetrievalPlan:
     count, ``frags_pruned`` how many the pre-launch threshold compaction
     removed, ``frags_skipped`` how many more the in-kernel scoreboard test
     skipped mid-launch.
+
+    ``degradations`` is the batch's fallback trail: one entry per ladder
+    hop the executing retriever was forced to take (empty on the healthy
+    path), each a dict ``{"from", "to", "error", "detail"}`` — see the
+    ROADMAP "Fault tolerance" section for the hop order.
     """
 
     regime: str             # "blocked" | "gathered" | "pruned"
@@ -91,6 +96,7 @@ class RetrievalPlan:
     frags_planned: int = 0
     frags_pruned: int = 0
     frags_skipped: int = 0
+    degradations: list = field(default_factory=list)
 
 
 def plan_retrieval(sum_df: int, nnz: int, *, regime: str = "auto",
@@ -152,6 +158,95 @@ def plan_retrieval(sum_df: int, nnz: int, *, regime: str = "auto",
                          work_ratio=float(ratio), crossover=c,
                          forced=forced, plan=plan,
                          survivor_frac=survivor_frac)
+
+
+def validate_query_batch(query_tokens, n_vocab: int, *,
+                         counters: dict | None = None,
+                         on_invalid: str = "sanitize") -> list[np.ndarray]:
+    """The ONE query sanitizer every retriever entry point shares.
+
+    Client batches arrive ragged and occasionally malformed; the kernels
+    downstream assume clean int32 token ids in ``[0, n_vocab)``. This
+    normalizes each entry to a 1-D int32 array, handling:
+
+    * ``None`` / empty entries        -> empty queries (scored as such);
+    * multi-dimensional arrays        -> raveled (``_pack_batch`` did this
+      silently already; now it is counted);
+    * float dtypes with integral data -> recast (dtype drift from JSON or
+      feature pipelines);
+    * non-integral floats / NaN       -> those tokens dropped;
+    * out-of-range / negative ids     -> those tokens dropped.
+
+    Every repair increments ``counters`` (keys ``dropped_tokens``,
+    ``recast_queries``, ``raveled_queries``, ``null_queries``) so engine
+    ``health()`` reports can expose a misbehaving client instead of
+    silently absorbing it. ``on_invalid="raise"`` surfaces
+    :class:`repro.serve.errors.InvalidQueryError` on the FIRST defect
+    instead of repairing (strict serving mode). Exactness: dropping a
+    token the index cannot score is the only behavior-preserving repair —
+    a valid token is never altered, so sanitized results equal the
+    results on the valid sub-batch exactly.
+    """
+    if on_invalid not in ("sanitize", "raise"):
+        raise ValueError(f"unknown on_invalid mode {on_invalid!r}")
+    c = counters if counters is not None else {}
+
+    def bump(key, n=1):
+        c[key] = c.get(key, 0) + n
+
+    def bad(msg):
+        from repro.serve.errors import InvalidQueryError
+        raise InvalidQueryError(msg)
+
+    out = []
+    for i, q in enumerate(query_tokens):
+        if q is None:
+            if on_invalid == "raise":
+                bad(f"query {i} is None")
+            bump("null_queries")
+            out.append(np.zeros(0, np.int32))
+            continue
+        a = np.asarray(q)
+        if a.ndim != 1:
+            if on_invalid == "raise" and a.ndim > 1:
+                bad(f"query {i} has shape {a.shape}; expected 1-D token ids")
+            if a.ndim > 1:
+                bump("raveled_queries")
+            a = a.ravel()
+        if a.dtype.kind == "f":
+            finite = np.isfinite(a)
+            integral = finite & (a == np.floor(a))
+            if not integral.all():
+                if on_invalid == "raise":
+                    bad(f"query {i} has non-integral or non-finite "
+                        f"token ids (dtype {a.dtype})")
+                bump("dropped_tokens", int((~integral).sum()))
+                a = a[integral]
+            if on_invalid == "raise" and a.dtype.kind == "f":
+                # integral float batches are recoverable drift, allowed
+                # even in strict mode — only lossy repairs raise
+                pass
+            bump("recast_queries")
+            a = a.astype(np.int64)
+        elif a.dtype.kind == "b":
+            bump("recast_queries")
+            a = a.astype(np.int64)
+        elif a.dtype.kind not in ("i", "u"):
+            if on_invalid == "raise":
+                bad(f"query {i} has non-numeric dtype {a.dtype}")
+            bump("dropped_tokens", int(a.size))
+            a = np.zeros(0, np.int64)
+        ok = (a >= 0) & (a < n_vocab)
+        if not ok.all():
+            if on_invalid == "raise":
+                lo = int(a.min()) if a.size else 0
+                hi = int(a.max()) if a.size else 0
+                bad(f"query {i} token ids must be in [0, {n_vocab}); "
+                    f"got range [{lo}, {hi}]")
+            bump("dropped_tokens", int((~ok).sum()))
+            a = a[ok]
+        out.append(a.astype(np.int32, copy=False))
+    return out
 
 
 def default_doc_ids(vis_blocks: np.ndarray, k: int, n_docs: int,
@@ -531,6 +626,12 @@ def sharded_retrieve_adaptive(mesh: Mesh, shard_axes: tuple[str, ...], *,
     bucket cannot overflow on the posting budget). Typical traffic settles
     into one bucket after warmup and never recompiles again.
 
+    The retry is CAPPED, not open-ended: if the overflow flag somehow
+    persists at the Σdf-covering bucket (which indicates a flag/metadata
+    bug, not legitimate demand), the wrapper raises
+    :class:`repro.serve.errors.PlanOverflowError` carrying the attempted
+    bucket trail instead of returning silently-truncated scores.
+
     Returns ``retrieve(idx_arrays, q_tokens, q_weights) ->
     (ids [B,k], scores [B,k], p_max_used)``.
     """
@@ -546,6 +647,7 @@ def sharded_retrieve_adaptive(mesh: Mesh, shard_axes: tuple[str, ...], *,
         # traffic above the floor must execute ONCE per call, not once per
         # smaller bucket (compilation caching alone doesn't buy that).
         p = min(state["p"], cap)
+        attempted = []
         while True:
             fn = cache.get(p)
             if fn is None:
@@ -554,9 +656,18 @@ def sharded_retrieve_adaptive(mesh: Mesh, shard_axes: tuple[str, ...], *,
                     n_docs_per_shard=n_docs_per_shard,
                     return_overflow=True, gathered=gathered)
             ids, vals, over = fn(idx_arrays, q_tokens, q_weights)
-            if p >= cap or not bool(np.any(np.asarray(over))):
+            attempted.append(p)
+            if not bool(np.any(np.asarray(over))):
                 state["p"] = p
                 return ids, vals, p
+            if p >= cap:
+                from repro.serve.errors import PlanOverflowError
+                raise PlanOverflowError(
+                    "posting-budget overflow persists at the Σdf-covering "
+                    f"bucket: attempted p_max buckets {attempted} "
+                    f"(cap {cap}, shard nnz_pad {nnz_pad}) — the overflow "
+                    "flag at the cap indicates corrupt index metadata, "
+                    "not query demand", attempted=attempted, cap=cap)
             p = min(p * 2, cap)
 
     return retrieve

@@ -167,15 +167,16 @@ def bm25_retrieve_resident(desc: jax.Array, weights: jax.Array,
 
 @functools.partial(
     jax.jit, static_argnames=("block_size", "frag", "k", "n_docs"))
-def bm25_retrieve_resident_pruned(desc: jax.Array, weights: jax.Array,
-                                  doc_ids_res: jax.Array,
-                                  scores_res: jax.Array, bounds: jax.Array,
-                                  def_ids: jax.Array,
-                                  nonocc_shift: jax.Array, *,
-                                  block_size: int, frag: int, k: int,
-                                  n_docs: int
-                                  ) -> tuple[jax.Array, jax.Array,
-                                             jax.Array]:
+def _bm25_retrieve_resident_pruned_jit(desc: jax.Array, weights: jax.Array,
+                                       doc_ids_res: jax.Array,
+                                       scores_res: jax.Array,
+                                       bounds: jax.Array,
+                                       def_ids: jax.Array,
+                                       nonocc_shift: jax.Array, *,
+                                       block_size: int, frag: int, k: int,
+                                       n_docs: int
+                                       ) -> tuple[jax.Array, jax.Array,
+                                                  jax.Array]:
     """Pruned-regime resident retrieval: (ids, scores, skipped) per batch.
 
     :func:`bm25_retrieve_resident` with the block-max skip: ``desc`` is the
@@ -196,6 +197,26 @@ def bm25_retrieve_resident_pruned(desc: jax.Array, weights: jax.Array,
     ids, mvals = splice_default_docs(vals.T, gids.T, None, kk, n_docs,
                                      default_ids=def_ids)
     return ids, mvals + nonocc_shift[:, None], skipped[0, 0]
+
+
+def bm25_retrieve_resident_pruned(*args, **kwargs):
+    """Host wrapper of :func:`_bm25_retrieve_resident_pruned_jit`.
+
+    Fault-injection site ``kernel.resident_pruned`` (repro.serve.faults):
+    an armed ``nan_board``/``inf_board`` fault poisons the returned
+    ``[B, k]`` score board — exactly the non-finite tile a broken kernel
+    launch would produce, caught downstream by the retriever's cheap
+    finite-check on the board (never the full score matrix). The hook
+    lives here, outside the jitted body, so the corruption is a host-side
+    transform and the compiled kernel stays byte-identical.
+    """
+    ids, mvals, skipped = _bm25_retrieve_resident_pruned_jit(
+        *args, **kwargs)
+    import sys
+    _f = sys.modules.get("repro.serve.faults")
+    if _f is not None and _f.ACTIVE:
+        mvals = _f.fire("kernel.resident_pruned", mvals)
+    return ids, mvals, skipped
 
 
 def segment_sum_blocked(values: jax.Array, segment_ids: jax.Array, *,

@@ -1,5 +1,8 @@
 """Serving stack: sharded retrieval engine with hedging, LM decode engine."""
 
+from .errors import (InvalidQueryError, PlanOverflowError, ResidencyError,
+                     RetrievalConfigError, RetrievalError,
+                     ScoreIntegrityError, TruncationWarning)
 from .retrieval_engine import (BlockedRetriever, DeviceRetriever,
                                GatheredRetriever, PrunedRetriever,
                                RetrievalEngine, ShardRuntime)
@@ -7,4 +10,6 @@ from .decode_engine import DecodeEngine
 
 __all__ = ["BlockedRetriever", "DeviceRetriever", "GatheredRetriever",
            "PrunedRetriever", "RetrievalEngine", "ShardRuntime",
-           "DecodeEngine"]
+           "DecodeEngine", "RetrievalError", "InvalidQueryError",
+           "PlanOverflowError", "ResidencyError", "ScoreIntegrityError",
+           "RetrievalConfigError", "TruncationWarning"]

@@ -1,0 +1,83 @@
+"""Typed error taxonomy for the serving stack.
+
+Every failure the serving API can surface derives from :class:`RetrievalError`
+so callers catch ONE base class instead of fishing bare ``ValueError``s out
+of the engine, the planners and the kernels. Each subclass also inherits the
+builtin exception it historically shadowed (``ValueError`` for query/config
+misuse, ``RuntimeError`` for runtime faults) so existing ``except ValueError``
+call sites keep working through the migration.
+
+The taxonomy maps one-to-one onto the graceful-degradation ladder in
+``serve.retrieval_engine.DeviceRetriever.retrieve_batch`` (see ROADMAP
+"Fault tolerance"): a typed failure in one regime triggers the hop to the
+next — every hop is an exact regime, so degradation never changes results,
+only cost.
+
+* :class:`InvalidQueryError`     — malformed client input (out-of-range or
+  negative token ids, non-integral dtypes, NaN) that ``on_invalid="raise"``
+  surfaces instead of sanitizing.
+* :class:`PlanOverflowError`     — an adaptive pow2 budget (posting bucket,
+  fragment-count bucket) exhausted its cap; carries the attempted bucket
+  sizes so the operator sees the regrowth trail.
+* :class:`ResidencyError`        — device-resident state is missing or an
+  upload failed (HBM pressure, a retriever built without the needed layout).
+* :class:`ScoreIntegrityError`   — the returned ``[B, k]`` score board
+  failed the cheap finite-check (NaN/Inf tiles from a bad kernel launch).
+* :class:`RetrievalConfigError`  — incompatible constructor arguments
+  (unknown regime/gather/plan modes and their invalid combinations).
+* :class:`TruncationWarning`     — results are exact over a truncated
+  posting set (budget overflow in the convenience API); a warning, not an
+  error, because callers asked for a fixed budget.
+"""
+
+from __future__ import annotations
+
+
+class RetrievalError(Exception):
+    """Base class for every typed serving failure."""
+
+
+class InvalidQueryError(RetrievalError, ValueError):
+    """Client query batch is malformed (bad token ids, dtype, or shape)."""
+
+
+class PlanOverflowError(RetrievalError, RuntimeError):
+    """An adaptive pow2 budget exhausted its cap without fitting the batch.
+
+    ``attempted`` records the bucket sizes tried (ascending), ``cap`` the
+    final bucket — both appear in ``str(exc)`` for operators.
+    """
+
+    def __init__(self, message: str, *, attempted: list[int] | None = None,
+                 cap: int | None = None):
+        super().__init__(message)
+        self.attempted = list(attempted or [])
+        self.cap = cap
+
+
+class ResidencyError(RetrievalError, RuntimeError, ValueError):
+    """Device-resident index state is missing or failed to upload.
+
+    Also inherits ``ValueError``: the raises it replaced (asking a
+    retriever built without a layout to use it) historically surfaced as
+    ``ValueError``, and existing callers catch that.
+    """
+
+
+class ScoreIntegrityError(RetrievalError, RuntimeError):
+    """The top-k score board contains non-finite entries."""
+
+
+class RetrievalConfigError(RetrievalError, ValueError):
+    """Incompatible or unknown retriever construction arguments."""
+
+
+class TruncationWarning(RuntimeWarning):
+    """Scores were computed over a truncated posting set (budget overflow)."""
+
+
+__all__ = [
+    "RetrievalError", "InvalidQueryError", "PlanOverflowError",
+    "ResidencyError", "ScoreIntegrityError", "RetrievalConfigError",
+    "TruncationWarning",
+]

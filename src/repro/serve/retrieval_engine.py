@@ -63,12 +63,20 @@ import numpy as np
 from ..core.index import BM25Index, reshard_index
 from ..core.reference import ScipyBM25
 from ..core.retrieval import merge_topk
+from .errors import (ResidencyError, RetrievalConfigError, RetrievalError,
+                     ScoreIntegrityError)
 
 
 def _empty_batch(n_queries: int):
     ids = np.zeros((n_queries, 0), dtype=np.int64)
     scores = np.zeros((n_queries, 0), dtype=np.float32)
     return ids, scores
+
+
+def _faults_module():
+    """The fault harness, if (and only if) something already imported it."""
+    import sys
+    return sys.modules.get("repro.serve.faults")
 
 
 class _DeviceRetrieverBase:
@@ -211,10 +219,13 @@ class DeviceRetriever(_DeviceRetrieverBase):
                  crossover: float | None = None, gather: str | None = None,
                  plan: str | None = None, double_buffer: bool = True,
                  host_arrays: str = "keep", run_cache: int = 256,
-                 bmax_dtype: str = "auto", reuse_from=None):
+                 bmax_dtype: str = "auto", reuse_from=None,
+                 on_fault: str = "degrade"):
         from ..sparse.block_csr import DeviceIndex, PostingRunCache
         if regime not in ("auto", "blocked", "gathered", "pruned"):
-            raise ValueError(f"unknown regime {regime!r}")
+            raise RetrievalConfigError(f"unknown regime {regime!r}")
+        if on_fault not in ("degrade", "raise"):
+            raise RetrievalConfigError(f"unknown on_fault mode {on_fault!r}")
         if gather is None:
             import jax
             # pruning is a resident-path concept (it gates fragment DMAs
@@ -223,27 +234,28 @@ class DeviceRetriever(_DeviceRetrieverBase):
             gather = ("resident" if regime == "pruned"
                       or jax.default_backend() == "tpu" else "host")
         if gather not in ("resident", "host"):
-            raise ValueError(f"unknown gather mode {gather!r}")
+            raise RetrievalConfigError(f"unknown gather mode {gather!r}")
         if regime == "pruned" and gather != "resident":
-            raise ValueError('regime="pruned" gates resident fragment DMAs '
-                             'against the block-max table — it requires '
-                             'gather="resident"')
+            raise RetrievalConfigError(
+                'regime="pruned" gates resident fragment DMAs against the '
+                'block-max table — it requires gather="resident"')
         if plan is None:
             import jax
             plan = ("device" if gather == "resident"
                     and jax.default_backend() == "tpu" else "host")
         if plan not in ("host", "device"):
-            raise ValueError(f"unknown plan mode {plan!r}")
+            raise RetrievalConfigError(f"unknown plan mode {plan!r}")
         if plan == "device" and gather != "resident":
-            raise ValueError('plan="device" builds fragment tables from '
-                             'the resident CSC arrays — it requires '
-                             'gather="resident"')
+            raise RetrievalConfigError(
+                'plan="device" builds fragment tables from the resident '
+                'CSC arrays — it requires gather="resident"')
         if host_arrays not in ("keep", "drop"):
-            raise ValueError(f"unknown host_arrays mode {host_arrays!r}")
+            raise RetrievalConfigError(
+                f"unknown host_arrays mode {host_arrays!r}")
         if host_arrays == "drop" and plan != "device":
-            raise ValueError('host_arrays="drop" removes the arrays the '
-                             'host fragment planner reads — it requires '
-                             'plan="device"')
+            raise RetrievalConfigError(
+                'host_arrays="drop" removes the arrays the host fragment '
+                'planner reads — it requires plan="device"')
         self.index = index
         self.regime = regime
         self.gather_mode = gather
@@ -267,6 +279,15 @@ class DeviceRetriever(_DeviceRetrieverBase):
             bmax_dtype=bmax_dtype,
             host_arrays=host_arrays, reuse_from=reuse_from)
         self._nf_state = {}                      # steady-state nf bucket
+        self.on_fault = on_fault
+        # observability: ladder + sanitizer counters feeding engine health()
+        self.fault_counters: dict[str, int] = {}
+        self.query_counters: dict[str, int] = {}
+        self.degradation_counts: dict[str, int] = {}
+        self.batches_served = 0
+        self.batches_degraded = 0
+        self.last_queries: list[np.ndarray] = []
+        self._oracle = None                      # lazy ScipyBM25 (last rung)
         if host_arrays == "drop":
             # serving now reads only metadata: release the O(nnz) host
             # posting copy (a private stripped view — the caller's index
@@ -293,33 +314,97 @@ class DeviceRetriever(_DeviceRetrieverBase):
             # never enter
             self.retrieve_batch([q], kk, regime="pruned")
 
+    def health(self) -> dict:
+        """This retriever's ladder/fault/sanitizer counters (see
+        :meth:`RetrievalEngine.health` for the engine-level aggregate)."""
+        return {
+            "batches_served": self.batches_served,
+            "batches_degraded": self.batches_degraded,
+            "degradations": dict(self.degradation_counts),
+            "faults": dict(self.fault_counters),
+            "queries": dict(self.query_counters),
+        }
+
+    # -- the graceful-degradation ladder ---------------------------------
+    #
+    # Five rungs, all EXACT: pruned -> gathered-resident -> host-gather ->
+    # blocked full-scan -> numpy ScipyBM25 oracle. A typed RetrievalError
+    # in one rung triggers the hop to the next AVAILABLE rung (capability
+    # depends on the layouts this retriever was built with); results never
+    # change across hops — only the cost — so degradation preserves the
+    # paper's exactness guarantee by construction. The trail is recorded
+    # in ``last_plan.degradations`` and aggregated into the counters the
+    # engine-level ``health()`` report exposes.
+
+    _LADDER = ("pruned", "resident", "host", "blocked", "oracle")
+
+    def _host_postings_intact(self) -> bool:
+        """False once ``host_arrays="drop"`` released the host copy."""
+        return int(self.index.doc_ids.size) == int(self.index.indptr[-1])
+
+    def _hop_available(self, hop: str, kk: int) -> bool:
+        """Can this rung run with the layouts this retriever holds?"""
+        if hop == "pruned":
+            return (self.gather_mode == "resident"
+                    and self.dindex.bmax is not None
+                    and self.dindex.csc_doc_ids is not None
+                    and kk <= self.dindex.block_size)
+        if hop == "resident":
+            return self.dindex.csc_doc_ids is not None and (
+                self.plan_mode == "device" or self._host_postings_intact())
+        if hop in ("host", "oracle"):
+            return self._host_postings_intact()
+        if hop == "blocked":
+            return self.dindex.blk_tok is not None
+        return False
+
     def retrieve_batch(self, query_tokens: Sequence[np.ndarray], k: int,
                        *, regime: str | None = None
                        ) -> tuple[np.ndarray, np.ndarray]:
         """B queries -> (ids [B, k], scores [B, k]), one launch per batch.
 
         ``regime`` overrides this call's plan (used by warmup and the
-        benchmark sweep); normal traffic leaves it None and lets the cost
-        model decide.
+        benchmark sweep) and makes the call STRICT — a typed failure
+        surfaces instead of degrading (a forced regime that cannot run is
+        an operator error, not traffic to absorb). Normal traffic leaves
+        it None: the cost model picks the entry rung and any typed
+        failure walks the exact fallback ladder (see class docstring and
+        ROADMAP "Fault tolerance"), recording each hop in
+        ``last_plan.degradations``. ``on_fault="raise"`` (constructor)
+        makes every call strict. Every returned board passes a cheap
+        ``[B, k]`` finite-check; a NaN/Inf tile is a
+        :class:`~repro.serve.errors.ScoreIntegrityError` — degraded
+        around like any other fault.
         """
-        import jax.numpy as jnp
+        import contextlib
 
-        from ..core.retrieval import default_doc_ids, plan_retrieval
-        from ..core.scoring import bucket_pow2
-        from ..kernels import ops
-        from ..sparse.block_csr import (fragment_plan, gather_posting_runs,
-                                        put_descriptor_array,
-                                        put_posting_arrays)
+        from ..core.retrieval import plan_retrieval, validate_query_batch
+
+        strict = regime is not None or self.on_fault == "raise"
+        _f = _faults_module()
+        # guarded faults target RECOVERABLE scopes only: a strict call
+        # re-raises instead of degrading, so it never enters the guard —
+        # chaos mode (guarded specs armed globally) cannot crash warmup's
+        # forced-regime calls or an ``on_fault="raise"`` deployment. Test
+        # strict surfacing with ``guarded=False`` specs.
+        guard = (_f.guard if _f is not None and not strict
+                 else contextlib.nullcontext)
+        if _f is not None and _f.ACTIVE:
+            with guard():
+                query_tokens = _f.fire("query.batch", list(query_tokens),
+                                       n_vocab=self.index.n_vocab)
+        qs = validate_query_batch(
+            query_tokens, self.index.n_vocab,
+            counters=self.query_counters,
+            on_invalid="raise" if self.on_fault == "raise" else "sanitize")
+        self.last_queries = qs
         if self.n_docs == 0 or k <= 0:           # empty shard post-rescale
-            return _empty_batch(len(query_tokens))
-        b, uniq_batch, uniq_tab, weights, shift = \
-            self._pack_batch(query_tokens)
+            return _empty_batch(len(qs))
+        b, uniq_batch, uniq_tab, weights, shift = self._pack_batch(qs)
         kk = min(k, self.n_docs)
         # the pruned regime needs the block-max table and an accumulator
         # window matching its block grid (k can outgrow the block height)
-        prune_ok = (self.gather_mode == "resident"
-                    and self.dindex.bmax is not None
-                    and kk <= self.dindex.block_size)
+        prune_ok = self._hop_available("pruned", kk)
         want = regime or self.regime
         survivor_frac, prune_ub = None, None
         # the host estimate feeds the auto cost model and (under host
@@ -336,20 +421,15 @@ class DeviceRetriever(_DeviceRetrieverBase):
                               crossover=self.crossover, plan=self.plan_mode,
                               survivor_frac=survivor_frac)
         self.last_plan = plan
-        if plan.regime == "pruned":
+        if plan.regime == "pruned" and not prune_ok:
             if self.gather_mode != "resident":
-                raise ValueError('regime="pruned" requires '
-                                 'gather="resident"')
+                raise RetrievalConfigError('regime="pruned" requires '
+                                           'gather="resident"')
             if self.dindex.csc_doc_ids is None or self.dindex.bmax is None:
-                raise ValueError("pruned regime requested but this "
-                                 "retriever was built without the "
-                                 "resident CSC index + block-max table")
-            if kk <= self.dindex.block_size:
-                ids, vals = self._retrieve_pruned(uniq_batch, uniq_tab,
-                                                  weights, shift, kk, plan,
-                                                  b_true=b, ub=prune_ub)
-                return (np.asarray(ids[:b]).astype(np.int64)
-                        + self.index.doc_offset, np.asarray(vals[:b]))
+                raise ResidencyError("pruned regime requested but this "
+                                     "retriever was built without the "
+                                     "resident CSC index + block-max "
+                                     "table")
             # k outgrew the block-max grid (degenerate: the scoreboard
             # spans whole blocks, nothing can prune) — run the exact
             # unpruned resident path under the pruned label
@@ -358,61 +438,177 @@ class DeviceRetriever(_DeviceRetrieverBase):
                                   plan=self.plan_mode)
             plan.regime, plan.forced = "pruned", True
             self.last_plan = plan
-        if plan.regime == "blocked":
-            if self.dindex.blk_tok is None:
-                raise ValueError("blocked regime requested but this "
-                                 "retriever was built gathered-only")
-            ids, vals = ops.bm25_retrieve_blocked(
-                self.dindex.blk_tok, self.dindex.blk_loc,
-                self.dindex.blk_sc, jnp.asarray(uniq_tab),
-                jnp.asarray(weights), jnp.asarray(shift),
-                block_size=self.dindex.block_size, n_docs=self.n_docs,
-                k=kk, tile_p=self.dindex.tile_p)
-        elif self.gather_mode == "resident":
-            if self.dindex.csc_doc_ids is None:
-                raise ValueError("resident gather requested but this "
-                                 "retriever was built blocked-only")
-            # accumulator window grows only if k outruns it (the shard
-            # scoreboard needs k ≤ block height); fragment count buckets
-            # inside the planners
-            rblock = bucket_pow2(kk, floor=self.block_size)
-            if self.plan_mode == "device":
-                # fragment table + default ids born ON device from the
-                # resident CSC arrays — no host CSC read, no descriptor
-                # upload (the tier-1 zero-descriptor-bytes invariant)
-                from ..sparse.fragment_device import plan_fragments_device
-                desc, dids, _nf = plan_fragments_device(
-                    self.dindex, uniq_tab, sum_df=plan.sum_df, k=kk,
-                    block_size=rblock, state=self._nf_state)
-            else:
-                fp = fragment_plan(self.index, uniq_batch,
-                                   block_size=rblock, frag=self.dindex.frag)
-                dids = jnp.asarray(default_doc_ids(fp.vis_blocks, kk,
-                                                   self.n_docs, rblock))
-                desc = put_descriptor_array(fp.desc)
-            ids, vals = ops.bm25_retrieve_resident(
-                desc, jnp.asarray(weights),
-                self.dindex.csc_doc_ids, self.dindex.csc_scores,
-                dids, jnp.asarray(shift), block_size=rblock,
-                frag=self.dindex.frag, k=kk, n_docs=self.n_docs,
-                double_buffer=self.double_buffer)
+            entry = "resident"
+        elif plan.regime == "pruned":
+            entry = "pruned"
+        elif plan.regime == "blocked":
+            entry = "blocked"
         else:
-            # host-gather fallback: chunk height grows only if k outruns
-            # it; posting/chunk dims bucket inside the gather. The uploads
-            # below are the per-batch posting copies the resident path
-            # eliminates — routed through the counting helper on purpose.
-            acc_block = bucket_pow2(kk, floor=self.acc_block)
-            gp = gather_posting_runs(self.index, uniq_batch,
-                                     acc_block=acc_block, tile=self.tile,
-                                     cache=self.run_cache)
-            tok, slot, sc, cand = put_posting_arrays(
-                gp.token_ids, gp.slot_ids, gp.scores, gp.candidates)
-            ids, vals = ops.bm25_retrieve_gathered(
-                tok, slot, sc, jnp.asarray(uniq_tab), jnp.asarray(weights),
-                cand, jnp.asarray(shift), acc_block=gp.acc_block, k=kk,
-                n_docs=self.n_docs, tile_p=min(self.tile, gp.p_pad))
-        return (np.asarray(ids[:b]).astype(np.int64) + self.index.doc_offset,
-                np.asarray(vals[:b]))
+            entry = "resident" if self.gather_mode == "resident" else "host"
+
+        trail = plan.degradations
+        hops = ((entry,) if strict
+                else self._LADDER[self._LADDER.index(entry):])
+        last_err = None
+        self.batches_served += 1
+        for hop in hops:
+            if hop != entry and not self._hop_available(hop, kk):
+                continue
+            if trail and trail[-1]["to"] is None:
+                trail[-1]["to"] = hop
+            try:
+                with guard():
+                    ids, vals = self._exec_hop(
+                        hop, qs, b, uniq_batch, uniq_tab, weights, shift,
+                        kk, plan, prune_ub)
+                board = np.asarray(vals)[:b].astype(np.float32, copy=False)
+                # cheap integrity gate on the [B, k] board — NOT the full
+                # score matrix (which never materializes on these paths)
+                if not np.isfinite(board).all():
+                    raise ScoreIntegrityError(
+                        f"non-finite entries in the [{b}, {kk}] score "
+                        f"board returned by the {hop!r} hop")
+            except RetrievalError as e:
+                name = type(e).__name__
+                self.fault_counters[name] = \
+                    self.fault_counters.get(name, 0) + 1
+                if strict:
+                    raise
+                trail.append({"from": hop, "to": None, "error": name,
+                              "detail": str(e)})
+                last_err = e
+                continue
+            if trail:
+                self.batches_degraded += 1
+                for t in trail:
+                    key = f"{t['from']}->{t['to']}"
+                    self.degradation_counts[key] = \
+                        self.degradation_counts.get(key, 0) + 1
+            return (np.asarray(ids)[:b].astype(np.int64)
+                    + self.index.doc_offset, board)
+        raise RetrievalError(
+            f"every ladder hop failed or is unavailable (entry "
+            f"{entry!r}, degradations {trail!r})") from last_err
+
+    def _exec_hop(self, hop, qs, b, uniq_batch, uniq_tab, weights, shift,
+                  kk, plan, prune_ub):
+        if hop == "pruned":
+            return self._retrieve_pruned(uniq_batch, uniq_tab, weights,
+                                         shift, kk, plan, b_true=b,
+                                         ub=prune_ub)
+        if hop == "resident":
+            return self._exec_resident(uniq_batch, uniq_tab, weights,
+                                       shift, kk, plan)
+        if hop == "host":
+            return self._exec_host(uniq_batch, uniq_tab, weights, shift,
+                                   kk)
+        if hop == "blocked":
+            return self._exec_blocked(uniq_tab, weights, shift, kk)
+        if hop == "oracle":
+            return self._exec_oracle(qs, kk)
+        raise AssertionError(f"unknown ladder hop {hop!r}")
+
+    def _exec_blocked(self, uniq_tab, weights, shift, kk):
+        import jax.numpy as jnp
+
+        from ..kernels import ops
+        if self.dindex.blk_tok is None:
+            raise ResidencyError("blocked regime requested but this "
+                                 "retriever was built gathered-only")
+        return ops.bm25_retrieve_blocked(
+            self.dindex.blk_tok, self.dindex.blk_loc, self.dindex.blk_sc,
+            jnp.asarray(uniq_tab), jnp.asarray(weights),
+            jnp.asarray(shift), block_size=self.dindex.block_size,
+            n_docs=self.n_docs, k=kk, tile_p=self.dindex.tile_p)
+
+    def _exec_resident(self, uniq_batch, uniq_tab, weights, shift, kk,
+                       plan):
+        import jax.numpy as jnp
+
+        from ..core.retrieval import default_doc_ids
+        from ..core.scoring import bucket_pow2
+        from ..kernels import ops
+        from ..sparse.block_csr import fragment_plan, put_descriptor_array
+        if self.dindex.csc_doc_ids is None:
+            raise ResidencyError("resident gather requested but this "
+                                 "retriever was built blocked-only")
+        # accumulator window grows only if k outruns it (the shard
+        # scoreboard needs k ≤ block height); fragment count buckets
+        # inside the planners
+        rblock = bucket_pow2(kk, floor=self.block_size)
+        if self.plan_mode == "device":
+            # fragment table + default ids born ON device from the
+            # resident CSC arrays — no host CSC read, no descriptor
+            # upload (the tier-1 zero-descriptor-bytes invariant)
+            from ..sparse.fragment_device import plan_fragments_device
+            desc, dids, _nf = plan_fragments_device(
+                self.dindex, uniq_tab, sum_df=plan.sum_df, k=kk,
+                block_size=rblock, state=self._nf_state)
+        else:
+            if not self._host_postings_intact():
+                raise ResidencyError('plan="host" fragment planning needs '
+                                     'the host posting arrays')
+            fp = fragment_plan(self.index, uniq_batch, block_size=rblock,
+                               frag=self.dindex.frag)
+            dids = jnp.asarray(default_doc_ids(fp.vis_blocks, kk,
+                                               self.n_docs, rblock))
+            desc = put_descriptor_array(fp.desc)
+        return ops.bm25_retrieve_resident(
+            desc, jnp.asarray(weights),
+            self.dindex.csc_doc_ids, self.dindex.csc_scores,
+            dids, jnp.asarray(shift), block_size=rblock,
+            frag=self.dindex.frag, k=kk, n_docs=self.n_docs,
+            double_buffer=self.double_buffer)
+
+    def _exec_host(self, uniq_batch, uniq_tab, weights, shift, kk):
+        import jax.numpy as jnp
+
+        from ..core.scoring import bucket_pow2
+        from ..kernels import ops
+        from ..sparse.block_csr import (gather_posting_runs,
+                                        put_posting_arrays)
+        if not self._host_postings_intact():
+            raise ResidencyError("host gather needs the host posting "
+                                 'arrays, which host_arrays="drop" '
+                                 "released")
+        # host-gather: chunk height grows only if k outruns it; posting/
+        # chunk dims bucket inside the gather. The uploads below are the
+        # per-batch posting copies the resident path eliminates — routed
+        # through the counting helper on purpose.
+        acc_block = bucket_pow2(kk, floor=self.acc_block)
+        gp = gather_posting_runs(self.index, uniq_batch,
+                                 acc_block=acc_block, tile=self.tile,
+                                 cache=self.run_cache)
+        tok, slot, sc, cand = put_posting_arrays(
+            gp.token_ids, gp.slot_ids, gp.scores, gp.candidates)
+        return ops.bm25_retrieve_gathered(
+            tok, slot, sc, jnp.asarray(uniq_tab), jnp.asarray(weights),
+            cand, jnp.asarray(shift), acc_block=gp.acc_block, k=kk,
+            n_docs=self.n_docs, tile_p=min(self.tile, gp.p_pad))
+
+    def _exec_oracle(self, qs, kk):
+        """Terminal rung: the paper-faithful numpy/scipy scorer.
+
+        Host-side and slow, but it cannot fail for device reasons — the
+        ladder's floor. Exact by definition: it IS the reference the
+        device regimes are tested against. Ids come back shard-local
+        (the caller adds ``doc_offset``, same as every other hop).
+        """
+        if not self._host_postings_intact():
+            raise ResidencyError('oracle fallback needs the host posting '
+                                 'arrays, which host_arrays="drop" '
+                                 "released")
+        from ..core.retrieval import topk_numpy
+        if self._oracle is None:
+            self._oracle = ScipyBM25(self.index)
+        b = len(qs)
+        ids = np.zeros((b, kk), np.int64)
+        vals = np.zeros((b, kk), np.float32)
+        for i, q in enumerate(qs):
+            s = self._oracle.score(q)
+            idx, v = topk_numpy(s[None], kk)
+            ids[i], vals[i] = idx[0], v[0]
+        return ids, vals
 
     def _retrieve_pruned(self, uniq_batch, uniq_tab, weights, shift, kk,
                          plan, *, b_true, ub=None):
@@ -570,9 +766,22 @@ class ShardRuntime:
 
     def __post_init__(self):
         if self.scorer not in _SCORERS:
-            raise ValueError(f"unknown scorer {self.scorer!r}; "
-                             f"available: {sorted(_SCORERS)}")
+            raise RetrievalConfigError(f"unknown scorer {self.scorer!r}; "
+                                       f"available: {sorted(_SCORERS)}")
         self._scorer = _SCORERS[self.scorer](self.index, **self.scorer_opts)
+
+    def health(self) -> dict:
+        """This shard's fault/degradation/sanitizer counters (device
+        scorers; the scipy reference scorer has none)."""
+        sc = self._scorer
+        return {
+            "scorer": self.scorer,
+            "batches_served": getattr(sc, "batches_served", 0),
+            "batches_degraded": getattr(sc, "batches_degraded", 0),
+            "degradations": dict(getattr(sc, "degradation_counts", {})),
+            "faults": dict(getattr(sc, "fault_counters", {})),
+            "queries": dict(getattr(sc, "query_counters", {})),
+        }
 
     def warmup(self, k: int) -> None:
         """Pre-compile the device scorer so query #1 skips compilation."""
@@ -643,6 +852,9 @@ class RetrievalEngine:
         self.warmup = warmup
         self._delay_factory = delay
         self._pool = ThreadPoolExecutor(max_workers=max_workers)
+        self.query_counters: dict[str, int] = {}
+        self._responses = 0
+        self._degraded_responses = 0
         self._build_runtimes(list(shards))
 
     def _build_runtimes(self, shards: list[BM25Index]) -> None:
@@ -712,6 +924,28 @@ class RetrievalEngine:
         """Elastic re-shard (device pool grew or shrank)."""
         self._build_runtimes(reshard_index(self.shards, n_shards))
 
+    def health(self) -> dict:
+        """One operational snapshot of the engine's fault surface.
+
+        Fields (see ROADMAP "Fault tolerance"):
+
+        * ``responses`` / ``degraded_responses`` — scatter-gather rounds
+          served, and how many missed shards (quorum+deadline hedging);
+        * ``queries`` — engine-level sanitizer counters (clamped/dropped
+          tokens from malformed client batches);
+        * ``build`` — the last ``_build_runtimes`` reuse split;
+        * ``shards`` — per-shard :meth:`ShardRuntime.health`: ladder
+          degradation counts keyed ``"from->to"``, typed-fault counts
+          keyed by error class, and the shard's own sanitizer counters.
+        """
+        return {
+            "responses": self._responses,
+            "degraded_responses": self._degraded_responses,
+            "queries": dict(self.query_counters),
+            "build": dict(self.last_build_stats),
+            "shards": [rt.health() for rt in self.runtimes],
+        }
+
     # -- data plane ----------------------------------------------------------
     def _scatter_gather(self, submit, merge, k: int):
         """Shared hedged scatter-gather: quorum + deadline + merge."""
@@ -735,14 +969,25 @@ class RetrievalEngine:
         for f in pending:                 # backfill continues off-path
             f.cancel()
         ids, scores = merge(done.values(), k)
+        degraded = len(done) < len(self.runtimes)
+        self._responses += 1
+        self._degraded_responses += int(degraded)
         return RetrievalResult(
-            ids=ids, scores=scores,
-            degraded=len(done) < len(self.runtimes),
+            ids=ids, scores=scores, degraded=degraded,
             shards_answered=len(done), latency_s=time.time() - t0)
+
+    def _sanitize(self, query_batch):
+        """Engine-boundary pass of the shared sanitizer — covers scipy
+        runtimes (which have no device-scorer validation of their own)."""
+        from ..core.retrieval import validate_query_batch
+        n_vocab = self.shards[0].n_vocab if self.shards else 0
+        return validate_query_batch(query_batch, n_vocab,
+                                    counters=self.query_counters)
 
     def retrieve(self, query_tokens: np.ndarray, *, k: int | None = None
                  ) -> RetrievalResult:
         k = k or self.k
+        query_tokens = self._sanitize([query_tokens])[0]
         return self._scatter_gather(
             lambda rt: self._pool.submit(rt.topk, query_tokens, k),
             self._merge, k)
@@ -758,7 +1003,7 @@ class RetrievalEngine:
         :class:`RetrievalResult` with ``ids``/``scores`` of shape [B, k].
         """
         k = k or self.k
-        query_batch = [np.asarray(q) for q in query_batch]
+        query_batch = self._sanitize(query_batch)
         return self._scatter_gather(
             lambda rt: self._pool.submit(rt.topk_batch, query_batch, k),
             self._merge_batch, k)

@@ -62,7 +62,16 @@ def put_posting_arrays(*arrays):
     and rescales call it once per (re)built shard; the host-gather fallback
     calls it per batch (which is exactly what the counters expose). Returns
     the device arrays in input order.
+
+    Fault-injection site ``residency.put_posting_arrays`` (see
+    ``repro.serve.faults``): an armed residency fault makes the upload
+    raise ``ResidencyError`` — the peek costs nothing unless the harness
+    module is already imported AND a fault is armed.
     """
+    import sys
+    _f = sys.modules.get("repro.serve.faults")
+    if _f is not None and _f.ACTIVE:
+        _f.fire("residency.put_posting_arrays")
     import jax.numpy as jnp
     out = []
     for a in arrays:

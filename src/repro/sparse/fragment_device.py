@@ -193,8 +193,16 @@ def plan_fragments_device(dindex, uniq_tab, *, sum_df: int, k: int,
     nf_bucket_used)``.
     """
     if dindex.csc_indptr is None or dindex.csc_doc_ids is None:
-        raise ValueError("device fragment planning needs a resident CSC "
-                         "index (DeviceIndex built with with_csc=True)")
+        from repro.serve.errors import ResidencyError
+        raise ResidencyError("device fragment planning needs a resident "
+                             "CSC index (DeviceIndex built with "
+                             "with_csc=True)")
+    # fault-injection site ``plan.fragments_device`` (repro.serve.faults):
+    # an armed overflow fault simulates nf-bucket regrowth exhaustion
+    import sys
+    _f = sys.modules.get("repro.serve.faults")
+    if _f is not None and _f.ACTIVE:
+        _f.fire("plan.fragments_device")
     block_size = block_size or dindex.block_size
     frag = dindex.frag
     uniq_dev = jnp.asarray(np.asarray(uniq_tab, dtype=np.int32))

@@ -2,6 +2,9 @@
 set ONLY inside launch/dryrun.py); multi-device tests spawn subprocesses or
 use mesh-of-one."""
 
+import os
+import zlib
+
 import numpy as np
 import pytest
 
@@ -26,6 +29,78 @@ except ImportError:                                   # pragma: no cover
 
     def settings(*a, **k):
         return lambda f: f
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--chaos", action="store_true", default=False,
+        help="arm one deterministic guarded fault per test module "
+             "(seed from $CHAOS_SEED; exact-recovery fault kinds only, so "
+             "every test must STILL pass — that is the ladder's contract)")
+
+
+def pytest_configure(config):
+    config.addinivalue_line(
+        "markers",
+        "no_chaos: exempt from --chaos fault arming (module arms its own "
+        "faults, or asserts transfer/plan counters that a ladder hop "
+        "legitimately changes)")
+
+
+# The chaos pool holds ONLY faults the degradation ladder recovers from
+# exactly (residency / overflow / poisoned boards). query.* corruption is
+# excluded on purpose: the sanitizer's repair drops the corrupted token,
+# which CHANGES the correct answer — that family is covered explicitly in
+# tests/test_faults.py instead.
+_CHAOS_POOL = (
+    ("residency.put_posting_arrays", "residency"),
+    ("plan.fragments_device", "overflow"),
+    ("kernel.resident_pruned", "nan_board"),
+    ("kernel.resident_pruned", "inf_board"),
+)
+_chaos_specs: dict = {}      # module name -> its one armed FaultSpec
+
+
+@pytest.fixture(autouse=True)
+def _chaos(request):
+    """--chaos mode: one guarded, times=1 fault per test module.
+
+    The spec is shared across the module's tests, so the fault fires at
+    most once per module — in whichever test first walks a retriever
+    ladder. Guarded specs cannot touch code outside a ladder scope, so
+    index construction and pure-host tests are unaffected. Deterministic:
+    the (site, kind) choice hashes ($CHAOS_SEED, module name).
+    """
+    if not request.config.getoption("--chaos") \
+            or request.node.get_closest_marker("no_chaos"):
+        yield
+        return
+    from repro.serve.faults import ACTIVE, FaultSpec
+    mod = request.node.module.__name__
+    spec = _chaos_specs.get(mod)
+    if spec is None:
+        seed = int(os.environ.get("CHAOS_SEED", "0"))
+        pick = zlib.crc32(f"{seed}:{mod}".encode()) % len(_CHAOS_POOL)
+        site, kind = _CHAOS_POOL[pick]
+        spec = _chaos_specs[mod] = FaultSpec(
+            site=site, kind=kind, times=1, seed=seed, guarded=True)
+    ACTIVE.append(spec)
+    try:
+        yield
+    finally:
+        ACTIVE.remove(spec)
+
+
+def pytest_terminal_summary(terminalreporter, exitstatus, config):
+    if not config.getoption("--chaos"):
+        return
+    seed = os.environ.get("CHAOS_SEED", "0")
+    terminalreporter.section("chaos")
+    terminalreporter.write_line(f"CHAOS_SEED={seed}")
+    for mod, spec in sorted(_chaos_specs.items()):
+        state = f"fired {spec.fired}x" if spec.fired else "never fired"
+        terminalreporter.write_line(
+            f"  {mod}: {spec.site}/{spec.kind} ({state})")
 
 
 @pytest.fixture

@@ -33,6 +33,10 @@ from repro.sparse.block_csr import (TRANSFERS, DeviceIndex, bucket_pow2,
 from repro.sparse.fragment_device import (build_fragment_table,
                                           plan_fragments_device)
 
+# transfer/plan counters asserted here change legitimately when a
+# chaos fault forces a ladder hop (e.g. an extra host-gather upload)
+pytestmark = pytest.mark.no_chaos
+
 ALL_VARIANTS = ["robertson", "atire", "lucene", "bm25l", "bm25+"]
 
 SMALL = dict(block_size=16, tile=16, acc_block=16, frag=8, q_max=8)

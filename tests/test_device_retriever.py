@@ -37,6 +37,10 @@ from repro.sparse.block_csr import (TRANSFERS, DeviceIndex, PostingRunCache,
                                     fragment_plan, gather_posting_runs,
                                     reset_transfer_stats)
 
+# transfer/plan counters asserted here change legitimately when a
+# chaos fault forces a ladder hop (e.g. an extra host-gather upload)
+pytestmark = pytest.mark.no_chaos
+
 ALL_VARIANTS = ["robertson", "atire", "lucene", "bm25l", "bm25+"]
 
 SMALL = dict(block_size=16, tile=16, acc_block=16, frag=8, q_max=8)

@@ -202,3 +202,27 @@ def test_gate_trips_when_pruned_cells_or_counter_vanish():
     cand2 = _bench(_cell())
     _, failures = compare(base2, cand2)
     assert failures == []
+
+
+def test_gate_trips_on_healthy_baseline_degradation():
+    """A fault-free sweep that walked the fallback ladder is a planner or
+    capability bug the degradation machinery is silently absorbing — the
+    gate must surface it even though every latency cell looks fine."""
+    base = _bench(_cell())
+    cand = copy.deepcopy(base)
+    cand["degraded"] = {"n_docs": 50_000, "n_vocab": 10_000, "batch": 4,
+                        "k": 10, "profile": "head_mixed",
+                        "degradations_per_batch_healthy": 0.0,
+                        "degraded_trail": ["host->oracle"]}
+    rows, failures = compare(base, cand)
+    assert failures == []
+    assert any(r["metric"] == "degradations_per_batch_healthy"
+               and r["status"] == "ok" for r in rows)
+    cand["degraded"]["degradations_per_batch_healthy"] = 0.05
+    rows, failures = compare(base, cand)
+    assert len(failures) == 1
+    assert "fault-free baseline" in failures[0]
+    assert any(r["status"] == "DEGRADED" for r in rows)
+    # old-schema candidates (no degraded section) stay quietly ungated
+    _, failures = compare(base, base)
+    assert failures == []
