@@ -1,0 +1,262 @@
+"""BENCH_5 — cold-start: rebuild vs snapshot load vs mmap snapshot load.
+
+The PR-7 persistence story: a server that restarts should NOT pay the
+eager-scoring index build again. ``sparse.snapshot`` persists every
+layout (padded CSC, blocked, block-max) as raw little-endian files that
+``np.memmap`` can view directly, so a cold start is: read manifest,
+verify checksums, memmap the arrays, and upload straight through
+``put_posting_arrays`` — no tokenization, no scoring, no re-blocking.
+
+Each cell times three ways to reach a ready resident retriever from the
+same corpus, then proves the loaded replicas are bit-identical to the
+built one and still ship zero posting bytes per steady-state batch:
+
+- ``build_s``      tokenized corpus -> ``build_index`` -> resident upload
+- ``load_s``       snapshot -> eager ``np.fromfile`` read -> upload
+- ``load_mmap_s``  snapshot -> ``np.memmap`` -> upload (pages fault in
+                   lazily; checksum verification still reads each file
+                   once, which is the honest floor for a VERIFIED load)
+
+Acceptance (full run): ``load_mmap_s`` at least 5x faster than
+``build_s`` on the 50k-doc cell, with the transfer audit zero.
+
+Standalone::
+
+    PYTHONPATH=src python -m benchmarks.coldstart [--fast]
+
+CI cold-start smoke (two PROCESSES, so the load side shares nothing
+with the save side but the snapshot directory)::
+
+    python -m benchmarks.coldstart --fast --save  /tmp/snap
+    python -m benchmarks.coldstart --fast --serve /tmp/snap
+
+``--save`` builds one cell, snapshots it, and records the expected
+retrieval results; ``--serve`` cold-starts from the snapshot in a fresh
+interpreter, replays the recorded queries, and exits nonzero unless the
+scores are bit-identical AND the steady-state batch shipped zero posting
+bytes.
+"""
+
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import os
+import time
+
+import numpy as np
+
+from repro.core import BM25Params, build_index
+from repro.data.corpus import zipf_corpus
+
+from .planner import _guarded_write, _profile_queries
+
+GEOM = dict(block_size=64, frag=512, tile=2048)
+
+
+def _resident(idx=None, *, device_index=None):
+    from repro.serve import DeviceRetriever
+    return DeviceRetriever(idx, regime="gathered", gather="resident",
+                           plan="device", device_index=device_index,
+                           **GEOM)
+
+
+def _timed(fn, repeats: int):
+    """min-of-N wall time; returns (best_s, last result)."""
+    best, out = np.inf, None
+    for _ in range(repeats):
+        gc.collect()
+        gc.disable()
+        t0 = time.perf_counter()
+        out = fn()
+        best = min(best, time.perf_counter() - t0)
+        gc.enable()
+    return best, out
+
+
+def _dir_bytes(path: str) -> int:
+    total = 0
+    for root, _, files in os.walk(path):
+        total += sum(os.path.getsize(os.path.join(root, f)) for f in files)
+    return total
+
+
+def bench_cell(n_docs: int, n_vocab: int, workdir: str, *, batch: int = 8,
+               k: int = 10, avg_len: int = 60, repeats: int = 3) -> dict:
+    from repro.sparse import snapshot
+    from repro.sparse.block_csr import TRANSFERS, reset_transfer_stats
+
+    corpus = zipf_corpus(n_docs, n_vocab, avg_len=avg_len)
+    rng = np.random.default_rng(3)
+    queries = _profile_queries(rng, "head", n_vocab, batch, q_len=5)
+
+    # rebuild path: what a restart costs WITHOUT persistence — tokenized
+    # corpus back through eager scoring and the resident upload
+    def _build():
+        idx = build_index(corpus, n_vocab, params=BM25Params())
+        return _resident(idx)
+    build_s, dr_built = _timed(_build, repeats)
+    ref_ids, ref_scores = dr_built.retrieve_batch(queries, k)
+
+    snap = os.path.join(workdir, f"cell-{n_docs}x{n_vocab}")
+    save_s, _ = _timed(lambda: dr_built.save(snap), 1)
+
+    def _load(mmap: bool):
+        ld = snapshot.load_device_index(snap, mmap=mmap)
+        return _resident(device_index=ld)
+    load_s, _ = _timed(lambda: _load(False), repeats)
+    load_mmap_s, dr_mmap = _timed(lambda: _load(True), repeats)
+
+    # the loaded replica must be indistinguishable from the built one:
+    # bit-identical results AND the same zero-posting-bytes steady state
+    exact = True
+    for dr in (_load(False), dr_mmap):
+        ids, scores = dr.retrieve_batch(queries, k)
+        exact &= (np.array_equal(ids, ref_ids)
+                  and np.array_equal(scores, ref_scores))
+    reset_transfer_stats()
+    dr_mmap.retrieve_batch(queries, k)
+    post, desc = TRANSFERS.posting_bytes, TRANSFERS.descriptor_bytes
+
+    return {
+        "n_docs": n_docs, "n_vocab": n_vocab, "batch": batch, "k": k,
+        "nnz": int(dr_built.index.nnz),
+        "snapshot_bytes": _dir_bytes(snap),
+        "build_s": round(build_s, 4),
+        "save_s": round(save_s, 4),
+        "load_s": round(load_s, 4),
+        "load_mmap_s": round(load_mmap_s, 4),
+        "speedup_load_vs_build": round(build_s / max(load_s, 1e-9), 2),
+        "speedup_mmap_vs_build": round(build_s / max(load_mmap_s, 1e-9), 2),
+        "loaded_results_bit_identical": bool(exact),
+        "posting_bytes_per_batch_loaded": int(post),
+        "descriptor_bytes_per_batch_loaded": int(desc),
+    }
+
+
+def run(*, fast: bool = False, workdir: str) -> dict:
+    grid = ([(1_000, 2_000), (3_000, 5_000)] if fast else
+            [(5_000, 5_000), (20_000, 10_000), (50_000, 10_000)])
+    cells = [bench_cell(n, v, workdir, repeats=2 if n >= 20_000 else 3)
+             for n, v in grid]
+    largest = cells[-1]
+    return {
+        "cells": cells,
+        "summary": {
+            "largest_cell_docs": largest["n_docs"],
+            "mmap_speedup_at_largest_cell":
+                largest["speedup_mmap_vs_build"],
+            "mmap_speedup_ge_5x_at_largest":
+                largest["speedup_mmap_vs_build"] >= 5.0,
+            "all_loaded_results_bit_identical": all(
+                c["loaded_results_bit_identical"] for c in cells),
+            "loaded_posting_bytes_all_zero": all(
+                c["posting_bytes_per_batch_loaded"] == 0
+                and c["descriptor_bytes_per_batch_loaded"] == 0
+                for c in cells),
+            "note": "loads run verify=True (checksums read every byte "
+                    "once) — the honest cold-start floor. CPU wall "
+                    "times; kernels in interpret mode.",
+        },
+    }
+
+
+# --- two-process CI smoke -------------------------------------------------
+
+_SMOKE = dict(n_docs=2_000, n_vocab=2_000, batch=8, k=10, avg_len=60)
+
+
+def save_mode(path: str) -> None:
+    """Process 1: build, snapshot, record the expected answers."""
+    cfg = _SMOKE
+    corpus = zipf_corpus(cfg["n_docs"], cfg["n_vocab"],
+                         avg_len=cfg["avg_len"])
+    idx = build_index(corpus, cfg["n_vocab"], params=BM25Params())
+    dr = _resident(idx)
+    rng = np.random.default_rng(3)
+    queries = _profile_queries(rng, "head", cfg["n_vocab"], cfg["batch"],
+                               q_len=5)
+    ids, scores = dr.retrieve_batch(queries, cfg["k"])
+    t0 = time.perf_counter()
+    dr.save(path)
+    print(f"coldstart_save,snapshot={path},"
+          f"save_s={time.perf_counter() - t0:.4f},"
+          f"bytes={_dir_bytes(path)}")
+    with open(os.path.join(path, "expected.json"), "w") as f:
+        json.dump({"k": cfg["k"],
+                   "queries": [q.tolist() for q in queries],
+                   "ids": ids.tolist(), "scores": scores.tolist()}, f)
+
+
+def serve_mode(path: str) -> None:
+    """Process 2: cold-start from the snapshot alone, prove exactness and
+    the zero-byte steady state. Raises SystemExit on any mismatch."""
+    from repro.sparse import snapshot
+    from repro.sparse.block_csr import TRANSFERS, reset_transfer_stats
+
+    with open(os.path.join(path, "expected.json")) as f:
+        exp = json.load(f)
+    queries = [np.asarray(q, dtype=np.int32) for q in exp["queries"]]
+
+    t0 = time.perf_counter()
+    ld = snapshot.load_device_index(path, mmap=True)
+    dr = _resident(device_index=ld)
+    load_s = time.perf_counter() - t0
+    ids, scores = dr.retrieve_batch(queries, exp["k"])     # warm/compile
+    reset_transfer_stats()
+    ids, scores = dr.retrieve_batch(queries, exp["k"])
+    post, desc = TRANSFERS.posting_bytes, TRANSFERS.descriptor_bytes
+    print(f"coldstart_serve,load_mmap_s={load_s:.4f},"
+          f"posting_bytes={post},descriptor_bytes={desc},"
+          f"report={dr.health()['snapshot']}")
+    if not np.array_equal(ids, np.asarray(exp["ids"])):
+        raise SystemExit("cold-start ids differ from the saving process")
+    if not np.array_equal(
+            scores, np.asarray(exp["scores"], dtype=np.float32)):
+        raise SystemExit("cold-start scores differ from the saving process")
+    if post or desc:
+        raise SystemExit(
+            f"steady-state batch shipped bytes after cold start "
+            f"(posting={post}, descriptor={desc}); residency is broken")
+    print("coldstart_serve,ok=1 (bit-identical, zero posting bytes)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="tiny corpora (CI bench-smoke sized)")
+    ap.add_argument("--force", action="store_true",
+                    help="allow a --fast run to overwrite a full-scale "
+                         "artifact")
+    ap.add_argument("--out", default="BENCH_5.json")
+    ap.add_argument("--save", metavar="DIR",
+                    help="build the smoke cell and snapshot it to DIR")
+    ap.add_argument("--serve", metavar="DIR",
+                    help="cold-start from DIR in THIS process and verify")
+    ap.add_argument("--workdir", default=None,
+                    help="where sweep snapshots live (default: tempdir)")
+    args = ap.parse_args()
+    if args.save:
+        save_mode(args.save)
+        return
+    if args.serve:
+        serve_mode(args.serve)
+        return
+
+    import tempfile
+    t0 = time.time()
+    with tempfile.TemporaryDirectory() as tmp:
+        result = run(fast=args.fast, workdir=args.workdir or tmp)
+    for c in result["cells"]:
+        print("bench5_coldstart," + ",".join(f"{k}={v}"
+                                             for k, v in c.items()),
+              flush=True)
+    print("bench5_summary," + ",".join(
+        f"{k}={v}" for k, v in result["summary"].items()))
+    _guarded_write(args.out, result, fast=args.fast, force=args.force)
+    print(f"done in {time.time() - t0:.1f}s -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

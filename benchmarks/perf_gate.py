@@ -96,6 +96,15 @@ def compare(baseline: dict, candidate: dict, *, max_ratio: float = 1.25,
     base_cells = {cell_key(c): c for c in baseline.get("cells", [])}
     had_base = bool(base_cells)
     rows, failures, matched = [], [], 0
+    if baseline.get("fast") and not candidate.get("fast"):
+        # one-directional: smoke-vs-smoke (the CI bench job) and
+        # full-vs-full are both legitimate; judging a full-scale candidate
+        # against CI-smoke-sized numbers is how a clobbered BENCH_* file
+        # would silently poison every later comparison
+        failures.append(
+            "baseline artifact is marked \"fast\": true (a --fast CI-smoke "
+            "run) but the candidate is full-scale — refresh the baseline "
+            "with a full-scale run before gating against it")
     for cand in candidate.get("cells", []):
         key = cell_key(cand)
         base = base_cells.pop(key, None)

@@ -473,10 +473,40 @@ def run(*, fast: bool = False) -> dict:
     }
 
 
+def _guarded_write(path: str, payload: dict, *, fast: bool,
+                   force: bool) -> None:
+    """Write a bench artifact, refusing to clobber full-scale results.
+
+    Every payload is stamped ``"fast"`` so downstream consumers
+    (``benchmarks.perf_gate``) can tell CI-smoke numbers from the real
+    sweep. A ``--fast`` run that targets an existing artifact WITHOUT the
+    marker aborts unless ``--force`` — the committed full-scale BENCH_*
+    files cannot be silently replaced by smoke-sized numbers again (the
+    incident behind commit 3b01c1d).
+    """
+    import os
+    payload = {"fast": bool(fast), **payload}
+    if fast and not force and os.path.exists(path):
+        try:
+            with open(path) as f:
+                existing = json.load(f)
+        except (OSError, ValueError):
+            existing = None
+        if not (isinstance(existing, dict) and existing.get("fast")):
+            raise SystemExit(
+                f"refusing to overwrite full-scale {path!r} with a --fast "
+                f"run; pass --force or point --out elsewhere")
+    with open(path, "w") as f:
+        json.dump(payload, f, indent=1)
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="tiny corpora (CI bench-smoke sized)")
+    ap.add_argument("--force", action="store_true",
+                    help="allow a --fast run to overwrite a full-scale "
+                         "artifact")
     ap.add_argument("--out", default="BENCH_3.json")
     ap.add_argument("--out4", default="BENCH_4.json",
                     help="pruned-regime cells + summary ('' to skip)")
@@ -493,12 +523,11 @@ def main() -> None:
         f"{k}={v}" for k, v in result["pruned"]["summary"].items()))
     print("bench3_degraded," + ",".join(
         f"{k}={v}" for k, v in result["degraded"].items()))
-    with open(args.out, "w") as f:
-        json.dump(result, f, indent=1)
+    _guarded_write(args.out, result, fast=args.fast, force=args.force)
     outs = [args.out]
     if args.out4:
-        with open(args.out4, "w") as f:
-            json.dump(result["pruned"], f, indent=1)
+        _guarded_write(args.out4, result["pruned"], fast=args.fast,
+                       force=args.force)
         outs.append(args.out4)
     print(f"done in {time.time() - t0:.1f}s -> {', '.join(outs)}")
 

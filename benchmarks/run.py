@@ -22,10 +22,20 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--fast", action="store_true",
                     help="smaller corpora (CI-sized)")
+    ap.add_argument("--force", action="store_true",
+                    help="allow a --fast run to overwrite full-scale "
+                         "BENCH_* artifacts")
     args = ap.parse_args()
 
     from . import fused, gathered, kernels_bench, planner, throughput, \
         tokenization, variants
+
+    # every BENCH_* write goes through the clobber guard: a --fast run
+    # refuses to replace a committed full-scale artifact (the PR-4
+    # incident) unless --force
+    def _write(path, payload):
+        planner._guarded_write(path, payload, fast=args.fast,
+                               force=args.force)
 
     results = {}
     t0 = time.time()
@@ -34,24 +44,20 @@ def main() -> None:
     for section, r in results["bench1_fused"].items():
         print(f"bench1_{section}," + ",".join(
             f"{k}={v}" for k, v in r.items()), flush=True)
-    with open("BENCH_1.json", "w") as f:
-        json.dump(results["bench1_fused"], f, indent=1)
+    _write("BENCH_1.json", results["bench1_fused"])
 
     results["bench2_gathered"] = gathered.run(fast=args.fast)
     for r in results["bench2_gathered"]["cells"]:
         print("bench2_gathered," + ",".join(
             f"{k}={v}" for k, v in r.items()), flush=True)
-    with open("BENCH_2.json", "w") as f:
-        json.dump(results["bench2_gathered"], f, indent=1)
+    _write("BENCH_2.json", results["bench2_gathered"])
 
     results["bench3_planner"] = planner.run(fast=args.fast)
     for r in results["bench3_planner"]["cells"]:
         print("bench3_planner," + ",".join(
             f"{k}={v}" for k, v in r.items()), flush=True)
-    with open("BENCH_3.json", "w") as f:
-        json.dump(results["bench3_planner"], f, indent=1)
-    with open("BENCH_4.json", "w") as f:
-        json.dump(results["bench3_planner"]["pruned"], f, indent=1)
+    _write("BENCH_3.json", results["bench3_planner"])
+    _write("BENCH_4.json", results["bench3_planner"]["pruned"])
 
     sizes = ((1000, 3000), (5000, 10000)) if args.fast else \
         ((2000, 5000), (10000, 20000), (50000, 50000))

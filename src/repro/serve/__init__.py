@@ -2,7 +2,8 @@
 
 from .errors import (InvalidQueryError, PlanOverflowError, ResidencyError,
                      RetrievalConfigError, RetrievalError,
-                     ScoreIntegrityError, TruncationWarning)
+                     ScoreIntegrityError, SnapshotIntegrityError,
+                     SnapshotVersionError, TruncationWarning)
 from .retrieval_engine import (BlockedRetriever, DeviceRetriever,
                                GatheredRetriever, PrunedRetriever,
                                RetrievalEngine, ShardRuntime)
@@ -12,4 +13,5 @@ __all__ = ["BlockedRetriever", "DeviceRetriever", "GatheredRetriever",
            "PrunedRetriever", "RetrievalEngine", "ShardRuntime",
            "DecodeEngine", "RetrievalError", "InvalidQueryError",
            "PlanOverflowError", "ResidencyError", "ScoreIntegrityError",
-           "RetrievalConfigError", "TruncationWarning"]
+           "RetrievalConfigError", "SnapshotIntegrityError",
+           "SnapshotVersionError", "TruncationWarning"]

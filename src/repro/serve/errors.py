@@ -25,6 +25,12 @@ only cost.
   failed the cheap finite-check (NaN/Inf tiles from a bad kernel launch).
 * :class:`RetrievalConfigError`  — incompatible constructor arguments
   (unknown regime/gather/plan modes and their invalid combinations).
+* :class:`SnapshotIntegrityError` — an on-disk snapshot failed checksum /
+  size / structure verification and the recovery ladder (duplicate copy →
+  rebuild layout from surviving arrays → corpus rebuild) ran dry.
+* :class:`SnapshotVersionError`  — a snapshot's format name, version, or
+  checksum algorithm is not one this build can read; never silently
+  reinterpreted as a different layout.
 * :class:`TruncationWarning`     — results are exact over a truncated
   posting set (budget overflow in the convenience API); a warning, not an
   error, because callers asked for a fixed budget.
@@ -72,6 +78,24 @@ class RetrievalConfigError(RetrievalError, ValueError):
     """Incompatible or unknown retriever construction arguments."""
 
 
+class SnapshotIntegrityError(RetrievalError, RuntimeError):
+    """An on-disk snapshot is corrupt beyond exact recovery.
+
+    Raised when a manifest or array file fails checksum/size verification
+    AND every recovery hop (duplicate copy, rebuild-from-surviving-layout,
+    corpus rebuild) is unavailable. ``corrupt`` lists the offending
+    manifest entries so operators see exactly which files to inspect.
+    """
+
+    def __init__(self, message: str, *, corrupt: list[str] | None = None):
+        super().__init__(message)
+        self.corrupt = list(corrupt or [])
+
+
+class SnapshotVersionError(RetrievalError, ValueError):
+    """A snapshot's format/version/checksum-algo is unknown to this build."""
+
+
 class TruncationWarning(RuntimeWarning):
     """Scores were computed over a truncated posting set (budget overflow)."""
 
@@ -79,5 +103,6 @@ class TruncationWarning(RuntimeWarning):
 __all__ = [
     "RetrievalError", "InvalidQueryError", "PlanOverflowError",
     "ResidencyError", "ScoreIntegrityError", "RetrievalConfigError",
+    "SnapshotIntegrityError", "SnapshotVersionError",
     "TruncationWarning",
 ]

@@ -34,7 +34,28 @@ site                           kinds
                                   the incoming batch is corrupted before
                                   validation (out-of-range ids, negative
                                   ids, dtype drift, None/ragged entries).
+``snapshot.write``                ``torn_write`` — the snapshot writer is
+                                  "killed" mid-write: the file just
+                                  written is truncated on disk and the
+                                  save raises ``OSError`` before the
+                                  commit point (the previous snapshot
+                                  generation must survive untouched).
+``snapshot.manifest``             ``manifest_corrupt`` / ``stale_version``
+                                  — the on-disk manifest is bit-flipped
+                                  (checksum/parse failure) or rewritten
+                                  with an unknown future format version
+                                  (surfaced as ``SnapshotVersionError``).
+``snapshot.array``                ``truncate`` / ``bit_flip`` — one array
+                                  file is truncated or has a single bit
+                                  flipped on disk; the loader's checksum
+                                  pass must catch it and walk the
+                                  snapshot recovery ladder.
 =============================  ==========================================
+
+The ``snapshot.*`` I/O lane mutates REAL files on disk (the paths the
+loader is about to verify), so the whole save→crash→load→recover cycle is
+probed end to end; corruption offsets are still pure functions of
+``(seed, fire_count)``.
 
 Every mutation is a pure function of ``(seed, fire_count)`` — re-running
 the same test with the same spec replays the same corruption, byte for
@@ -105,6 +126,9 @@ SITES: dict[str, tuple[str, ...]] = {
     "kernel.resident_pruned": ("nan_board", "inf_board"),
     "query.batch": ("query.range", "query.negative", "query.dtype",
                     "query.ragged"),
+    "snapshot.write": ("torn_write",),
+    "snapshot.manifest": ("manifest_corrupt", "stale_version"),
+    "snapshot.array": ("truncate", "bit_flip"),
 }
 
 
@@ -231,6 +255,52 @@ def _corrupt_queries(queries, kind: str, rng: np.random.Generator,
     return out
 
 
+def _corrupt_snapshot_file(path, kind: str, rng: np.random.Generator):
+    """Mutate a snapshot file on disk; pure function of the rng state.
+
+    ``path`` may be a list of candidate files (the payload the snapshot
+    loader/writer passes) — one is chosen by the rng, so which file a
+    chaos run corrupts varies with the seed while staying replayable.
+    ``torn_write`` / ``truncate`` chop the file to a strict prefix (at
+    least one byte short); ``bit_flip`` flips one bit at an rng-chosen
+    offset; ``manifest_corrupt`` is a bit flip too (a torn or flipped
+    manifest both surface as parse/checksum failures);
+    ``stale_version`` rewrites the manifest with an unknown future
+    version and a RECOMPUTED manifest checksum, so the version check —
+    not the checksum — is what trips.
+    """
+    import os
+    if isinstance(path, (list, tuple)):
+        path = path[int(rng.integers(0, len(path)))]
+    path = str(path)
+    size = os.path.getsize(path)
+    if kind == "stale_version":
+        import json
+        from ..sparse import snapshot as _snap
+        with open(path, encoding="utf-8") as fh:
+            manifest = json.load(fh)
+        manifest["version"] = int(manifest.get("version", 0)) + 999
+        manifest.pop("manifest_checksum", None)
+        manifest["manifest_checksum"] = _snap.manifest_checksum(manifest)
+        with open(path, "w", encoding="utf-8") as fh:
+            json.dump(manifest, fh)
+        return
+    if size == 0:
+        return
+    if kind in ("torn_write", "truncate"):
+        keep = int(rng.integers(0, size))      # strict prefix: 0..size-1
+        os.truncate(path, keep)
+        return
+    # bit_flip / manifest_corrupt: flip one bit in place
+    off = int(rng.integers(0, size))
+    bit = int(rng.integers(0, 8))
+    with open(path, "r+b") as fh:
+        fh.seek(off)
+        byte = fh.read(1)
+        fh.seek(off)
+        fh.write(bytes([byte[0] ^ (1 << bit)]))
+
+
 def fire(site: str, payload=None, *, n_vocab: int | None = None):
     """Hook called by instrumented sites. Raises or transforms ``payload``.
 
@@ -258,6 +328,13 @@ def fire(site: str, payload=None, *, n_vocab: int | None = None):
     if spec.kind.startswith("query."):
         return _corrupt_queries(payload, spec.kind, rng,
                                 n_vocab=int(n_vocab or 0) or (1 << 30))
+    if site.startswith("snapshot."):
+        _corrupt_snapshot_file(payload, spec.kind, rng)
+        if spec.kind == "torn_write":
+            raise OSError(
+                f"injected: process killed mid-write at {site} "
+                f"({payload}; spec seed={spec.seed}, fire #{spec.fired})")
+        return payload
     raise AssertionError(f"unhandled fault kind {spec.kind!r}")
 
 

@@ -220,12 +220,37 @@ class DeviceRetriever(_DeviceRetrieverBase):
                  plan: str | None = None, double_buffer: bool = True,
                  host_arrays: str = "keep", run_cache: int = 256,
                  bmax_dtype: str = "auto", reuse_from=None,
-                 on_fault: str = "degrade"):
+                 device_index=None, on_fault: str = "degrade"):
         from ..sparse.block_csr import DeviceIndex, PostingRunCache
         if regime not in ("auto", "blocked", "gathered", "pruned"):
             raise RetrievalConfigError(f"unknown regime {regime!r}")
         if on_fault not in ("degrade", "raise"):
             raise RetrievalConfigError(f"unknown on_fault mode {on_fault!r}")
+        if device_index is not None:
+            # ADOPT a pre-built DeviceIndex (snapshot cold-start:
+            # ``DeviceIndex.load`` already uploaded the resident arrays —
+            # no rebuild, no re-upload). Geometry comes from the adopted
+            # index; regime / gather / plan resolve to the layouts the
+            # snapshot actually holds.
+            if index is None:
+                index = device_index.host
+            if index is None:
+                raise RetrievalConfigError(
+                    "device_index= adoption needs a host BM25Index (the "
+                    "adopted DeviceIndex was built with host=None)")
+            block_size = device_index.block_size
+            frag = device_index.frag
+            if regime == "auto" and device_index.blk_tok is None:
+                regime = ("pruned" if device_index.bmax is not None
+                          else "gathered")
+            if regime == "auto" and device_index.csc_doc_ids is None:
+                regime = "blocked"
+            host_intact = (int(index.doc_ids.size) == int(index.indptr[-1]))
+            if not host_intact:
+                # the snapshot was loaded host_arrays="drop": every
+                # host-side path (host gather / host planner / oracle) is
+                # gone, so force the resident device plan
+                gather, plan, host_arrays = "resident", "device", "keep"
         if gather is None:
             import jax
             # pruning is a resident-path concept (it gates fragment DMAs
@@ -269,15 +294,18 @@ class DeviceRetriever(_DeviceRetrieverBase):
         self.n_docs = int(index.doc_lens.size)
         self.run_cache = (PostingRunCache(run_cache)
                           if gather == "host" and run_cache > 0 else None)
-        with_csc = (regime in ("auto", "gathered", "pruned")
-                    and gather == "resident")
-        self.dindex = DeviceIndex.build(
-            index, block_size=block_size, tile=tile, frag=frag,
-            with_blocked=regime in ("auto", "blocked"),
-            with_csc=with_csc,
-            with_bmax=with_csc and regime in ("auto", "pruned"),
-            bmax_dtype=bmax_dtype,
-            host_arrays=host_arrays, reuse_from=reuse_from)
+        if device_index is not None:
+            self.dindex = device_index
+        else:
+            with_csc = (regime in ("auto", "gathered", "pruned")
+                        and gather == "resident")
+            self.dindex = DeviceIndex.build(
+                index, block_size=block_size, tile=tile, frag=frag,
+                with_blocked=regime in ("auto", "blocked"),
+                with_csc=with_csc,
+                with_bmax=with_csc and regime in ("auto", "pruned"),
+                bmax_dtype=bmax_dtype,
+                host_arrays=host_arrays, reuse_from=reuse_from)
         self._nf_state = {}                      # steady-state nf bucket
         self.on_fault = on_fault
         # observability: ladder + sanitizer counters feeding engine health()
@@ -303,9 +331,12 @@ class DeviceRetriever(_DeviceRetrieverBase):
             return
         q = np.zeros(1, dtype=np.int32)
         kk = min(k, self.n_docs)
-        if self.regime in ("auto", "blocked"):
+        if (self.regime in ("auto", "blocked")
+                and self.dindex.blk_tok is not None):
             self.retrieve_batch([q], kk, regime="blocked")
-        if self.regime in ("auto", "gathered"):
+        if (self.regime in ("auto", "gathered")
+                and (self.gather_mode == "host"
+                     or self.dindex.csc_doc_ids is not None)):
             self.retrieve_batch([q], kk, regime="gathered")
         if self.regime == "pruned":
             # auto engines compile the pruned kernels lazily on the first
@@ -323,7 +354,13 @@ class DeviceRetriever(_DeviceRetrieverBase):
             "degradations": dict(self.degradation_counts),
             "faults": dict(self.fault_counters),
             "queries": dict(self.query_counters),
+            "snapshot": dict(getattr(self.dindex, "snapshot_report", None)
+                             or {}),
         }
+
+    def save(self, path, *, algo: str | None = None) -> dict:
+        """Persist this retriever's resident index (see sparse.snapshot)."""
+        return self.dindex.save(path, index=self.index, algo=algo)
 
     # -- the graceful-degradation ladder ---------------------------------
     #
@@ -781,6 +818,10 @@ class ShardRuntime:
             "degradations": dict(getattr(sc, "degradation_counts", {})),
             "faults": dict(getattr(sc, "fault_counters", {})),
             "queries": dict(getattr(sc, "query_counters", {})),
+            "snapshot": dict(
+                getattr(getattr(sc, "dindex", None), "snapshot_report",
+                        None)
+                or getattr(self.index, "snapshot_report", None) or {}),
         }
 
     def warmup(self, k: int) -> None:
@@ -843,7 +884,8 @@ class RetrievalEngine:
                  max_workers: int = 8,
                  delay: Callable[[int], Callable[[], float] | None] = None,
                  scorer: str = "scipy", warmup: bool = True,
-                 scorer_opts: dict | None = None):
+                 scorer_opts: dict | None = None,
+                 device_indexes: Sequence | None = None):
         self.k = k
         self.deadline_s = deadline_s
         self.quorum = quorum
@@ -855,6 +897,14 @@ class RetrievalEngine:
         self.query_counters: dict[str, int] = {}
         self._responses = 0
         self._degraded_responses = 0
+        # pre-built per-shard DeviceIndexes (snapshot cold-start via
+        # ``RetrievalEngine.load``) — adopted by the FIRST build only;
+        # rescale re-buckets postings, so loaded runtimes can't outlive it
+        self._adopt = list(device_indexes or [])
+        if self._adopt and len(self._adopt) != len(shards):
+            raise RetrievalConfigError(
+                f"device_indexes has {len(self._adopt)} entries for "
+                f"{len(shards)} shards")
         self._build_runtimes(list(shards))
 
     def _build_runtimes(self, shards: list[BM25Index]) -> None:
@@ -900,6 +950,8 @@ class RetrievalEngine:
                     None)
                 if donor is not None:
                     opts = {**opts, "reuse_from": donor._scorer.dindex}
+                if i < len(self._adopt) and self._adopt[i] is not None:
+                    opts = {**opts, "device_index": self._adopt[i]}
             rt = ShardRuntime(s, delay=delay, scorer=self.scorer,
                               scorer_opts=opts)
             di = getattr(rt._scorer, "dindex", None)
@@ -915,6 +967,7 @@ class RetrievalEngine:
             runtimes.append(rt)
         self.shards = shards
         self.runtimes = runtimes
+        self._adopt = []                  # adoption is first-build-only
         self.last_build_stats = {"reused": reused,
                                  "built": len(shards) - reused,
                                  "blockmax_reused": blockmax_reused}
@@ -923,6 +976,106 @@ class RetrievalEngine:
     def rescale(self, n_shards: int) -> None:
         """Elastic re-shard (device pool grew or shrank)."""
         self._build_runtimes(reshard_index(self.shards, n_shards))
+
+    ENGINE_FORMAT = "repro-bm25s-engine"
+    ENGINE_VERSION = 1
+
+    def save(self, path: str, *, algo: str | None = None) -> dict:
+        """Snapshot every shard runtime + the engine config under ``path``.
+
+        Layout: ``engine.json`` (config, written last — tmp + fsync +
+        ``os.replace``) next to one ``shard-NNNN/`` snapshot root per
+        runtime, each an atomic generation store (see ``sparse.snapshot``).
+        Device runtimes persist their resident layouts
+        (``save_device_index``: padded CSC + blocked + block-max, every
+        file memmap-able); scipy runtimes persist the bare index
+        (``save_index``). Re-saving into the same path adds a generation
+        per shard and rewrites ``engine.json`` — a crash mid-save leaves
+        every shard's previous generation committed.
+        """
+        import json
+        import os
+
+        from ..sparse import snapshot
+        os.makedirs(path, exist_ok=True)
+        for i, rt in enumerate(self.runtimes):
+            sdir = os.path.join(path, f"shard-{i:04d}")
+            di = getattr(rt._scorer, "dindex", None)
+            if di is not None:
+                snapshot.save_device_index(di, sdir,
+                                           index=rt._scorer.index,
+                                           algo=algo)
+            else:
+                snapshot.save_index(rt.index, sdir, algo=algo)
+        body = {"format": self.ENGINE_FORMAT,
+                "version": self.ENGINE_VERSION,
+                "n_shards": len(self.runtimes), "k": self.k,
+                "deadline_s": self.deadline_s, "quorum": self.quorum,
+                "scorer": self.scorer}
+        data = json.dumps(body, indent=1, sort_keys=True).encode("utf-8")
+        tmp = os.path.join(path, "engine.json.tmp")
+        with open(tmp, "wb") as fh:
+            fh.write(data)
+            fh.flush()
+            os.fsync(fh.fileno())
+        os.replace(tmp, os.path.join(path, "engine.json"))
+        return body
+
+    @classmethod
+    def load(cls, path: str, *, mmap: bool = False,
+             host_arrays: str = "keep", verify: bool = True, corpus=None,
+             **kwargs) -> "RetrievalEngine":
+        """Cold-start an engine from :meth:`save` — no shard rebuilds.
+
+        Device shards come back through ``sparse.snapshot
+        .load_device_index`` (checksummed read, memmap when ``mmap=True``,
+        resident arrays uploaded straight from the files) and are ADOPTED
+        by their runtimes via ``device_index=`` — ``DeviceIndex.build``
+        never runs. Scipy shards come back through ``load_index``.
+        ``corpus`` (the full tokenized corpus) arms the last recovery
+        rung: each shard slices its own document range out of it.
+        ``kwargs`` override the saved engine config
+        (``RetrievalEngine.__init__`` keywords).
+        """
+        import json
+        import os
+
+        from ..sparse import snapshot
+        with open(os.path.join(path, "engine.json"),
+                  encoding="utf-8") as fh:
+            cfg = json.load(fh)
+        if cfg.get("format") != cls.ENGINE_FORMAT:
+            from .errors import SnapshotVersionError
+            raise SnapshotVersionError(
+                f"{path}: not a {cls.ENGINE_FORMAT} store "
+                f"(format={cfg.get('format')!r})")
+        v = cfg.get("version")
+        if not isinstance(v, int) or not 1 <= v <= cls.ENGINE_VERSION:
+            from .errors import SnapshotVersionError
+            raise SnapshotVersionError(
+                f"{path}: engine store version {v!r} not supported")
+        scorer = kwargs.pop("scorer", cfg["scorer"])
+        opts = dict(k=cfg["k"], deadline_s=cfg["deadline_s"],
+                    quorum=cfg["quorum"])
+        opts.update(kwargs)
+        shards, dis = [], []
+        for i in range(int(cfg["n_shards"])):
+            sdir = os.path.join(path, f"shard-{i:04d}")
+            # corpus is the FULL corpus — each shard's loader slices its
+            # own manifest-recorded doc range with global stats
+            if scorer == "scipy":
+                shards.append(snapshot.load_index(sdir, mmap=mmap,
+                                                  verify=verify,
+                                                  corpus=corpus))
+            else:
+                di = snapshot.load_device_index(sdir, mmap=mmap,
+                                                host_arrays=host_arrays,
+                                                verify=verify,
+                                                corpus=corpus)
+                shards.append(di.host)
+                dis.append(di)
+        return cls(shards, scorer=scorer,
+                   device_indexes=dis if dis else None, **opts)
 
     def health(self) -> dict:
         """One operational snapshot of the engine's fault surface.

@@ -872,6 +872,7 @@ class DeviceIndex:
     blk_sc: object = None
     bmax: object = None          # BlockMaxTable (pruned regime) or None
     reused: dict = None          # which layouts a rescale build recycled
+    snapshot_report: dict = None  # set by sparse.snapshot loads (health())
 
     @staticmethod
     def _postings_identical(a, b) -> bool:
@@ -975,6 +976,26 @@ class DeviceIndex:
         """Batch posting work Σ df — free, from the host descriptor table."""
         u = np.asarray(uniq_tokens)
         return int(self.df[u].sum()) if u.size else 0
+
+    # -- crash-safe persistence (sparse.snapshot) ---------------------------
+    def save(self, path: str, *, index=None, algo: str | None = None) -> dict:
+        """Atomic checksummed snapshot of the resident layouts (see
+        ``sparse.snapshot``). ``index=`` supplies host metadata when this
+        DeviceIndex was built with ``host_arrays='drop'``."""
+        from . import snapshot
+        return snapshot.save_device_index(self, path, index=index, algo=algo)
+
+    @staticmethod
+    def load(path: str, *, mmap: bool = False, host_arrays: str = "keep",
+             verify: bool = True, corpus=None) -> "DeviceIndex":
+        """Cold-start from a snapshot: verified (checksummed) read, then
+        upload straight from the (mem)mapped padded layouts through
+        ``put_posting_arrays`` — no host re-blocking, and the
+        zero-steady-state-bytes invariant holds for every batch after."""
+        from . import snapshot
+        return snapshot.load_device_index(path, mmap=mmap,
+                                          host_arrays=host_arrays,
+                                          verify=verify, corpus=corpus)
 
 
 def query_nonoccurrence_shift(nonoccurrence: np.ndarray,

@@ -47,17 +47,29 @@ def pytest_configure(config):
         "legitimately changes)")
 
 
-# The chaos pool holds ONLY faults the degradation ladder recovers from
-# exactly (residency / overflow / poisoned boards). query.* corruption is
-# excluded on purpose: the sanitizer's repair drops the corrupted token,
-# which CHANGES the correct answer — that family is covered explicitly in
-# tests/test_faults.py instead.
-_CHAOS_POOL = (
-    ("residency.put_posting_arrays", "residency"),
-    ("plan.fragments_device", "overflow"),
-    ("kernel.resident_pruned", "nan_board"),
-    ("kernel.resident_pruned", "inf_board"),
-)
+# The chaos pools hold ONLY faults the recovery machinery undoes exactly.
+# "ladder" (default): residency / overflow / poisoned boards, healed by the
+# retriever's degradation ladder. "io" ($CHAOS_POOL=io): on-disk snapshot
+# corruption injected inside a load's guard scope, healed by the snapshot
+# recovery ladder (dup replicas + layout rebuilds). Excluded on purpose:
+# query.* corruption (the sanitizer's repair CHANGES the correct answer),
+# torn_write (fires during saves, which run unguarded) and stale_version
+# (a typed refusal, not a recovery) — those families are covered
+# explicitly in tests/test_faults.py instead.
+_CHAOS_POOLS = {
+    "ladder": (
+        ("residency.put_posting_arrays", "residency"),
+        ("plan.fragments_device", "overflow"),
+        ("kernel.resident_pruned", "nan_board"),
+        ("kernel.resident_pruned", "inf_board"),
+    ),
+    "io": (
+        ("snapshot.array", "bit_flip"),
+        ("snapshot.array", "truncate"),
+        ("snapshot.manifest", "manifest_corrupt"),
+    ),
+}
+_CHAOS_POOL = _CHAOS_POOLS[os.environ.get("CHAOS_POOL", "ladder")]
 _chaos_specs: dict = {}      # module name -> its one armed FaultSpec
 
 

@@ -90,7 +90,10 @@ def test_fault_spec_rejects_unknown_site():
         FaultSpec(site="residency.put_posting_arrays", kind="nan_board")
     assert set(SITES) == {"residency.put_posting_arrays",
                           "plan.fragments_device", "kernel.resident_pruned",
-                          "query.batch"}
+                          "query.batch", "snapshot.write",
+                          "snapshot.manifest", "snapshot.array"}
+    with pytest.raises(ValueError, match="no kind"):
+        FaultSpec(site="snapshot.array", kind="torn_write")
 
 
 # -- ladder recovery, every fault class × five variants ----------------------
@@ -398,6 +401,104 @@ def test_bm25_retriever_truncation_warning():
     with pytest.warns(RuntimeWarning):                   # back-compat
         r.retrieve(["apple banana cherry filler words extra"], k=5,
                    p_max=2)
+
+
+# -- the snapshot I/O fault lane ---------------------------------------------
+#
+# The three snapshot.* sites mutate REAL on-disk files (the load-side
+# guard() scope makes them chaos-armable: every corruption they can inject
+# is one the recovery ladder undoes exactly, except torn_write — a save-
+# time crash — and stale_version — a typed refusal by design).
+
+def _snap(tmp_path, rng, method="lucene"):
+    idx = _mk(rng, method)
+    from repro.sparse import snapshot
+    path = str(tmp_path / "snap")
+    snapshot.save_index(idx, path, block_size=16, tile=16, frag=8)
+    return idx, path
+
+
+@pytest.mark.parametrize("kind", ["bit_flip", "truncate"])
+@pytest.mark.parametrize("guarded", [True, False])
+def test_snapshot_array_fault_recovers_exact(kind, guarded, tmp_path, rng):
+    """Array corruption injected during a verified load is healed by the
+    dup/layout recovery ladder — the loaded index is bit-identical."""
+    from repro.sparse import snapshot
+    idx, path = _snap(tmp_path, rng)
+    with inject_faults({"site": "snapshot.array", "kind": kind,
+                        "times": 1, "seed": 7, "guarded": guarded}) as sp:
+        ld = snapshot.load_index(path)
+    assert sp[0].fired == 1            # load's guard scope admits the fault
+    assert ld.snapshot_report["hops"]  # ... and the ladder healed it
+    np.testing.assert_array_equal(ld.indptr, idx.indptr)
+    np.testing.assert_array_equal(ld.doc_ids, idx.doc_ids)
+    np.testing.assert_array_equal(ld.scores, idx.scores)
+    np.testing.assert_array_equal(ld.nonoccurrence, idx.nonoccurrence)
+    np.testing.assert_array_equal(ld.doc_lens, idx.doc_lens)
+
+
+@pytest.mark.parametrize("guarded", [True, False])
+def test_snapshot_manifest_corrupt_recovers_via_dup(guarded, tmp_path, rng):
+    from repro.sparse import snapshot
+    idx, path = _snap(tmp_path, rng)
+    with inject_faults({"site": "snapshot.manifest",
+                        "kind": "manifest_corrupt", "times": 1, "seed": 3,
+                        "guarded": guarded}) as sp:
+        ld = snapshot.load_index(path)
+    assert sp[0].fired == 1
+    assert "manifest<-dup" in ld.snapshot_report["hops"]
+    np.testing.assert_array_equal(ld.doc_ids, idx.doc_ids)
+
+
+@pytest.mark.parametrize("guarded", [True, False])
+def test_snapshot_stale_version_is_typed(guarded, tmp_path, rng):
+    """Version skew is a refusal, not a recovery — the dup holds the same
+    future version, so no ladder hop can apply."""
+    from repro.serve import SnapshotVersionError
+    from repro.sparse import snapshot
+    idx, path = _snap(tmp_path, rng)
+    with inject_faults({"site": "snapshot.manifest",
+                        "kind": "stale_version", "times": 1, "seed": 3,
+                        "guarded": guarded}) as sp:
+        with pytest.raises(SnapshotVersionError):
+            snapshot.load_index(path)
+    assert sp[0].fired == 1
+
+
+def test_snapshot_torn_write_guarded_vs_unguarded(tmp_path, rng):
+    """Saves run OUTSIDE any guard scope: a guarded torn_write can never
+    fire there (chaos safety), an unguarded one is the kill-mid-save
+    drill — and the previous snapshot survives it."""
+    from repro.sparse import snapshot
+    idx, path = _snap(tmp_path, rng)
+    with inject_faults({"site": "snapshot.write", "kind": "torn_write",
+                        "times": 1, "seed": 0}) as sp:
+        snapshot.save_index(idx, path, block_size=16, tile=16, frag=8)
+    assert sp[0].fired == 0            # guarded: the save was untouched
+    with inject_faults({"site": "snapshot.write", "kind": "torn_write",
+                        "times": 1, "seed": 0, "guarded": False}) as sp:
+        with pytest.raises(OSError, match="injected"):
+            snapshot.save_index(idx, path, block_size=16, tile=16, frag=8)
+    assert sp[0].fired == 1
+    ld = snapshot.load_index(path)     # previous generation, intact
+    assert not ld.snapshot_report["hops"]
+    np.testing.assert_array_equal(ld.doc_ids, idx.doc_ids)
+
+
+def test_snapshot_fault_is_deterministic(tmp_path, rng):
+    """Same seed -> same victim file and same corruption -> same report."""
+    from repro.sparse import snapshot
+    idx, _ = _snap(tmp_path, rng)
+    reports = []
+    for run in range(2):
+        path = str(tmp_path / f"det-{run}")
+        snapshot.save_index(idx, path, block_size=16, tile=16, frag=8)
+        with inject_faults({"site": "snapshot.array", "kind": "bit_flip",
+                            "times": 1, "seed": 42}):
+            ld = snapshot.load_index(path)
+        reports.append((sorted(ld.snapshot_report["corrupt"]),
+                        sorted(ld.snapshot_report["hops"])))
+    assert reports[0] == reports[1]
 
 
 # -- no-fault behavior: the harness costs nothing when disarmed --------------

@@ -226,3 +226,44 @@ def test_gate_trips_on_healthy_baseline_degradation():
     # old-schema candidates (no degraded section) stay quietly ungated
     _, failures = compare(base, base)
     assert failures == []
+
+
+def test_gate_rejects_fast_baseline_for_full_candidate():
+    """A --fast (CI-smoke) artifact can never gate a full-scale run: the
+    marker rejection is how a clobbered committed BENCH_* file surfaces
+    as a loud failure instead of silently blessing smoke-sized numbers
+    as the trend baseline."""
+    base = _bench(_cell())
+    cand = copy.deepcopy(base)
+    base["fast"] = True
+    _, failures = compare(base, cand)
+    assert len(failures) == 1 and '"fast": true' in failures[0]
+    # smoke-vs-smoke (the CI bench job) and full-vs-full both stay clean,
+    # and a fast CANDIDATE against a full baseline is fine too
+    cand["fast"] = True
+    assert compare(base, cand)[1] == []
+    base["fast"] = False
+    assert compare(base, copy.deepcopy(base))[1] == []
+    assert compare(base, cand)[1] == []
+
+
+def test_planner_guarded_write_refuses_fast_clobber(tmp_path):
+    """planner._guarded_write stamps every payload "fast" and refuses to
+    let a --fast run replace an unstamped (full-scale) artifact unless
+    forced — the regression guard for the PR-4 BENCH clobber."""
+    from benchmarks.planner import _guarded_write
+
+    out = tmp_path / "BENCH.json"
+    _guarded_write(str(out), {"cells": [1]}, fast=False, force=False)
+    assert json.loads(out.read_text())["fast"] is False
+    with pytest.raises(SystemExit, match="refusing to overwrite"):
+        _guarded_write(str(out), {"cells": [2]}, fast=True, force=False)
+    assert json.loads(out.read_text())["cells"] == [1]
+    # --force overrides; fast-over-fast never needs it
+    _guarded_write(str(out), {"cells": [3]}, fast=True, force=True)
+    assert json.loads(out.read_text()) == {"fast": True, "cells": [3]}
+    _guarded_write(str(out), {"cells": [4]}, fast=True, force=False)
+    assert json.loads(out.read_text())["cells"] == [4]
+    # a fast artifact never blocks a full-scale refresh
+    _guarded_write(str(out), {"cells": [5]}, fast=False, force=False)
+    assert json.loads(out.read_text()) == {"fast": False, "cells": [5]}

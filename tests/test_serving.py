@@ -111,3 +111,22 @@ def test_decode_engine_matches_lockstep():
             if t + 1 >= len(toks):
                 toks.append(nxt)
     assert got == ref
+
+
+def test_engine_save_load_serves_exact(corpus_and_shards, tmp_path):
+    """Cold start from disk serves the same answers as the built engine.
+
+    NOT marked no_chaos: the snapshot load below walks the verified-read
+    guard scope, so --chaos with $CHAOS_POOL=io arms an on-disk corruption
+    here — and the recovery ladder must hand back the exact same engine.
+    """
+    corpus, shards = corpus_and_shards
+    eng = RetrievalEngine(shards, k=8, deadline_s=5.0)
+    qs = zipf_queries(4, 200)
+    r0 = eng.retrieve_batch(qs)
+    eng.save(str(tmp_path / "engine"))
+    eng2 = RetrievalEngine.load(str(tmp_path / "engine"), mmap=True,
+                                deadline_s=5.0)
+    r1 = eng2.retrieve_batch(qs)
+    np.testing.assert_array_equal(r0.ids, r1.ids)
+    np.testing.assert_array_equal(r0.scores, r1.scores)

@@ -1,0 +1,425 @@
+"""Crash-safe index persistence (PR-7 contract).
+
+Pins the ``sparse.snapshot`` format and its operational guarantees:
+
+* **round-trip** — ``save_device_index`` → ``load_device_index`` is
+  bit-identical for every on-disk array across all five BM25 variants ×
+  {f32, u8} block-max × {mmap, eager}, and a retriever adopting the
+  loaded index serves the exact ScipyBM25 oracle answer.
+* **atomicity** — a kill mid-save (injected ``torn_write``) leaves the
+  PREVIOUS generation committed and loadable; a torn FIRST save yields a
+  typed :class:`SnapshotIntegrityError`, never garbage.
+* **recovery ladder** — each corrupted section is rebuilt exactly from
+  its duplicate replica or the surviving sibling layout; double
+  corruption falls back to the provided corpus; with nothing left the
+  typed error names the corrupt files. Every hop lands in
+  ``snapshot_report`` and the module counters.
+* **cold-start invariants** — ``mmap=True`` loads hand ``np.memmap``
+  views to the uploader; steady-state batches after any load ship ZERO
+  posting bytes; ``host_arrays="drop"`` composes with loads.
+* **engine** — ``RetrievalEngine.save``/``load`` round-trips per-shard
+  runtimes (device and scipy) without rebuilding a layout.
+"""
+
+import json
+import os
+
+import numpy as np
+import pytest
+
+from conftest import make_corpus
+from repro.core import BM25Params, ScipyBM25, build_index, topk_numpy
+from repro.serve import (DeviceRetriever, RetrievalEngine,
+                         RetrievalError, SnapshotIntegrityError,
+                         SnapshotVersionError)
+from repro.serve.faults import inject_faults
+from repro.sparse import snapshot
+from repro.sparse.block_csr import (DeviceIndex, TRANSFERS,
+                                    reset_transfer_stats)
+
+ALL_VARIANTS = ["robertson", "atire", "lucene", "bm25l", "bm25+"]
+
+SMALL = dict(block_size=16, tile=16, frag=8)
+RSMALL = dict(block_size=16, tile=16, acc_block=16, frag=8, q_max=8,
+              gather="resident", plan="device")
+
+pytestmark = pytest.mark.no_chaos      # this module ARMS faults itself
+
+
+def _mk(rng, method, n_vocab=64, n_docs=90):
+    corpus = make_corpus(rng, n_docs=n_docs, n_vocab=n_vocab, max_len=20)
+    return corpus, build_index(corpus, n_vocab,
+                               params=BM25Params(method=method))
+
+
+def _queries(rng, n_vocab, n=3):
+    return [rng.integers(0, n_vocab, size=rng.integers(1, 6)
+                         ).astype(np.int32) for _ in range(n)]
+
+
+def _di(idx, bmax_dtype="f32"):
+    return DeviceIndex.build(idx, with_blocked=True, with_csc=True,
+                             with_bmax=True, bmax_dtype=bmax_dtype,
+                             **SMALL)
+
+
+def _assert_oracle_exact(idx, qs, ids, vals, k):
+    sc = ScipyBM25(idx)
+    for i, q in enumerate(qs):
+        ref = sc.score(q)
+        _, ref_v = topk_numpy(ref[None], k)
+        np.testing.assert_allclose(vals[i], ref_v[0], atol=1e-4)
+        np.testing.assert_allclose(ref[ids[i] - idx.doc_offset], vals[i],
+                                   atol=1e-4)
+
+
+def _gen_dir(path):
+    with open(os.path.join(path, "CURRENT"), encoding="utf-8") as fh:
+        return os.path.join(path, json.load(fh)["generation"])
+
+
+def _flip_byte(fname, offset=5):
+    with open(fname, "r+b") as fh:
+        fh.seek(offset)
+        b = fh.read(1)
+        fh.seek(offset)
+        fh.write(bytes([b[0] ^ 0x10]))
+
+
+# -- round-trip: 5 variants x {f32,u8} bmax x {mmap,eager} -------------------
+
+@pytest.mark.parametrize("method", ALL_VARIANTS)
+@pytest.mark.parametrize("bmax_dtype", ["f32", "u8"])
+@pytest.mark.parametrize("mmap", [False, True])
+def test_roundtrip_bit_identical(method, bmax_dtype, mmap, tmp_path, rng):
+    corpus, idx = _mk(rng, method)
+    di = _di(idx, bmax_dtype)
+    path = str(tmp_path / "snap")
+    di.save(path)
+    ld = DeviceIndex.load(path, mmap=mmap)
+    assert ld.snapshot_report["verified"] and not ld.snapshot_report["hops"]
+    # every persisted array comes back bit-identical
+    np.testing.assert_array_equal(ld.host.indptr, idx.indptr)
+    np.testing.assert_array_equal(ld.host.doc_ids, idx.doc_ids)
+    np.testing.assert_array_equal(ld.host.scores, idx.scores)
+    np.testing.assert_array_equal(ld.host.nonoccurrence, idx.nonoccurrence)
+    np.testing.assert_array_equal(ld.host.doc_lens, idx.doc_lens)
+    for a, b in ((di.csc_doc_ids, ld.csc_doc_ids),
+                 (di.csc_scores, ld.csc_scores),
+                 (di.blk_tok, ld.blk_tok), (di.blk_loc, ld.blk_loc),
+                 (di.blk_sc, ld.blk_sc),
+                 (di.bmax.host, ld.bmax.host),
+                 (di.bmax.scale, ld.bmax.scale)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    assert ld.bmax.quantized == (bmax_dtype == "u8")
+    if mmap:   # cold-start reads postings lazily through the page cache
+        assert isinstance(ld.host.doc_ids.base, np.memmap) \
+            or isinstance(ld.host.doc_ids, np.memmap)
+    # and the adopted retriever serves the exact oracle answer
+    dr = DeviceRetriever(ld.host, regime="auto", device_index=ld,
+                         acc_block=16, q_max=8, gather="resident",
+                         plan="device")
+    qs = _queries(rng, 64)
+    ids, vals = dr.retrieve_batch(qs, 7)
+    _assert_oracle_exact(idx, qs, ids, vals, 7)
+
+
+def test_adopted_retriever_skips_rebuild_and_matches_built(tmp_path, rng):
+    """Loaded runtime == built runtime, bit for bit, with no re-upload."""
+    corpus, idx = _mk(rng, "lucene")
+    dr0 = DeviceRetriever(idx, regime="auto", **RSMALL)
+    qs = _queries(rng, 64)
+    ids0, vals0 = dr0.retrieve_batch(qs, 7)
+    path = str(tmp_path / "snap")
+    dr0.save(path)
+    reset_transfer_stats()
+    ld = DeviceIndex.load(path, mmap=True)
+    uploads_after_load = TRANSFERS.posting_uploads
+    assert uploads_after_load > 0          # the one cold-start upload set
+    dr1 = DeviceRetriever(ld.host, regime="auto", device_index=ld, **RSMALL)
+    assert dr1.dindex is ld                # adopted, not rebuilt
+    assert TRANSFERS.posting_uploads == uploads_after_load
+    ids1, vals1 = dr1.retrieve_batch(qs, 7)
+    np.testing.assert_array_equal(np.asarray(ids0), np.asarray(ids1))
+    np.testing.assert_array_equal(np.asarray(vals0), np.asarray(vals1))
+
+
+def test_steady_state_posting_bytes_zero_after_load(tmp_path, rng):
+    corpus, idx = _mk(rng, "lucene")
+    di = _di(idx)
+    path = str(tmp_path / "snap")
+    di.save(path)
+    ld = DeviceIndex.load(path, mmap=True)
+    dr = DeviceRetriever(ld.host, regime="gathered", device_index=ld,
+                         **RSMALL)
+    qs = _queries(rng, 64)
+    dr.retrieve_batch(qs, 7)               # compile + any lazy residency
+    reset_transfer_stats()
+    for _ in range(3):
+        dr.retrieve_batch(qs, 7)
+    assert TRANSFERS.posting_bytes == 0    # the paper-path invariant holds
+    assert TRANSFERS.descriptor_bytes == 0  # device planner: nothing ships
+
+
+def test_load_drop_composes(tmp_path, rng):
+    corpus, idx = _mk(rng, "lucene")
+    path = str(tmp_path / "snap")
+    _di(idx).save(path)
+    ld = DeviceIndex.load(path, mmap=True, host_arrays="drop")
+    assert ld.host.doc_ids.size == 0 and ld.host.scores.size == 0
+    np.testing.assert_array_equal(ld.host.indptr, idx.indptr)
+    dr = DeviceRetriever(ld.host, regime="gathered", device_index=ld,
+                         acc_block=16, q_max=8)
+    assert dr.plan_mode == "device"        # host paths force-resolved away
+    qs = _queries(rng, 64)
+    ids, vals = dr.retrieve_batch(qs, 7)
+    _assert_oracle_exact(idx, qs, ids, vals, 7)
+
+
+def test_empty_shard_roundtrip(tmp_path, rng):
+    idx = build_index([], 64)
+    path = str(tmp_path / "snap")
+    snapshot.save_index(idx, path, block_size=16, tile=16, frag=8)
+    ld = snapshot.load_index(path, mmap=True)
+    assert ld.doc_lens.size == 0 and int(ld.indptr[-1]) == 0
+    np.testing.assert_array_equal(ld.indptr, idx.indptr)
+    np.testing.assert_array_equal(ld.nonoccurrence, idx.nonoccurrence)
+
+
+def test_host_only_roundtrip_scipy_oracle(tmp_path, rng):
+    corpus, idx = _mk(rng, "bm25+")
+    path = str(tmp_path / "snap")
+    snapshot.save_index(idx, path, block_size=16, tile=16, frag=8)
+    ld = snapshot.load_index(path, mmap=True)
+    q = np.array([3, 9, 40], np.int32)
+    np.testing.assert_array_equal(ScipyBM25(ld).score(q),
+                                  ScipyBM25(idx).score(q))
+
+
+# -- atomicity ----------------------------------------------------------------
+
+def test_torn_write_preserves_previous_generation(tmp_path, rng):
+    corpus, idx = _mk(rng, "lucene")
+    path = str(tmp_path / "snap")
+    di = _di(idx)
+    di.save(path)
+    # second save killed mid-write: every written file is a candidate
+    # victim; the OSError is the simulated kill
+    for seed in range(4):
+        with inject_faults({"site": "snapshot.write", "kind": "torn_write",
+                            "times": 1, "seed": seed,
+                            "guarded": False}) as sp:
+            with pytest.raises(OSError, match="injected"):
+                di.save(path)
+        assert sp[0].fired == 1
+        ld = snapshot.load_index(path)     # previous snapshot, intact
+        assert not ld.snapshot_report["hops"]
+        np.testing.assert_array_equal(ld.doc_ids, idx.doc_ids)
+    # ... and the next clean save commits over the debris
+    di.save(path)
+    assert snapshot.load_index(path).snapshot_report["generation"] \
+        != "gen-000001"
+
+
+def test_torn_first_save_is_typed_not_garbage(tmp_path, rng):
+    corpus, idx = _mk(rng, "lucene")
+    path = str(tmp_path / "fresh")
+    with inject_faults({"site": "snapshot.write", "kind": "torn_write",
+                        "times": 1, "seed": 0, "guarded": False}):
+        with pytest.raises(OSError):
+            snapshot.save_index(idx, path, **SMALL)
+    with pytest.raises(SnapshotIntegrityError):
+        snapshot.load_index(path)
+    with pytest.raises(RetrievalError):    # one base class catches it
+        snapshot.load_index(path)
+
+
+def test_resave_gcs_old_generations(tmp_path, rng):
+    corpus, idx = _mk(rng, "lucene")
+    path = str(tmp_path / "snap")
+    for _ in range(3):
+        snapshot.save_index(idx, path, **SMALL)
+    gens = [d for d in os.listdir(path) if d.startswith("gen-")]
+    assert gens == ["gen-000003"]          # exactly one survivor
+
+
+# -- the recovery ladder, hop by hop -----------------------------------------
+
+def test_recover_small_array_from_dup(tmp_path, rng):
+    corpus, idx = _mk(rng, "lucene")
+    path = str(tmp_path / "snap")
+    snapshot.save_index(idx, path, **SMALL)
+    for name in ("index.indptr", "index.nonoccurrence", "index.doc_lens"):
+        _flip_byte(os.path.join(_gen_dir(path), f"{name}.bin"))
+        ld = snapshot.load_index(path)
+        assert f"{name}<-dup" in ld.snapshot_report["hops"]
+        np.testing.assert_array_equal(ld.indptr, idx.indptr)
+        np.testing.assert_array_equal(ld.doc_lens, idx.doc_lens)
+        snapshot.save_index(idx, path, **SMALL)      # fresh generation
+
+
+def test_recover_csc_from_blocked_and_back(tmp_path, rng):
+    corpus, idx = _mk(rng, "atire")
+    path = str(tmp_path / "snap")
+    snapshot.save_index(idx, path, **SMALL)
+    gen = _gen_dir(path)
+    _flip_byte(os.path.join(gen, "csc.doc_ids.bin"), offset=64)
+    ld = snapshot.load_index(path)
+    assert "csc<-blocked" in ld.snapshot_report["hops"]
+    np.testing.assert_array_equal(ld.doc_ids, idx.doc_ids)
+    np.testing.assert_array_equal(ld.scores, idx.scores)
+    snapshot.save_index(idx, path, **SMALL)
+    gen = _gen_dir(path)
+    _flip_byte(os.path.join(gen, "blocked.sc.bin"), offset=64)
+    ld2 = DeviceIndex.load(path)
+    assert "blocked<-csc" in ld2.snapshot_report["hops"]
+    np.testing.assert_array_equal(ld2.host.doc_ids, idx.doc_ids)
+
+
+def test_recover_bmax_rebuild(tmp_path, rng):
+    corpus, idx = _mk(rng, "lucene")
+    path = str(tmp_path / "snap")
+    _di(idx, "u8").save(path)
+    _flip_byte(os.path.join(_gen_dir(path), "bmax.host.bin"))
+    ld = DeviceIndex.load(path)
+    assert "bmax<-csc" in ld.snapshot_report["hops"]
+    fresh = _di(idx, "u8")
+    np.testing.assert_array_equal(np.asarray(ld.bmax.host),
+                                  np.asarray(fresh.bmax.host))
+    np.testing.assert_array_equal(np.asarray(ld.bmax.scale),
+                                  np.asarray(fresh.bmax.scale))
+
+
+def test_recover_manifest_from_dup(tmp_path, rng):
+    corpus, idx = _mk(rng, "lucene")
+    path = str(tmp_path / "snap")
+    snapshot.save_index(idx, path, **SMALL)
+    _flip_byte(os.path.join(_gen_dir(path), "manifest.json"), offset=40)
+    ld = snapshot.load_index(path)
+    assert "manifest<-dup" in ld.snapshot_report["hops"]
+    np.testing.assert_array_equal(ld.doc_ids, idx.doc_ids)
+
+
+def test_double_corruption_falls_back_to_corpus(tmp_path, rng):
+    """csc AND blocked both gone -> exact rebuild from the corpus."""
+    corpus, idx = _mk(rng, "bm25l")
+    path = str(tmp_path / "snap")
+    snapshot.save_index(idx, path, **SMALL)
+    gen = _gen_dir(path)
+    _flip_byte(os.path.join(gen, "csc.scores.bin"), offset=64)
+    _flip_byte(os.path.join(gen, "blocked.sc.bin"), offset=64)
+    ld = snapshot.load_index(path, corpus=corpus)
+    assert ld.snapshot_report["full_rebuild"]
+    np.testing.assert_array_equal(ld.doc_ids, idx.doc_ids)
+    np.testing.assert_array_equal(ld.scores, idx.scores)
+    np.testing.assert_array_equal(ld.nonoccurrence, idx.nonoccurrence)
+
+
+def test_ladder_dry_raises_typed_with_corrupt_list(tmp_path, rng):
+    corpus, idx = _mk(rng, "lucene")
+    path = str(tmp_path / "snap")
+    snapshot.save_index(idx, path, **SMALL)
+    gen = _gen_dir(path)
+    _flip_byte(os.path.join(gen, "csc.scores.bin"), offset=64)
+    _flip_byte(os.path.join(gen, "blocked.sc.bin"), offset=64)
+    with pytest.raises(SnapshotIntegrityError) as ei:
+        snapshot.load_index(path)          # no corpus -> nothing left
+    assert any("csc" in c or "blocked" in c for c in ei.value.corrupt)
+
+
+def test_stale_version_is_authoritative(tmp_path, rng):
+    corpus, idx = _mk(rng, "lucene")
+    path = str(tmp_path / "snap")
+    snapshot.save_index(idx, path, **SMALL)
+    mpath = os.path.join(_gen_dir(path), "manifest.json")
+    with open(mpath, encoding="utf-8") as fh:
+        m = json.load(fh)
+    m["version"] = snapshot.VERSION + 1
+    del m["manifest_checksum"]
+    m["manifest_checksum"] = snapshot.manifest_checksum(m)
+    with open(mpath, "w", encoding="utf-8") as fh:
+        json.dump(m, fh)
+    # a future version is a typed refusal — the dup (same bytes would be
+    # rewritten by a future writer) must NOT be consulted
+    with pytest.raises(SnapshotVersionError, match="version"):
+        snapshot.load_index(path, corpus=corpus)
+
+
+def test_counters_track_every_hop(tmp_path, rng):
+    corpus, idx = _mk(rng, "lucene")
+    path = str(tmp_path / "snap")
+    snapshot.reset_counters()
+    snapshot.save_index(idx, path, **SMALL)
+    snapshot.load_index(path)
+    _flip_byte(os.path.join(_gen_dir(path), "index.indptr.bin"))
+    snapshot.load_index(path)
+    assert snapshot.COUNTERS["saves"] == 1
+    assert snapshot.COUNTERS["loads"] == 2
+    assert snapshot.COUNTERS["dup_recoveries"] == 1
+
+
+# -- engine save/load ---------------------------------------------------------
+
+@pytest.mark.parametrize("scorer", ["scipy", "auto"])
+def test_engine_roundtrip(scorer, tmp_path, rng):
+    from repro.core import build_sharded_indexes
+    corpus = make_corpus(rng, n_docs=80, n_vocab=64)
+    shards = build_sharded_indexes(corpus, 64, 2, params=BM25Params())
+    opts = dict(RSMALL) if scorer == "auto" else {}
+    eng = RetrievalEngine(shards, k=5, deadline_s=5.0, scorer=scorer,
+                          warmup=False, scorer_opts=opts)
+    qs = _queries(rng, 64, n=4)
+    r0 = eng.retrieve_batch(qs)
+    path = str(tmp_path / "engine")
+    cfg = eng.save(path)
+    assert cfg["n_shards"] == 2
+    eng2 = RetrievalEngine.load(path, mmap=True, warmup=False,
+                                deadline_s=5.0, scorer_opts=opts)
+    assert eng2.k == 5 and eng2.scorer == scorer
+    r1 = eng2.retrieve_batch(qs)
+    np.testing.assert_array_equal(r0.ids, r1.ids)
+    np.testing.assert_array_equal(r0.scores, r1.scores)
+    h = eng2.health()["shards"][0]["snapshot"]
+    if scorer == "auto":
+        assert h["verified"] and h["generation"] == "gen-000001"
+    # a loaded engine still rescales (adoption is first-build-only);
+    # scores stay exact (ids may reorder within tied scores across the
+    # new shard boundaries)
+    eng2.rescale(3)
+    r2 = eng2.retrieve_batch(qs)
+    np.testing.assert_array_equal(r0.scores, r2.scores)
+
+
+def test_engine_load_recovers_shard_from_corpus_slice(tmp_path, rng):
+    from repro.core import build_sharded_indexes
+    corpus = make_corpus(rng, n_docs=80, n_vocab=64)
+    shards = build_sharded_indexes(corpus, 64, 2, params=BM25Params())
+    eng = RetrievalEngine(shards, k=5, deadline_s=5.0, scorer="scipy")
+    qs = _queries(rng, 64, n=4)
+    r0 = eng.retrieve_batch(qs)
+    path = str(tmp_path / "engine")
+    eng.save(path)
+    sdir = os.path.join(path, "shard-0001")
+    gen = _gen_dir(sdir)
+    _flip_byte(os.path.join(gen, "csc.scores.bin"), offset=64)
+    _flip_byte(os.path.join(gen, "blocked.sc.bin"), offset=64)
+    eng2 = RetrievalEngine.load(path, corpus=corpus, deadline_s=5.0)
+    assert eng2.shards[1].snapshot_report["full_rebuild"]
+    r1 = eng2.retrieve_batch(qs)
+    np.testing.assert_array_equal(r0.ids, r1.ids)
+    np.testing.assert_array_equal(r0.scores, r1.scores)
+
+
+def test_engine_store_version_guard(tmp_path, rng):
+    corpus, idx = _mk(rng, "lucene")
+    eng = RetrievalEngine([idx], k=3, scorer="scipy")
+    path = str(tmp_path / "engine")
+    eng.save(path)
+    epath = os.path.join(path, "engine.json")
+    with open(epath, encoding="utf-8") as fh:
+        cfg = json.load(fh)
+    cfg["version"] = 999
+    with open(epath, "w", encoding="utf-8") as fh:
+        json.dump(cfg, fh)
+    with pytest.raises(SnapshotVersionError):
+        RetrievalEngine.load(path)
