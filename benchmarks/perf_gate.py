@@ -1,7 +1,7 @@
-"""CI perf-trend gate over the BENCH_3 planner sweep.
+"""CI perf-trend gate over the BENCH_3 planner sweep and BENCH_6 reorder.
 
-Compares a candidate ``BENCH_3.json`` (PR head) against a baseline run
-(the PR's base ref re-run on the SAME runner, or the committed
+Compares a candidate bench JSON (PR head) against a baseline run of the
+SAME bench (the PR's base ref re-run on the same runner, or the committed
 ``BENCH_baseline.json`` when no base checkout is available) and FAILS the
 job when either:
 
@@ -16,7 +16,16 @@ job when either:
 * the candidate's fault-free degraded-mode cell reports
   ``degradations_per_batch_healthy > 0`` — a healthy baseline that walks
   the fallback ladder is a planner/capability bug being silently
-  absorbed, not fault tolerance working.
+  absorbed, not fault tolerance working, or
+* (BENCH_6 cells) the doc-id-reordering ``skip_rate_gain`` at a fixed
+  cell drops by more than 50% relative to the baseline's gain — the
+  clustering stopped tightening block-max bounds — or a reordered cell
+  ships MORE steady-state transfer bytes than the random-order cell
+  (posting bytes must be equal; descriptor bytes may legitimately shrink
+  under clustering but never grow — the id remap must stay a host gather
+  on the winner board, not a device transfer). Both checks are
+  schema-tolerant: baselines predating BENCH_6 simply have no such
+  columns and are not penalized.
 
 Cells are matched on ``(n_docs, n_vocab, profile, batch, k)``; cells or
 columns present on only one side are reported as ``new``/``dropped`` but
@@ -54,7 +63,9 @@ import sys
 CELL_KEY = ("n_docs", "n_vocab", "profile", "batch", "k")
 
 LATENCY_COLS = ("auto_batch_s", "blocked_batch_s", "gathered_batch_s",
-                "resident_batch_s", "pruned_batch_s")
+                "resident_batch_s", "pruned_batch_s",
+                # BENCH_6 (doc-id reordering) cells
+                "pruned_batch_s_none", "pruned_batch_s_signature")
 
 # (column, human label) pairs that must be exactly zero on the candidate
 RESIDENCY_COLS = (
@@ -75,6 +86,29 @@ RESIDENCY_COLS = (
 # hides it in noise. Fails when candidate < (1 - max drop) × baseline.
 SKIP_RATE_COL = "pruned_skip_rate"
 SKIP_RATE_MAX_DROP = 0.5
+
+# BENCH_6 (doc-id reordering): the skip-rate GAIN over random order is the
+# whole point of the reorder pass — a candidate keeping >50% of the
+# baseline's gain at a fixed cell passes; losing more (or going negative)
+# means the clustering stopped tightening bounds. Same no-noise rationale
+# as the skip-rate gate: the counter is deterministic for a fixed seed.
+GAIN_COL = "skip_rate_gain"
+GAIN_MAX_DROP = 0.5
+
+# BENCH_6 transfer-byte direction: reordered serving must never move MORE
+# bytes than random-order serving (the id remap is a host gather, so any
+# extra device traffic is a leak). Posting bytes must be exactly equal;
+# descriptor bytes may be LOWER under reordering — clustering concentrates
+# each token's postings into fewer blocks, shrinking the fragment table
+# (a legitimate win, e.g. the 50k-doc/batch-4 full cell halves it) — and
+# they are legitimately nonzero under host planning, so the invariant is
+# reordered <= none, not zero
+BYTE_PAIRS = (
+    ("posting_bytes_per_batch_none", "posting_bytes_per_batch_reordered",
+     "posting bytes", "eq"),
+    ("descriptor_bytes_per_batch_none",
+     "descriptor_bytes_per_batch_reordered", "descriptor bytes", "le"),
+)
 
 # healthy-baseline ladder activity (PR-6): the planner sweep runs with no
 # fault injected, so ANY nonzero degradation rate means the entry regime
@@ -151,6 +185,45 @@ def compare(baseline: dict, candidate: dict, *, max_ratio: float = 1.25,
                         f"{SKIP_RATE_MAX_DROP:.0%} drop — the pruning "
                         f"logic stopped cutting work)")
             rows.append(row)
+        if GAIN_COL in cand or GAIN_COL in (base or {}):
+            # like the skip-rate gate: a candidate that stops reporting
+            # the gain counts as gain 0 and trips, never passes vacuously
+            gain = cand.get(GAIN_COL, 0.0)
+            base_gain = (base or {}).get(GAIN_COL)
+            row = {"cell": key, "metric": GAIN_COL, "candidate_s": gain}
+            if base_gain is None:
+                row.update(baseline_s=None, ratio=None, status="new")
+            else:
+                collapsed = (base_gain > 0
+                             and gain < (1.0 - GAIN_MAX_DROP) * base_gain)
+                row.update(baseline_s=base_gain,
+                           ratio=round(gain / max(base_gain, 1e-9), 3),
+                           status="COLLAPSED" if collapsed else "ok")
+                if collapsed:
+                    failures.append(
+                        f"{key} {GAIN_COL}: {base_gain:.4f} -> "
+                        f"{gain:.4f} (reorder gain collapse: >"
+                        f"{GAIN_MAX_DROP:.0%} relative drop — doc-id "
+                        f"clustering stopped tightening the block-max "
+                        f"bounds)")
+            rows.append(row)
+        for none_col, reord_col, label, rel in BYTE_PAIRS:
+            if none_col not in cand and reord_col not in cand:
+                continue
+            b_none = cand.get(none_col, 0)
+            b_reord = cand.get(reord_col, 0)
+            ok = b_reord == b_none if rel == "eq" else b_reord <= b_none
+            rows.append({"cell": key, "metric": reord_col,
+                         "candidate_s": b_reord, "baseline_s": b_none,
+                         "ratio": None,
+                         "status": "ok" if ok else "LEAK"})
+            if not ok:
+                failures.append(
+                    f"{key}: reordered {label} ({b_reord}) "
+                    f"{'!=' if rel == 'eq' else '>'} random-order "
+                    f"{label} ({b_none}) per steady-state batch — the id "
+                    f"remap must stay a host gather, not a device "
+                    f"transfer")
         for col, label in RESIDENCY_COLS:
             bytes_shipped = cand.get(col, 0)
             rows.append({"cell": key, "metric": col,
@@ -164,14 +237,15 @@ def compare(baseline: dict, candidate: dict, *, max_ratio: float = 1.25,
     for key, cell in base_cells.items():
         rows.append({"cell": key, "metric": "-", "candidate_s": None,
                      "baseline_s": None, "ratio": None, "status": "dropped"})
-        if SKIP_RATE_COL in cell:
+        if SKIP_RATE_COL in cell or GAIN_COL in cell:
             # plain latency cells may drift across refs (schema evolution);
-            # a PRUNED cell disappearing wholesale is the silent-disable
-            # path of the skip-rate gate, so it fails like a collapse
+            # a PRUNED/REORDER cell disappearing wholesale is the
+            # silent-disable path of the skip-rate/gain gates, so it fails
+            # like a collapse
             failures.append(
-                f"{key}: pruned cell present in the baseline is missing "
-                f"from the candidate — the skip-rate gate would be "
-                f"vacuous (keep the pruned sweep cells, or refresh the "
+                f"{key}: pruned/reorder cell present in the baseline is "
+                f"missing from the candidate — the skip-rate/gain gate "
+                f"would be vacuous (keep the sweep cells, or refresh the "
                 f"baseline in the PR that intentionally changes them)")
     degraded = candidate.get("degraded") or {}
     if DEGRADED_COL in degraded or DEGRADED_COL in candidate.get(
@@ -207,7 +281,10 @@ def to_markdown(rows: list[dict], failures: list[str], *,
         f"Threshold: fail above {max_ratio:.2f}x per latency cell; any "
         "nonzero resident posting/descriptor bytes fails; a "
         f">{SKIP_RATE_MAX_DROP:.0%} pruned-skip-rate drop at a fixed "
-        "cell fails; any healthy-baseline ladder degradation fails.",
+        f"cell fails; a >{GAIN_MAX_DROP:.0%} relative drop of the "
+        "reorder skip-rate gain fails; reordered transfer bytes must "
+        "not exceed random-order bytes (postings exactly equal); any "
+        "healthy-baseline ladder degradation fails.",
         "",
         "| cell (docs, vocab, profile, B, k) | metric | baseline | "
         "candidate | ratio | status |",

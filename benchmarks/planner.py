@@ -188,6 +188,44 @@ def bench_cell(n_docs: int, n_vocab: int, profile: str, *, batch: int = 8,
     }
 
 
+def bound_tightness(idx, bmax, queries) -> float:
+    """Mean block bound / true block max over visited blocks (≥ 1.0).
+
+    The block-max table's cross-token bound ``Σ_t w_t · bmax[t, b]``
+    assumes every token's per-block maximum lands on the SAME document —
+    with random doc order it rarely does, so bounds run loose and the
+    pruned regime keeps DMA'ing fragments it could skip. This column
+    makes that slack visible per cell: 1.0 is a perfect bound, and
+    build-time doc-id reordering (``sparse.reorder``, BENCH_6) exists to
+    push it down. True per-block maxima come from the exact differential
+    scores (the quantity the table bounds — the nonoccurrence shift is
+    query-constant and cancels).
+    """
+    n_docs = int(idx.doc_lens.size)
+    block_size = int(bmax.block_size)
+    starts = np.arange(0, n_docs, block_size)
+    ratios = []
+    for q in queries:
+        q = np.asarray(q)
+        q = q[(q >= 0) & (q < idx.n_vocab)]
+        if q.size == 0:
+            continue
+        uniq, w = np.unique(q, return_counts=True)
+        ub = (bmax.rows(uniq).astype(np.float64)
+              * w[:, None]).sum(axis=0)                  # [nb_pad]
+        acc = np.zeros(n_docs, dtype=np.float64)
+        for t, wt in zip(uniq, w):
+            s, e = int(idx.indptr[t]), int(idx.indptr[t + 1])
+            np.add.at(acc, idx.doc_ids[s:e], wt * idx.scores[s:e])
+        true = np.maximum.reduceat(acc, starts)          # [nb]
+        ok = true > 0
+        if ok.any():
+            ratios.append(ub[:starts.size][ok] / true[ok])
+    if not ratios:
+        return 1.0
+    return float(np.mean(np.concatenate(ratios)))
+
+
 def bench_pruned_cell(n_docs: int, n_vocab: int, *, profile: str =
                       "head_mixed", batch: int = 2, k: int = 10,
                       block_size: int = 64, avg_len: int = 60,
@@ -280,6 +318,8 @@ def bench_pruned_cell(n_docs: int, n_vocab: int, *, profile: str =
         "frags_skipped_inkernel": int(plan.frags_skipped),
         "frags_dmad": int(dmad),
         "pruned_skip_rate": round(float(skip_rate), 4),
+        "bound_tightness": round(
+            bound_tightness(idx, pruned.dindex.bmax, queries), 3),
         "survivor_frac_estimate": round(float(plan.survivor_frac or 1.0),
                                         4),
         "auto_picked": auto.last_plan.regime,

@@ -1,0 +1,389 @@
+"""BENCH_6 — build-time doc-id reordering: skip rate, latency, exactness.
+
+The block-max pruning evidence in BENCH_4 left 24–37% of planned
+fragments DMA'd at the head_mixed cells: with random doc order a block's
+per-token bound is set by its single hottest document, so the summed
+bound ``Σ_t w_t · bmax[t, b]`` stays loose. ``sparse.reorder`` clusters
+documents by posting signature at build time so similar docs share
+blocks; this bench proves the three claims that ship with it:
+
+1. **Skip rate** — at the BENCH_4 pruned cells (same ``block_size=64``,
+   same head_mixed query distribution), the reordered index's
+   ``pruned_skip_rate`` — averaged over 16 seeded query batches, since a
+   single small batch is seed noise — is strictly above the random-order
+   rate. ``bound_tightness`` (mean bound / true block max, see
+   ``benchmarks.planner``) is reported per cell as a diagnostic; the
+   skip win is threshold-driven, so the MEAN ratio need not move even
+   when far more blocks fall under the per-query threshold.
+2. **Exactness** — top-k vs the ``ScipyBM25`` oracle for ALL FIVE paper
+   variants: client-id boards identical wherever scores are uniquely
+   ordered, and inside bit-equal score ties the returned id provably
+   achieves the tied score (the id CHOICE within an exact tie is
+   unspecified on every path, reordered or not — the device kernels and
+   numpy's argpartition already break ties by internal layout). Scores
+   match the oracle to the same 1e-4 tolerance tier-1 asserts for the
+   unordered device paths (f32 matmul accumulation order differs
+   per-layout; bit-equality holds within a layout, and the permuted
+   board is asserted bit-identical to its OWN resident oracle in
+   tier-1's property tests).
+3. **Build overhead** — the signature pass (sort-free signature
+   extraction + posting permutation) costs a fraction of ``build_index``
+   itself and a small fraction of end-to-end indexing
+   (``build_index`` + ``DeviceIndex.build``; BENCH_1 indexes ~115k
+   docs/s — the pass must not dent that).
+
+A microbench block justifies the default scheme: ``"signature"``
+(top-weight tokens) vs ``"minhash"`` (weight-blind Jaccard clustering)
+at one cell — minhash groups docs sharing ANY token, signature groups
+docs sharing HOT tokens, which is exactly what the bounds sum over.
+
+Written to ``BENCH_6.json`` (``benchmarks.perf_gate`` fails on a >50%
+relative drop of the skip-rate GAIN at a fixed cell):
+
+    PYTHONPATH=src python -m benchmarks.reorder [--fast] [--force]
+"""
+
+from __future__ import annotations
+
+import argparse
+import gc
+import json
+import time
+
+import numpy as np
+
+from benchmarks.planner import _guarded_write, _profile_queries, \
+    bound_tightness
+from repro.core import BM25Params, build_index
+from repro.data.corpus import zipf_corpus
+
+FIVE_VARIANTS = ("robertson", "lucene", "atire", "bm25l", "bm25+")
+
+
+def _check_topk_vs_oracle(idx, ids, vals, queries, k) -> bool:
+    """Tie-aware exactness vs ScipyBM25: every id identical to the
+    oracle's, EXCEPT where the returned id provably achieves the oracle's
+    score at that rank (a tie — possibly straddling the k boundary, where
+    the tie partner sits just outside the returned window). The id CHOICE
+    within a tie is unspecified on every path, reordered or not."""
+    from repro.core.reference import ScipyBM25
+    oracle = ScipyBM25(idx)
+    ids, vals = np.asarray(ids), np.asarray(vals)
+    for b, q in enumerate(queries):
+        oi, ov = oracle.retrieve(q, k)
+        if not np.allclose(ov.astype(np.float32), vals[b], atol=1e-4):
+            return False
+        full = None
+        for j in range(min(k, oi.size)):
+            if int(ids[b, j]) == int(oi[j]):
+                continue
+            if full is None:
+                full = oracle.score(q)
+            if abs(float(full[int(ids[b, j])]) - float(ov[j])) > 2e-4:
+                return False
+    return True
+
+
+def _timed(fn, repeats: int) -> float:
+    fn()                                         # compile/warm
+    t = np.inf
+    for _ in range(repeats):
+        gc.collect()
+        gc.disable()
+        t0 = time.perf_counter()
+        fn()
+        t = min(t, time.perf_counter() - t0)
+        gc.enable()
+    return t
+
+
+# skip rates are averaged over this many seeded query batches per cell:
+# a single 2-4 query batch is seed noise (observed +-0.1 swings at small
+# corpora), 16 batches give a stable mean at every grid scale
+N_SKIP_BATCHES = 16
+
+
+def _avg_skip_rate(r, rng_seeds, n_vocab: int, batch: int, k: int) -> float:
+    rates = []
+    for seed in rng_seeds:
+        rng = np.random.default_rng(seed)
+        q = _profile_queries(rng, "head_mixed", n_vocab, batch, q_len=5)
+        r.retrieve_batch(q, k)
+        p = r.last_plan
+        dmad = p.frags_planned - p.frags_pruned - p.frags_skipped
+        rates.append((p.frags_planned - dmad) / p.frags_planned
+                     if p.frags_planned else 0.0)
+    return float(np.mean(rates))
+
+
+def bench_reorder_cell(n_docs: int, n_vocab: int, *, batch: int = 2,
+                       k: int = 10, block_size: int = 64,
+                       avg_len: int = 60, tile: int = 2048,
+                       repeats: int = 3) -> dict:
+    """One BENCH_4-shaped cell, served random-order vs signature-reordered.
+
+    Both retrievers run the SAME head_mixed query distribution through
+    the pruned regime at the same block size; skip rates are means over
+    ``N_SKIP_BATCHES`` seeded batches. The cell reports both skip rates,
+    the gain, both bound-tightness ratios, pruned latency, per-batch
+    transfer bytes for BOTH orders (the zero-extra-bytes claim: the id
+    remap is one host gather on the ``[B, k]`` board, inside the
+    reordered latency, so posting bytes are byte-equal and descriptor
+    bytes never grow — they SHRINK where clustering drops the fragment
+    count's pow2 bucket), exactness vs the scipy oracle, and the reorder
+    pass overhead relative to ``build_index`` alone and to end-to-end
+    indexing (``build_index`` + ``DeviceIndex.build``).
+    """
+    from repro.serve import PrunedRetriever
+    from repro.sparse.block_csr import TRANSFERS, reset_transfer_stats
+    from repro.sparse.reorder import permute_index, signature_permutation
+
+    corpus = zipf_corpus(n_docs, n_vocab, avg_len=avg_len)
+    t0 = time.perf_counter()
+    idx = build_index(corpus, n_vocab, params=BM25Params())
+    t_index = time.perf_counter() - t0
+
+    t0 = time.perf_counter()
+    perm = signature_permutation(idx, mode="signature")
+    idx_p = permute_index(idx, perm) if perm is not None else idx
+    t_reorder = time.perf_counter() - t0
+
+    rng = np.random.default_rng(3)
+    queries = _profile_queries(rng, "head_mixed", n_vocab, batch, q_len=5)
+
+    t0 = time.perf_counter()
+    plain = PrunedRetriever(idx, block_size=block_size, frag=512, tile=tile)
+    t_device = time.perf_counter() - t0
+    reord = PrunedRetriever(idx, block_size=block_size, frag=512, tile=tile,
+                            reorder="signature")
+    t_plain = _timed(lambda: plain.retrieve_batch(queries, k), repeats)
+    t_reord = _timed(lambda: reord.retrieve_batch(queries, k), repeats)
+
+    seeds = range(N_SKIP_BATCHES)
+    sr_plain = _avg_skip_rate(plain, seeds, n_vocab, batch, k)
+    sr_reord = _avg_skip_rate(reord, seeds, n_vocab, batch, k)
+
+    def batch_bytes(r):
+        reset_transfer_stats()
+        r.retrieve_batch(queries, k)
+        return int(TRANSFERS.posting_bytes), int(TRANSFERS.descriptor_bytes)
+
+    post_none, desc_none = batch_bytes(plain)
+    post_reord, desc_reord = batch_bytes(reord)
+
+    ids, vals = reord.retrieve_batch(queries, k)
+    exact = _check_topk_vs_oracle(idx, ids, vals, queries, k)
+
+    return {
+        "n_docs": n_docs, "n_vocab": n_vocab, "batch": batch, "k": k,
+        "profile": "head_mixed", "block_size": block_size,
+        "nnz": int(idx.nnz),
+        "skip_rate_batches": N_SKIP_BATCHES,
+        "pruned_skip_rate_none": round(float(sr_plain), 4),
+        "pruned_skip_rate_signature": round(float(sr_reord), 4),
+        "skip_rate_gain": round(float(sr_reord - sr_plain), 4),
+        "bound_tightness_none": round(
+            bound_tightness(idx, plain.dindex.bmax, queries), 3),
+        "bound_tightness_signature": round(
+            bound_tightness(idx_p, reord.dindex.bmax, queries), 3),
+        "pruned_batch_s_none": round(t_plain, 4),
+        "pruned_batch_s_signature": round(t_reord, 4),
+        "index_build_s": round(t_index, 4),
+        "reorder_pass_s": round(t_reorder, 4),
+        "reorder_overhead_frac": round(t_reorder / max(t_index, 1e-9), 4),
+        "reorder_overhead_frac_e2e": round(
+            t_reorder / max(t_index + t_device, 1e-9), 4),
+        "topk_exact_vs_oracle": bool(exact),
+        "posting_bytes_per_batch_none": post_none,
+        "posting_bytes_per_batch_reordered": post_reord,
+        "descriptor_bytes_per_batch_none": desc_none,
+        "descriptor_bytes_per_batch_reordered": desc_reord,
+    }
+
+
+def bench_variants(n_docs: int, n_vocab: int, *, batch: int = 4,
+                   k: int = 10, block_size: int = 64,
+                   avg_len: int = 60, tile: int = 2048) -> dict:
+    """Exactness sweep: reordered pruned top-k vs the oracle, per variant."""
+    from repro.serve import PrunedRetriever
+
+    corpus = zipf_corpus(n_docs, n_vocab, avg_len=avg_len)
+    rng = np.random.default_rng(7)
+    queries = _profile_queries(rng, "head_mixed", n_vocab, batch, q_len=5)
+    queries.append(np.zeros(0, np.int32))        # empty query edge case
+    out = {}
+    for variant in FIVE_VARIANTS:
+        idx = build_index(corpus, n_vocab,
+                          params=BM25Params(method=variant))
+        r = PrunedRetriever(idx, block_size=block_size, frag=512,
+                            tile=tile, reorder="signature")
+        ids, vals = r.retrieve_batch(queries, k)
+        out[variant] = _check_topk_vs_oracle(idx, ids, vals, queries, k)
+    return out
+
+
+def bench_schemes(n_docs: int, n_vocab: int, *, batch: int = 2,
+                  k: int = 10, block_size: int = 64, avg_len: int = 60,
+                  tile: int = 2048) -> dict:
+    """Microbench: signature vs minhash — skip rate and pass cost.
+
+    Justifies the ``"signature"`` default: the top-weight sort clusters
+    on exactly the per-token maxima the bounds sum over, minhash on raw
+    token-set overlap.
+    """
+    from repro.serve import PrunedRetriever
+    from repro.sparse.reorder import signature_permutation
+
+    corpus = zipf_corpus(n_docs, n_vocab, avg_len=avg_len)
+    idx = build_index(corpus, n_vocab, params=BM25Params())
+    out = {}
+    for mode in ("none", "signature", "minhash"):
+        t0 = time.perf_counter()
+        signature_permutation(idx, mode=mode)
+        t_pass = time.perf_counter() - t0
+        r = PrunedRetriever(idx, block_size=block_size, frag=512,
+                            tile=tile, reorder=mode)
+        sr = _avg_skip_rate(r, range(N_SKIP_BATCHES), n_vocab, batch, k)
+        out[mode] = {
+            "pruned_skip_rate": round(sr, 4),
+            "perm_pass_s": round(t_pass, 4),
+        }
+    return out
+
+
+def snapshot_roundtrip(n_docs: int = 2_000, n_vocab: int = 3_000, *,
+                       block_size: int = 64, tile: int = 2048) -> dict:
+    """Save → corrupt perm (+ its replica) → load recovers EXACTLY.
+
+    The acceptance demo for the perm recovery rung: with both perm
+    copies gone the loader recomputes the signature permutation from the
+    client-order postings, verifies it against the manifest checksum,
+    and serves identical results.
+    """
+    import os
+    import shutil
+    import tempfile
+
+    from repro.serve import PrunedRetriever
+    from repro.sparse import snapshot
+    from repro.sparse.block_csr import DeviceIndex
+
+    corpus = zipf_corpus(n_docs, n_vocab, avg_len=40)
+    idx = build_index(corpus, n_vocab, params=BM25Params())
+    rng = np.random.default_rng(11)
+    queries = _profile_queries(rng, "head_mixed", n_vocab, 4, q_len=5)
+    r = PrunedRetriever(idx, block_size=block_size, frag=512, tile=tile,
+                        reorder="signature")
+    want_ids, want_vals = r.retrieve_batch(queries, 10)
+
+    path = tempfile.mkdtemp(prefix="bench6-snap-")
+    try:
+        r.save(path)
+        with open(os.path.join(path, "CURRENT")) as fh:
+            gen = json.load(fh)["generation"]
+        for name in ("perm.bin", "perm.dup.bin"):
+            f = os.path.join(path, gen, name)
+            with open(f, "r+b") as fh:
+                fh.seek(8)
+                b = fh.read(1)
+                fh.seek(8)
+                fh.write(bytes([b[0] ^ 0xFF]))
+        di = DeviceIndex.load(path)
+        hops = list(di.snapshot_report["hops"])
+        r2 = PrunedRetriever(None, block_size=block_size, frag=512,
+                             tile=tile, device_index=di)
+        got_ids, got_vals = r2.retrieve_batch(queries, 10)
+        exact = (np.array_equal(np.asarray(want_ids), np.asarray(got_ids))
+                 and np.array_equal(np.asarray(want_vals),
+                                    np.asarray(got_vals)))
+        return {"recovery_hops": hops, "recovered_exactly": bool(exact),
+                "loads_counted": int(snapshot.COUNTERS["loads"] > 0)}
+    finally:
+        shutil.rmtree(path, ignore_errors=True)
+
+
+def run(*, fast: bool = False) -> dict:
+    if fast:
+        # 8k docs is the smallest corpus where the averaged gain is
+        # reliably positive (at 3k docs / 47 blocks even the 16-batch
+        # mean is seed noise); still CI-smoke cheap
+        grid = [(8_000, 8_000, 2, 10), (8_000, 8_000, 4, 10)]
+        scheme_cell = (8_000, 8_000)
+        variant_cell = (2_000, 3_000)
+    else:
+        grid = [(20_000, 10_000, 2, 10), (50_000, 10_000, 2, 10),
+                (50_000, 10_000, 4, 10), (50_000, 10_000, 2, 4)]
+        scheme_cell = (20_000, 10_000)
+        variant_cell = (10_000, 8_000)
+    cells = [bench_reorder_cell(n, v, batch=b, k=k,
+                                repeats=3 if n >= 20_000 else 6)
+             for n, v, b, k in grid]
+    schemes = bench_schemes(*scheme_cell)
+    variants = bench_variants(*variant_cell)
+    roundtrip = snapshot_roundtrip()
+    return {
+        "cells": cells,
+        "schemes": schemes,
+        "variants_topk_exact": variants,
+        "snapshot_roundtrip": roundtrip,
+        "summary": {
+            "skip_rate_gains": [c["skip_rate_gain"] for c in cells],
+            "reordered_above_random_everywhere": all(
+                c["pruned_skip_rate_signature"]
+                > c["pruned_skip_rate_none"] for c in cells),
+            "topk_exact_all_cells": all(
+                c["topk_exact_vs_oracle"] for c in cells),
+            "topk_exact_all_variants": all(variants.values()),
+            "max_reorder_overhead_frac": max(
+                c["reorder_overhead_frac"] for c in cells),
+            "max_reorder_overhead_frac_e2e": max(
+                c["reorder_overhead_frac_e2e"] for c in cells),
+            # the remap is a host gather: reordered serving never ships
+            # MORE bytes than random order — postings are byte-equal
+            # (zero resident), and the descriptor table can only shrink
+            # (clustering concentrates each token's postings into fewer
+            # blocks, so the fragment count — and its pow2 bucket — drops
+            # at some cells; e.g. 50k docs / batch 4 halves it)
+            "reordered_bytes_le_none": all(
+                c["posting_bytes_per_batch_reordered"]
+                == c["posting_bytes_per_batch_none"]
+                and c["descriptor_bytes_per_batch_reordered"]
+                <= c["descriptor_bytes_per_batch_none"]
+                for c in cells),
+            "snapshot_roundtrip_exact":
+                roundtrip["recovered_exactly"],
+            "note": "CPU wall times (Pallas kernels in interpret mode) — "
+                    "compare skip rates and relative latency, not "
+                    "absolute seconds. Exactness contract: ids identical "
+                    "to the scipy oracle except inside bit-equal score "
+                    "ties, where the returned id provably achieves the "
+                    "tied score; scores within 1e-4 (the tier-1 device "
+                    "tolerance).",
+        },
+    }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="tiny corpora (CI bench-smoke sized)")
+    ap.add_argument("--force", action="store_true",
+                    help="allow a --fast run to overwrite a full-scale "
+                         "artifact")
+    ap.add_argument("--out", default="BENCH_6.json")
+    args = ap.parse_args()
+    t0 = time.time()
+    result = run(fast=args.fast)
+    for c in result["cells"]:
+        print("bench6_reorder," + ",".join(f"{k}={v}"
+                                           for k, v in c.items()),
+              flush=True)
+    print("bench6_schemes," + json.dumps(result["schemes"]))
+    print("bench6_summary," + ",".join(
+        f"{k}={v}" for k, v in result["summary"].items()))
+    _guarded_write(args.out, result, fast=args.fast, force=args.force)
+    print(f"done in {time.time() - t0:.1f}s -> {args.out}")
+
+
+if __name__ == "__main__":
+    main()

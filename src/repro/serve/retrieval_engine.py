@@ -219,7 +219,8 @@ class DeviceRetriever(_DeviceRetrieverBase):
                  crossover: float | None = None, gather: str | None = None,
                  plan: str | None = None, double_buffer: bool = True,
                  host_arrays: str = "keep", run_cache: int = 256,
-                 bmax_dtype: str = "auto", reuse_from=None,
+                 bmax_dtype: str = "auto", reorder: str = "none",
+                 reuse_from=None,
                  device_index=None, on_fault: str = "degrade"):
         from ..sparse.block_csr import DeviceIndex, PostingRunCache
         if regime not in ("auto", "blocked", "gathered", "pruned"):
@@ -304,8 +305,18 @@ class DeviceRetriever(_DeviceRetrieverBase):
                 with_blocked=regime in ("auto", "blocked"),
                 with_csc=with_csc,
                 with_bmax=with_csc and regime in ("auto", "pruned"),
-                bmax_dtype=bmax_dtype,
+                bmax_dtype=bmax_dtype, reorder=reorder,
                 host_arrays=host_arrays, reuse_from=reuse_from)
+        if getattr(self.dindex, "perm", None) is not None \
+                and self.dindex.host is not None:
+            # doc-id reordering: serve in the PERMUTED id space end to
+            # end — host fragment planning, the host-gather rung and the
+            # oracle rung all read the permuted host copy, so EVERY
+            # ladder hop yields permuted local ids and one host-side
+            # gather at the merge maps winners back to client ids (the
+            # survivor estimate in retrieve_batch thereby consumes the
+            # permuted block-max table and matching fragment plans)
+            self.index = self.dindex.host
         self._nf_state = {}                      # steady-state nf bucket
         self.on_fault = on_fault
         # observability: ladder + sanitizer counters feeding engine health()
@@ -316,10 +327,14 @@ class DeviceRetriever(_DeviceRetrieverBase):
         self.batches_degraded = 0
         self.last_queries: list[np.ndarray] = []
         self._oracle = None                      # lazy ScipyBM25 (last rung)
-        if host_arrays == "drop":
+        if (host_arrays == "drop"
+                and getattr(self.dindex, "perm", None) is None):
             # serving now reads only metadata: release the O(nnz) host
             # posting copy (a private stripped view — the caller's index
-            # object is untouched)
+            # object is untouched). Under reordering ``self.index`` is
+            # already the builder's stripped PERMUTED metadata copy —
+            # re-stripping from the client-order ctor index would hand
+            # the merge the wrong doc_lens order.
             from dataclasses import replace
             self.index = replace(index, doc_ids=np.zeros(0, np.int32),
                                  scores=np.zeros(0, np.float32))
@@ -521,8 +536,15 @@ class DeviceRetriever(_DeviceRetrieverBase):
                     key = f"{t['from']}->{t['to']}"
                     self.degradation_counts[key] = \
                         self.degradation_counts.get(key, 0) + 1
-            return (np.asarray(ids)[:b].astype(np.int64)
-                    + self.index.doc_offset, board)
+            ids = np.asarray(ids)[:b].astype(np.int64)
+            perm = getattr(self.dindex, "perm", None)
+            if perm is not None:
+                # doc-id reordering: every hop scored in the permuted id
+                # space — ONE host-side gather on the [B, k] board maps
+                # winners back to client ids (zero extra device bytes)
+                from ..sparse.reorder import remap_board
+                ids = remap_board(ids, board, perm)
+            return (ids + self.index.doc_offset, board)
         raise RetrievalError(
             f"every ladder hop failed or is unavailable (entry "
             f"{entry!r}, degradations {trail!r})") from last_err
@@ -1072,7 +1094,16 @@ class RetrievalEngine:
                                                 host_arrays=host_arrays,
                                                 verify=verify,
                                                 corpus=corpus)
-                shards.append(di.host)
+                host = di.host
+                perm = getattr(di, "perm", None)
+                if perm is not None and host is not None:
+                    # engine shards stay in CLIENT doc order — rescale's
+                    # reshard_index and the shard-reuse keys operate on
+                    # global client ids; the adopted DeviceIndex keeps
+                    # its permuted host for the retriever
+                    from ..sparse.reorder import unpermute_index
+                    host = unpermute_index(host, perm)
+                shards.append(host)
                 dis.append(di)
         return cls(shards, scorer=scorer,
                    device_indexes=dis if dis else None, **opts)

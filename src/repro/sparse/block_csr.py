@@ -722,6 +722,13 @@ def estimate_prune_survivors(bmax: BlockMaxTable, uniq_tab: np.ndarray,
     execution path reuses the bounds so the matmul is paid once per batch
     (device planning recomputes them on device and callers skip this
     estimate unless the auto cost model needs it).
+
+    Under doc-id reordering (``DeviceIndex.build(reorder=...)``) the
+    caller MUST pass the block-max table built on the PERMUTED order —
+    the retriever hands over ``self.dindex.bmax``, which is exactly that
+    table, and reuses the returned ``ub`` for fragment plans drawn from
+    the permuted host copy, so estimate, bounds and plans share one id
+    space (a client-order table here would mis-bound every block).
     """
     ub = block_upper_bounds(bmax, uniq_tab, weights)
     b = weights.shape[1]
@@ -873,6 +880,12 @@ class DeviceIndex:
     bmax: object = None          # BlockMaxTable (pruned regime) or None
     reused: dict = None          # which layouts a rescale build recycled
     snapshot_report: dict = None  # set by sparse.snapshot loads (health())
+    # build-time doc-id reordering (sparse.reorder): ``perm[new] = old``
+    # client id, or None when the layouts keep the client order. ``host``
+    # and every resident layout live in the PERMUTED id space; retrievers
+    # gather ``perm`` over the winner board at the merge.
+    perm: np.ndarray = None      # [n_docs] int32 new_id -> old_id, or None
+    reorder: str = "none"        # the scheme that produced ``perm``
 
     @staticmethod
     def _postings_identical(a, b) -> bool:
@@ -889,8 +902,19 @@ class DeviceIndex:
               with_csc: bool = True, with_bmax: bool | None = None,
               bmax_dtype: str = "auto",
               host_arrays: str = "keep",
+              reorder: str = "none",
               reuse_from: "DeviceIndex | None" = None) -> "DeviceIndex":
         """Upload a shard's resident layouts, recycling ``reuse_from``'s.
+
+        ``reorder`` (``"none"`` | ``"signature"`` | ``"minhash"``) runs the
+        build-time doc-id clustering pass (``sparse.reorder``): documents
+        are re-numbered so similar posting signatures share doc blocks,
+        which tightens the block-max bounds and raises pruned-regime skip
+        rates. Every layout below — CSC, blocked, block-max — is then
+        built on the PERMUTED order in the same one-lexsort pass the
+        builder already uses; ``di.perm`` carries the ``new -> old`` map
+        retrievers gather over the winner board at the merge. Exactness
+        is untouched: scores travel with their postings bit-for-bit.
 
         ``reuse_from`` is the incremental re-blocking path for elastic
         rescales: when the new shard's posting bytes are identical to the
@@ -900,12 +924,20 @@ class DeviceIndex:
         whenever the block grid still matches (same ``block_size`` and
         block count) — no host-side re-blocking, no re-upload, zero
         posting bytes shipped. ``di.reused`` records which layouts were
-        recycled (the engine surfaces it as ``blockmax_reused``).
+        recycled (the engine surfaces it as ``blockmax_reused``). A
+        donor whose PERMUTATION differs (reordered vs. unordered, or a
+        different clustering) is never adopted — its layouts index a
+        different doc space.
         """
+        from .reorder import (permutations_equal, permute_index,
+                              signature_permutation)
         if host_arrays not in ("keep", "drop"):
             raise ValueError(f"unknown host_arrays mode {host_arrays!r}")
         if with_bmax is None:
             with_bmax = with_csc
+        perm = signature_permutation(index, mode=reorder)
+        if perm is not None:
+            index = permute_index(index, perm)
         nnz = int(index.doc_ids.size)
         n_docs = int(index.doc_lens.size)
         di = DeviceIndex(
@@ -913,11 +945,13 @@ class DeviceIndex:
             nnz=nnz, n_docs=n_docs,
             n_vocab=int(index.n_vocab), doc_offset=int(index.doc_offset),
             block_size=block_size, tile_p=tile, frag=frag,
-            reused={"csc": False, "blocked": False, "bmax": False})
+            reused={"csc": False, "blocked": False, "bmax": False},
+            perm=perm, reorder=reorder)
         old = reuse_from
         same_postings = (
             old is not None and old.host is not None
             and old.block_size == block_size and old.frag == frag
+            and permutations_equal(perm, old.perm)
             and DeviceIndex._postings_identical(index, old.host))
         # the blocked layout and the block-max table additionally depend on
         # the block GRID — a doc-count change through trailing empty docs
@@ -969,7 +1003,16 @@ class DeviceIndex:
                 di.bmax = build_block_max(index, block_size=block_size,
                                           dtype=bmax_dtype)
         if host_arrays == "drop":
-            di.host = None               # serving must never read it again
+            if perm is not None:
+                # keep a posting-free PERMUTED metadata copy: retrievers
+                # and snapshot saves need doc_lens in the layouts' id
+                # space (the O(nnz) arrays are still released)
+                from dataclasses import replace as _replace
+                di.host = _replace(
+                    index, doc_ids=np.zeros(0, np.int32),
+                    scores=np.zeros(0, np.float32))
+            else:
+                di.host = None           # serving must never read it again
         return di
 
     def sum_df(self, uniq_tokens: np.ndarray) -> int:

@@ -7,8 +7,8 @@ must cost a file read, not a full tokenize+build. This module gives
 brought to in-request faults: typed errors, exact recovery, deterministic
 injection.
 
-On-disk format (version 1)
---------------------------
+On-disk format (version 2; version-1 stores still load)
+--------------------------------------------------------
 
 A snapshot is a DIRECTORY; each save writes a fresh *generation* and
 commits it with one atomic pointer flip::
@@ -22,6 +22,7 @@ commits it with one atomic pointer flip::
         index.doc_lens.bin    # [n_docs] <i4 (+ .dup.bin)
         csc.doc_ids.bin       # [1, nnz_pad] <i4 — upload-ready padded CSC
         csc.scores.bin        # [1, nnz_pad] <f4
+        perm.bin              # [n_docs] <i4 (+ .dup.bin) — v2, reordered
         blocked.tok.bin       # [nb, p_pad] <i4   (optional section)
         blocked.loc.bin       # [nb, p_pad] <i4
         blocked.sc.bin        # [nb, p_pad] <f4
@@ -37,6 +38,19 @@ maps). The manifest records dtype/shape/byte-count and a per-array
 checksum (xxh3_64 when ``xxhash`` is importable, crc32 otherwise — the
 algorithm is recorded, never guessed) plus a checksum over its own
 canonical JSON.
+
+Doc-id reordering (version 2): an index built with
+``DeviceIndex.build(reorder=...)`` (``sparse.reorder``) serves its
+layouts in a PERMUTED doc-id space. On disk the ``index.*`` and
+``csc.*`` sections always stay in CLIENT order — the order ``load_index``
+hands back and the corpus rebuild rung reproduces — while ``blocked.*``
+and ``bmax.*`` stay in the layout (permuted) order they are uploaded in.
+The permutation itself is the ``perm`` array (``new_id -> old_id``, with
+a ``.dup`` replica), and the manifest's device section records the
+``reorder`` mode. Reordered device loads therefore pay one host-side
+lexsort to re-permute the CSC before upload; unordered snapshots (the
+default) keep the straight-from-memmap upload path. Version-1 stores
+have no ``perm`` entry and load exactly as before.
 
 Atomic write path
 -----------------
@@ -61,7 +75,12 @@ Verification failures walk, in order, and record every hop:
    postings, so either rebuilds the other bit-exactly (``indptr`` comes
    back from blocked token counts, ``nonoccurrence`` is recomputed from
    df + params with ``build_index``'s exact f64→f32 formula, the
-   block-max table rebuilds from the CSC arrays).
+   block-max table rebuilds from the CSC arrays; a corrupt ``perm`` is
+   recomputed from the client-order postings — the signature pass is a
+   deterministic function of the index — and accepted only when its bytes
+   reproduce the manifest checksum, else the load falls back to IDENTITY
+   order and rebuilds the permuted layouts from the client-order CSC:
+   exact either way, the fallback merely forfeits the reorder speedup).
 3. **full rebuild from a provided ``corpus=``** — when both posting
    copies are gone.
 4. **typed raise** — :class:`~..serve.errors.SnapshotIntegrityError`
@@ -109,9 +128,10 @@ from .block_csr import (
 )
 
 FORMAT = "repro-bm25s-snapshot"
-VERSION = 1
+VERSION = 2
 _CHUNK = 1 << 22            # checksum/read granularity (4 MiB)
-_DUP_ARRAYS = ("index.indptr", "index.nonoccurrence", "index.doc_lens")
+_DUP_ARRAYS = ("index.indptr", "index.nonoccurrence", "index.doc_lens",
+               "perm")
 
 # load/save observability (mirrors faults.FIRED's role for the I/O lane)
 COUNTERS = {
@@ -314,7 +334,7 @@ def _padded_csc(index, frag: int) -> tuple[np.ndarray, np.ndarray]:
 
 def _manifest_body(index, *, block_size: int, tile_p: int, frag: int,
                    nnz: int, nnz_pad: int, with_blocked: bool,
-                   bmax_meta: dict | None) -> dict:
+                   bmax_meta: dict | None, reorder: str = "none") -> dict:
     # exactness proof computed at SAVE time: the nonoccurrence<-recompute
     # recovery hop replays build_index's formula from the LOCAL df/n_docs,
     # which diverges for shards built with global stats — the hop is
@@ -339,6 +359,7 @@ def _manifest_body(index, *, block_size: int, tile_p: int, frag: int,
             "block_size": int(block_size), "tile_p": int(tile_p),
             "frag": int(frag), "nnz": int(nnz), "nnz_pad": int(nnz_pad),
             "with_blocked": bool(with_blocked), "bmax": bmax_meta,
+            "reorder": str(reorder),
         },
     }
 
@@ -346,8 +367,12 @@ def _manifest_body(index, *, block_size: int, tile_p: int, frag: int,
 def save_device_index(di: DeviceIndex, path: str, *, index=None,
                       algo: str | None = None) -> dict:
     """Snapshot a DeviceIndex's layouts (host copies preferred, device
-    copies downloaded when the host side was dropped). Returns the
-    committed manifest."""
+    copies downloaded when the host side was dropped). For a DeviceIndex
+    built with ``reorder=``, the passed ``index`` is the PERMUTED serving
+    copy (``di.host``): the ``index.*``/``csc.*`` sections are unpermuted
+    back to CLIENT order on the way out, ``blocked.*``/``bmax.*`` keep
+    the layout order they serve in, and the ``perm`` array (+ ``.dup``)
+    joins the store. Returns the committed manifest."""
     index = index if index is not None else di.host
     if index is None:
         raise ValueError(
@@ -355,33 +380,52 @@ def save_device_index(di: DeviceIndex, path: str, *, index=None,
             "built with host_arrays='drop' — pass the retriever's stripped "
             "index via index=")
     algo = algo or default_algo()
+    perm = getattr(di, "perm", None)
+    reorder = getattr(di, "reorder", "none") if perm is not None else "none"
     nnz = int(index.indptr[-1])
     host_intact = int(index.doc_ids.size) == nnz
-    if di.csc_doc_ids is not None:
-        doc_pad = np.asarray(di.csc_doc_ids)
-        sc_pad = np.asarray(di.csc_scores)
-    elif host_intact:
-        doc_pad, sc_pad = _padded_csc(index, di.frag)
+    # one full posting copy in the LAYOUT (permuted) order
+    if host_intact:
+        index_l = index
+    elif di.csc_doc_ids is not None:
+        index_l = replace(index,
+                          doc_ids=np.asarray(di.csc_doc_ids)[0, :nnz],
+                          scores=np.asarray(di.csc_scores)[0, :nnz])
     else:
         raise ValueError("no intact posting copy to snapshot (host arrays "
                          "stripped and no resident CSC layout)")
+    if perm is not None:
+        # disk keeps index.*/csc.* in CLIENT order — load_index returns
+        # client ids untouched, the corpus rebuild rung reproduces the
+        # files bit-exactly, and a lost perm stays recomputable
+        from .reorder import unpermute_index
+        index_c = unpermute_index(index_l, perm)
+    else:
+        index_c = index_l
+    if di.csc_doc_ids is not None and perm is None:
+        doc_pad = np.asarray(di.csc_doc_ids)
+        sc_pad = np.asarray(di.csc_scores)
+    else:
+        doc_pad, sc_pad = _padded_csc(index_c, di.frag)
     if di.blk_tok is not None:
         blk = (np.asarray(di.blk_tok), np.asarray(di.blk_loc),
                np.asarray(di.blk_sc))
     elif host_intact:
-        bp = block_postings_from_index(index, block_size=di.block_size,
+        bp = block_postings_from_index(index_l, block_size=di.block_size,
                                        tile=di.tile_p)
         blk = (bp.token_ids, bp.local_doc, bp.scores)
     else:
         blk = None
     bmax_meta = None
     arrays = {
-        "index.indptr": index.indptr,
-        "index.nonoccurrence": index.nonoccurrence,
-        "index.doc_lens": index.doc_lens,
+        "index.indptr": index_c.indptr,
+        "index.nonoccurrence": index_c.nonoccurrence,
+        "index.doc_lens": index_c.doc_lens,
         "csc.doc_ids": doc_pad,
         "csc.scores": sc_pad,
     }
+    if perm is not None:
+        arrays["perm"] = np.asarray(perm).astype(np.int32)
     if blk is not None:
         arrays["blocked.tok"], arrays["blocked.loc"], arrays["blocked.sc"] \
             = blk
@@ -392,10 +436,11 @@ def save_device_index(di: DeviceIndex, path: str, *, index=None,
                      "over_budget": bool(bm.over_budget)}
         arrays["bmax.host"] = bm.host
         arrays["bmax.scale"] = bm.scale
-    body = _manifest_body(index, block_size=di.block_size, tile_p=di.tile_p,
-                          frag=di.frag, nnz=nnz,
+    body = _manifest_body(index_c, block_size=di.block_size,
+                          tile_p=di.tile_p, frag=di.frag, nnz=nnz,
                           nnz_pad=int(doc_pad.shape[1]),
-                          with_blocked=blk is not None, bmax_meta=bmax_meta)
+                          with_blocked=blk is not None, bmax_meta=bmax_meta,
+                          reorder=reorder)
     return _write_generation(path, arrays, body, algo)
 
 
@@ -503,14 +548,18 @@ def _indptr_from_blocked(blk_tok: np.ndarray, n_vocab: int) -> np.ndarray:
 
 
 def _csc_from_blocked(blk_tok, blk_loc, blk_sc, *, block_size: int,
-                      nnz: int, nnz_pad: int):
+                      nnz: int, nnz_pad: int, perm=None):
     """Bit-exact CSC posting arrays back out of the blocked layout.
 
     Blocked holds the same (token, doc, score) triples; a stable lexsort
     by (token, doc) restores the CSC invariant exactly, so the recovered
-    stream is byte-identical to what was lost. Returns padded
-    ``[1, nnz_pad]`` arrays, or None when the posting counts disagree
-    (an internally inconsistent donor — fall through to corpus rebuild).
+    stream is byte-identical to what was lost. For a reordered snapshot
+    the blocked layout lives in the PERMUTED id space while the CSC
+    section is stored in client order — ``perm`` maps each recovered doc
+    id back before the sort, keeping the recovery bit-exact. Returns
+    padded ``[1, nnz_pad]`` arrays, or None when the posting counts
+    disagree (an internally inconsistent donor — fall through to corpus
+    rebuild).
     """
     mask = blk_tok >= 0
     t = blk_tok[mask].astype(np.int64)
@@ -519,6 +568,8 @@ def _csc_from_blocked(blk_tok, blk_loc, blk_sc, *, block_size: int,
     blk_of = np.broadcast_to(
         np.arange(blk_tok.shape[0], dtype=np.int64)[:, None], blk_tok.shape)
     d = (blk_of * block_size + blk_loc)[mask]
+    if perm is not None:
+        d = np.asarray(perm).astype(np.int64)[d]
     s = blk_sc[mask]
     order = np.lexsort((d, t))
     doc_pad = np.zeros((1, nnz_pad), np.int32)
@@ -555,6 +606,9 @@ class _Loaded:
     manifest: dict
     report: dict
     full_rebuild: bool
+    perm: np.ndarray | None = None  # new_id -> old_id (index stays CLIENT
+    #                                 order; device loads re-permute)
+    reorder: str = "none"           # manifest's recorded reorder mode
 
 
 def _read_snapshot(path: str, *, mmap: bool, verify: bool,
@@ -620,6 +674,22 @@ def _read_snapshot(path: str, *, mmap: bool, verify: bool,
     recovered: dict[str, str] = {}
     full = False
 
+    # -- perm, stage 1 (v2 reordered stores): file-level resolution.
+    # blocked.*/bmax.* live in the PERMUTED doc space, index.*/csc.* in
+    # client order — cross-layout recovery below needs the map between
+    # them, so resolve the perm file (primary, then its .dup, both already
+    # folded into usable/bad) before any posting rung runs.
+    from .reorder import is_permutation, signature_permutation
+    perm_present = "perm" in arrays
+    perm_arr = None
+    perm_file_ok = False
+    if perm_present and "perm" not in bad:
+        cand = np.asarray(arr("perm"))
+        if is_permutation(cand, n_docs):
+            perm_arr, perm_file_ok = cand.astype(np.int32), True
+        else:
+            bad.add("perm")     # invalid bytes slipped past verify=False
+
     blk = None
     if blocked_ok:
         blk = (arr("blocked.tok"), arr("blocked.loc"), arr("blocked.sc"))
@@ -636,9 +706,13 @@ def _read_snapshot(path: str, *, mmap: bool, verify: bool,
     csc_doc = csc_sc = None
     if csc_ok:
         csc_doc, csc_sc = arr("csc.doc_ids"), arr("csc.scores")
-    elif blocked_ok and not full:
+    elif blocked_ok and not full and (perm_file_ok or not perm_present):
+        # a reordered snapshot's blocked layout holds PERMUTED doc ids —
+        # without a trustworthy perm the client-order CSC can't come back
+        # from it (and the perm recompute rung needs the CSC), so that
+        # double corruption falls through to the corpus rung
         rebuilt = _csc_from_blocked(*blk, block_size=block_size, nnz=nnz,
-                                    nnz_pad=nnz_pad)
+                                    nnz_pad=nnz_pad, perm=perm_arr)
         if rebuilt is None:
             full = True
         else:
@@ -690,7 +764,8 @@ def _read_snapshot(path: str, *, mmap: bool, verify: bool,
         return _Loaded(index=index, csc_doc=None, csc_sc=None, blk=None,
                        bmax_host=None, bmax_scale=None,
                        bmax_meta=dev.get("bmax"), bmax_rebuild=False,
-                       manifest=manifest, report=report, full_rebuild=True)
+                       manifest=manifest, report=report, full_rebuild=True,
+                       perm=None, reorder=str(dev.get("reorder", "none")))
 
     index = BM25Index(
         indptr=indptr, doc_ids=csc_doc[0, :nnz], scores=csc_sc[0, :nnz],
@@ -699,8 +774,33 @@ def _read_snapshot(path: str, *, mmap: bool, verify: bool,
         variant=str(mi["variant"]), params=params,
         doc_offset=int(mi["doc_offset"]))
 
-    if blocked_present and not blocked_ok:
-        bp = block_postings_from_index(index, block_size=block_size,
+    # -- perm, stage 2: both copies corrupt — recompute the signature
+    # pass from the recovered client-order postings (a deterministic
+    # function of the index) and accept it ONLY when its bytes reproduce
+    # the manifest checksum. Otherwise serve in IDENTITY order: the
+    # on-disk permuted blocked/bmax layouts index an unmappable doc space,
+    # so they are dropped and rebuilt from the client-order CSC below —
+    # exact either way, identity merely forfeits the reorder speedup.
+    perm = perm_arr
+    perm_dropped = False
+    if perm_present and not perm_file_ok:
+        mode = str(dev.get("reorder", "none"))
+        cand = (signature_permutation(index, mode=mode)
+                if mode != "none" else None)
+        if cand is not None and checksum_bytes(
+                _as_le(cand.astype(np.int32)).tobytes(),
+                algo) == arrays["perm"]["checksum"]:
+            perm = cand
+            recovered["perm"] = "signatures"
+        else:
+            perm = None
+            perm_dropped = True
+            recovered["perm"] = "identity"
+
+    if blocked_present and (not blocked_ok or perm_dropped):
+        from .reorder import permute_index
+        src = permute_index(index, perm) if perm is not None else index
+        bp = block_postings_from_index(src, block_size=block_size,
                                        tile=int(dev["tile_p"]))
         blk = (bp.token_ids, bp.local_doc, bp.scores)
         recovered["blocked"] = "csc"
@@ -709,7 +809,7 @@ def _read_snapshot(path: str, *, mmap: bool, verify: bool,
     bmax_host = bmax_scale = None
     bmax_rebuild = False
     if bmax_meta is not None:
-        if not (bad & {"bmax.host", "bmax.scale"}):
+        if not (bad & {"bmax.host", "bmax.scale"}) and not perm_dropped:
             bmax_host, bmax_scale = arr("bmax.host"), arr("bmax.scale")
         else:
             bmax_rebuild = True     # device loads rebuild from the index
@@ -725,7 +825,10 @@ def _read_snapshot(path: str, *, mmap: bool, verify: bool,
     return _Loaded(index=index, csc_doc=csc_doc, csc_sc=csc_sc, blk=blk,
                    bmax_host=bmax_host, bmax_scale=bmax_scale,
                    bmax_meta=bmax_meta, bmax_rebuild=bmax_rebuild,
-                   manifest=manifest, report=report, full_rebuild=False)
+                   manifest=manifest, report=report, full_rebuild=False,
+                   perm=perm,
+                   reorder=(str(dev.get("reorder", "none"))
+                            if perm is not None else "none"))
 
 
 def _strip_host(index):
@@ -780,9 +883,19 @@ def load_device_index(path: str, *, mmap: bool = False,
             with_blocked=bool(dev["with_blocked"]), with_csc=True,
             with_bmax=meta is not None,
             bmax_dtype=("u8" if meta and meta["quantized"] else "f32")
-            if meta else "auto")
+            if meta else "auto",
+            # the signature pass is deterministic — the rebuilt
+            # DeviceIndex recomputes the exact permutation the snapshot
+            # was serving with
+            reorder=ld.reorder)
     else:
         index = ld.index
+        if ld.perm is not None:
+            # disk stores index.*/csc.* in CLIENT order; the resident
+            # layouts serve in the PERMUTED space — re-permute the host
+            # copy (one lexsort) and pad its CSC for upload
+            from .reorder import permute_index
+            index = permute_index(index, ld.perm)
         di = DeviceIndex(
             host=index, indptr=index.indptr, df=np.diff(index.indptr),
             nnz=int(dev["nnz"]), n_docs=int(index.doc_lens.size),
@@ -790,9 +903,13 @@ def load_device_index(path: str, *, mmap: bool = False,
             doc_offset=int(index.doc_offset),
             block_size=int(dev["block_size"]), tile_p=int(dev["tile_p"]),
             frag=int(dev["frag"]),
-            reused={"csc": False, "blocked": False, "bmax": False})
-        di.csc_doc_ids, di.csc_scores = put_posting_arrays(ld.csc_doc,
-                                                           ld.csc_sc)
+            reused={"csc": False, "blocked": False, "bmax": False},
+            perm=ld.perm, reorder=ld.reorder)
+        if ld.perm is not None:
+            doc_pad, sc_pad = _padded_csc(index, di.frag)
+        else:
+            doc_pad, sc_pad = ld.csc_doc, ld.csc_sc
+        di.csc_doc_ids, di.csc_scores = put_posting_arrays(doc_pad, sc_pad)
         di.csc_indptr = put_descriptor_array(
             np.asarray(index.indptr).astype(np.int32))
         if ld.blk is not None:
@@ -815,7 +932,9 @@ def load_device_index(path: str, *, mmap: bool = False,
             bm.scale_dev = put_descriptor_array(bm.scale)
             di.bmax = bm
     if host_arrays == "drop":
-        di.host = _strip_host(ld.index)
+        # strip the SERVING-order host copy (permuted when reordered):
+        # retrievers and re-saves need doc_lens in the layouts' id space
+        di.host = _strip_host(di.host if di.host is not None else ld.index)
         di.indptr = di.host.indptr
         di.df = np.diff(di.indptr)
     di.snapshot_report = ld.report

@@ -528,3 +528,141 @@ def test_guarded_fault_does_not_fire_outside_ladder(rng):
         with pytest.raises(ResidencyError):
             put_posting_arrays(np.zeros(4, np.int32))
     assert sp[0].fired == 1
+
+
+# -- the perm rung: doc-id reordering under the I/O fault lane ----------------
+#
+# A reordered snapshot's ``perm`` array is one more manifest primary, so
+# the ``snapshot.array`` chaos pool corrupts it like any other array. Its
+# ladder has an extra rung the others don't: the permutation is a pure
+# function of the (client-order) postings, so with BOTH on-disk copies
+# gone it is recomputed from signatures and verified against the manifest
+# checksum; only a checksum mismatch (signature-scheme drift) falls to
+# identity — which drops the permuted layouts and rebuilds them from the
+# client CSC, trading the skip-rate win for exactness, never correctness.
+
+def _reordered_snap(tmp_path, rng, method="lucene"):
+    from repro.serve import PrunedRetriever
+    idx = _mk(rng, method)
+    r = PrunedRetriever(idx, reorder="signature",
+                        **{k: v for k, v in SMALL.items()
+                           if k != "acc_block"})
+    assert r.dindex.perm is not None
+    path = str(tmp_path / "snap")
+    r.save(path)
+    return idx, r, path
+
+
+def _gen_file(path, name):
+    import json as _json
+    import os
+    with open(os.path.join(path, "CURRENT")) as fh:
+        gen = _json.load(fh)["generation"]
+    return os.path.join(path, gen, name)
+
+
+def _corrupt(fname, offset=8):
+    with open(fname, "r+b") as fh:
+        fh.seek(offset)
+        b = fh.read(1)
+        fh.seek(offset)
+        fh.write(bytes([b[0] ^ 0xFF]))
+
+
+def _assert_adopted_identical(r, path, want_hop):
+    from repro.serve import PrunedRetriever
+    from repro.sparse.block_csr import DeviceIndex
+    di = DeviceIndex.load(path)
+    assert want_hop in di.snapshot_report["hops"]
+    r2 = PrunedRetriever(None, device_index=di,
+                         **{k: v for k, v in SMALL.items()
+                            if k != "acc_block"})
+    rng_q = np.random.default_rng(5)
+    qs = _queries(rng_q, 64) + [np.zeros(0, np.int32)]
+    i0, v0 = r.retrieve_batch(qs, 7)
+    i1, v1 = r2.retrieve_batch(qs, 7)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v1))
+    return di
+
+
+def test_perm_bitflip_recovers_via_dup(tmp_path, rng):
+    idx, r, path = _reordered_snap(tmp_path, rng)
+    _corrupt(_gen_file(path, "perm.bin"))
+    di = _assert_adopted_identical(r, path, "perm<-dup")
+    np.testing.assert_array_equal(di.perm, r.dindex.perm)
+
+
+def test_perm_and_dup_recover_via_signature_recompute(tmp_path, rng):
+    """Both perm replicas gone: the loader re-derives the permutation
+    from the client-order postings and proves it against the manifest
+    checksum — serving is identical, not merely equivalent."""
+    idx, r, path = _reordered_snap(tmp_path, rng)
+    _corrupt(_gen_file(path, "perm.bin"))
+    _corrupt(_gen_file(path, "perm.dup.bin"))
+    di = _assert_adopted_identical(r, path, "perm<-signatures")
+    np.testing.assert_array_equal(di.perm, r.dindex.perm)
+    assert di.reorder == "signature"
+
+
+def test_perm_checksum_mismatch_falls_to_identity(tmp_path, rng,
+                                                  monkeypatch):
+    """Signature-scheme drift (recompute no longer matches the stored
+    checksum) forfeits the reorder but NEVER correctness: the loader
+    drops to identity order and rebuilds the permuted layouts from the
+    client CSC."""
+    import repro.sparse.reorder as reorder_mod
+    idx, r, path = _reordered_snap(tmp_path, rng)
+    _corrupt(_gen_file(path, "perm.bin"))
+    _corrupt(_gen_file(path, "perm.dup.bin"))
+    real = reorder_mod.signature_permutation
+
+    def drifted(index, *, mode="signature"):
+        p = real(index, mode=mode)
+        if p is None:
+            return None
+        return p[::-1].copy()                       # a DIFFERENT valid perm
+
+    monkeypatch.setattr(reorder_mod, "signature_permutation", drifted)
+    from repro.serve import PrunedRetriever
+    from repro.sparse.block_csr import DeviceIndex
+    di = DeviceIndex.load(path)
+    assert "perm<-identity" in di.snapshot_report["hops"]
+    assert di.perm is None
+    r2 = PrunedRetriever(None, device_index=di,
+                         **{k: v for k, v in SMALL.items()
+                            if k != "acc_block"})
+    rng_q = np.random.default_rng(5)
+    qs = _queries(rng_q, 64)
+    ids, vals = r2.retrieve_batch(qs, 7)
+    sc = ScipyBM25(idx)
+    for i, q in enumerate(qs):
+        ref = sc.score(q)
+        _, ref_v = topk_numpy(ref[None], 7)
+        np.testing.assert_allclose(vals[i], ref_v[0], atol=1e-4)
+        np.testing.assert_allclose(ref[np.asarray(ids)[i]],
+                                   np.asarray(vals)[i], atol=1e-4)
+
+
+@pytest.mark.parametrize("kind", ["bit_flip", "truncate"])
+def test_reordered_snapshot_array_fault_recovers_exact(kind, tmp_path, rng):
+    """The io chaos pool's array faults hit reordered snapshots too
+    (perm.bin is a manifest primary) — the ladder heals whatever array
+    the injector picked and serving stays identical."""
+    idx, r, path = _reordered_snap(tmp_path, rng)
+    from repro.sparse.block_csr import DeviceIndex
+    from repro.serve import PrunedRetriever
+    with inject_faults({"site": "snapshot.array", "kind": kind,
+                        "times": 1, "seed": 11}) as sp:
+        di = DeviceIndex.load(path)
+    assert sp[0].fired == 1
+    assert di.snapshot_report["hops"]
+    r2 = PrunedRetriever(None, device_index=di,
+                         **{k: v for k, v in SMALL.items()
+                            if k != "acc_block"})
+    rng_q = np.random.default_rng(5)
+    qs = _queries(rng_q, 64)
+    i0, v0 = r.retrieve_batch(qs, 7)
+    i1, v1 = r2.retrieve_batch(qs, 7)
+    np.testing.assert_array_equal(np.asarray(i0), np.asarray(i1))
+    np.testing.assert_array_equal(np.asarray(v0), np.asarray(v1))

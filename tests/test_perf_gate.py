@@ -267,3 +267,82 @@ def test_planner_guarded_write_refuses_fast_clobber(tmp_path):
     # a fast artifact never blocks a full-scale refresh
     _guarded_write(str(out), {"cells": [5]}, fast=False, force=False)
     assert json.loads(out.read_text()) == {"fast": False, "cells": [5]}
+
+
+def test_gate_trips_on_reorder_gain_collapse():
+    """BENCH_6: the skip-rate GAIN over random order is deterministic for
+    a fixed seed — losing >50% of it means the doc-id clustering stopped
+    tightening bounds, even when absolute rates still look healthy."""
+    base = _bench(_cell(profile="head_mixed", batch=2,
+                        pruned_batch_s_none=0.02,
+                        pruned_batch_s_signature=0.018,
+                        pruned_skip_rate_none=0.70,
+                        pruned_skip_rate_signature=0.80,
+                        skip_rate_gain=0.10,
+                        posting_bytes_per_batch_none=0,
+                        posting_bytes_per_batch_reordered=0,
+                        descriptor_bytes_per_batch_none=4096,
+                        descriptor_bytes_per_batch_reordered=4096))
+    cand = copy.deepcopy(base)
+    rows, failures = compare(base, cand)
+    assert failures == []
+    cand["cells"][0]["skip_rate_gain"] = 0.04          # 60% relative drop
+    rows, failures = compare(base, cand)
+    assert len(failures) == 1 and "reorder gain collapse" in failures[0]
+    assert any(r["metric"] == "skip_rate_gain"
+               and r["status"] == "COLLAPSED" for r in rows)
+    # within tolerance passes
+    cand["cells"][0]["skip_rate_gain"] = 0.06          # 40% drop
+    _, failures = compare(base, cand)
+    assert failures == []
+    # a candidate that silently stops reporting the gain trips too
+    del cand["cells"][0]["skip_rate_gain"]
+    _, failures = compare(base, cand)
+    assert len(failures) == 1 and "reorder gain collapse" in failures[0]
+    # reordered latency columns are gated like the others
+    cand = copy.deepcopy(base)
+    cand["cells"][0]["pruned_batch_s_signature"] = 0.09    # 5x
+    _, failures = compare(base, cand)
+    assert len(failures) == 1 and "pruned_batch_s_signature" in failures[0]
+
+
+def test_gate_trips_on_reorder_byte_inequality():
+    """Reordered serving must never move MORE bytes than random-order
+    serving — the remap is a host gather. Posting bytes are exactly
+    equal; descriptor bytes may shrink under clustering (fewer fragments)
+    but never grow (schema-tolerant: cells without the columns are
+    ignored)."""
+    base = _bench(_cell(profile="head_mixed", batch=2,
+                        pruned_batch_s_none=0.02,
+                        pruned_batch_s_signature=0.018,
+                        skip_rate_gain=0.10,
+                        posting_bytes_per_batch_none=0,
+                        posting_bytes_per_batch_reordered=0,
+                        descriptor_bytes_per_batch_none=4096,
+                        descriptor_bytes_per_batch_reordered=4096))
+    cand = copy.deepcopy(base)
+    cand["cells"][0]["descriptor_bytes_per_batch_reordered"] = 8192
+    rows, failures = compare(base, cand)
+    assert len(failures) == 1 and "host gather" in failures[0]
+    assert any(r["metric"] == "descriptor_bytes_per_batch_reordered"
+               and r["status"] == "LEAK" for r in rows)
+    # a SMALLER reordered descriptor table is the clustering win the
+    # full-scale BENCH_6 cells actually show — it must pass
+    cand = copy.deepcopy(base)
+    cand["cells"][0]["descriptor_bytes_per_batch_reordered"] = 2048
+    _, failures = compare(base, cand)
+    assert failures == []
+    cand = copy.deepcopy(base)
+    cand["cells"][0]["posting_bytes_per_batch_reordered"] = 64
+    _, failures = compare(base, cand)
+    assert len(failures) == 1 and "posting bytes" in failures[0]
+    # posting bytes stay an exact-equality check: fewer posting bytes
+    # than the random-order cell is just as anomalous as more
+    cand = copy.deepcopy(base)
+    cand["cells"][0]["posting_bytes_per_batch_none"] = 64
+    _, failures = compare(base, cand)
+    assert len(failures) == 1 and "posting bytes" in failures[0]
+    # old-schema baselines (no BENCH_6 columns) gate nothing
+    legacy = _bench(_cell())
+    _, failures = compare(legacy, copy.deepcopy(legacy))
+    assert failures == []

@@ -1,0 +1,483 @@
+"""Build-time doc-id reordering (``sparse.reorder``) — exactness first.
+
+Pins the reordering contract at every layer:
+
+* **sparse** — ``signature_permutation`` is a valid, deterministic
+  permutation (a pure function of the index, for the snapshot recovery
+  rung); ``permute_index``/``unpermute_index`` round-trip BIT-exactly and
+  preserve the permutation-invariant arrays (``indptr``,
+  ``nonoccurrence``) and the CSC doc-ascending invariant; the sort-free
+  scipy signature path and the pure-numpy fallback produce identical
+  signatures; ``remap_board`` is the identity off score ties and pins
+  ascending client-id order inside bit-equal ties.
+* **serve** — a reordered pruned retriever is BIT-identical (exact float
+  equality) to the reordered resident oracle sharing its layout, on all
+  five BM25 variants, both bound dtypes and both planners, including
+  empty queries and k ≥ n_docs; scores match ``ScipyBM25`` to the same
+  1e-4 the unordered device paths are held to, and every returned id
+  provably achieves its score. Serving a reordered index never moves
+  MORE device bytes than the random-order path — postings byte-equal,
+  descriptors can only shrink (the id remap is one host gather on the
+  winner board).
+* **engine** — a reordered scorer serves exactly through
+  ``RetrievalEngine`` (client-order global ids), survives a ragged
+  rescale, and donor adoption honours the permutation: identical
+  postings + identical perm adopt, perm mismatch rebuilds.
+"""
+
+import numpy as np
+import pytest
+
+from conftest import (HAVE_HYPOTHESIS, given, make_corpus, settings, st)
+from repro.core import (BM25Params, ScipyBM25, build_index,
+                        build_sharded_indexes, dense_oracle_scores,
+                        topk_numpy)
+from repro.serve import DeviceRetriever, PrunedRetriever, RetrievalEngine
+from repro.sparse.block_csr import (TRANSFERS, DeviceIndex,
+                                    reset_transfer_stats)
+from repro.sparse.reorder import (REORDER_MODES, doc_signatures,
+                                  invert_permutation, is_permutation,
+                                  minhash_signatures, permutations_equal,
+                                  permute_index, remap_board,
+                                  signature_permutation, unpermute_index)
+
+# transfer-byte equalities asserted here change legitimately when a chaos
+# fault forces a ladder hop (an extra host-gather upload)
+pytestmark = pytest.mark.no_chaos
+
+ALL_VARIANTS = ["robertson", "atire", "lucene", "bm25l", "bm25+"]
+
+SMALL = dict(block_size=16, tile=16, frag=8, q_max=8)
+
+
+def _reordered_oracle(idx, **kw):
+    """Unpruned single-buffer resident path on the SAME permuted layout —
+    the bit-exactness comparator (f32 reduction order is a property of
+    the layout, so only a same-layout oracle can be compared bitwise)."""
+    return DeviceRetriever(idx, regime="gathered", gather="resident",
+                           double_buffer=False, acc_block=16,
+                           reorder="signature", **SMALL, **kw)
+
+
+def make_clustered_corpus(rng, n_docs=300, n_vocab=60):
+    """Half the docs spike on token 0, half on token 1 — a signature sort
+    separates the two populations into disjoint blocks."""
+    corpus = []
+    for d in range(n_docs):
+        base = rng.integers(2, n_vocab, size=10).astype(np.int32)
+        hot = d % 2
+        tf = 20 if d % 30 == 0 else 3
+        corpus.append(np.concatenate(
+            [np.full(tf, hot, np.int32), base]))
+    rng.shuffle(corpus)
+    return corpus
+
+
+# -- sparse: permutation construction ----------------------------------------
+
+def test_signature_permutation_valid_and_deterministic(rng):
+    corpus = make_clustered_corpus(rng)
+    idx = build_index(corpus, 60, params=BM25Params())
+    for mode in ("signature", "minhash"):
+        p1 = signature_permutation(idx, mode=mode)
+        p2 = signature_permutation(idx, mode=mode)
+        assert p1 is not None and is_permutation(p1, 300)
+        np.testing.assert_array_equal(p1, p2)
+    assert signature_permutation(idx, mode="none") is None
+    with pytest.raises(ValueError):
+        signature_permutation(idx, mode="zorder")
+    assert set(REORDER_MODES) == {"none", "signature", "minhash"}
+
+
+def test_signature_permutation_degenerate_cases():
+    one = build_index([np.array([0, 1], np.int32)], 4, params=BM25Params())
+    assert signature_permutation(one) is None          # n_docs <= 1
+    empty = build_index([np.zeros(0, np.int32) for _ in range(4)], 4,
+                        params=BM25Params())
+    # all-empty docs: identical (sentinel) signatures, stable sort keeps
+    # client order -> identity -> None
+    assert signature_permutation(empty) is None
+
+
+def test_doc_signatures_scipy_and_numpy_paths_identical(rng, monkeypatch):
+    corpus = make_corpus(rng, n_docs=80, n_vocab=40)
+    idx = build_index(corpus, 40, params=BM25Params(method="robertson"))
+    fast = doc_signatures(idx)
+
+    import builtins
+    real_import = builtins.__import__
+
+    def no_scipy(name, *a, **k):
+        if name.startswith("scipy"):
+            raise ImportError(name)
+        return real_import(name, *a, **k)
+
+    monkeypatch.setattr(builtins, "__import__", no_scipy)
+    slow = doc_signatures(idx)
+    np.testing.assert_array_equal(fast, slow)
+
+
+def test_doc_signatures_shape_and_sentinel(rng):
+    # doc 0 has a single posting: columns 1.. hold the n_vocab sentinel
+    corpus = [np.array([3], np.int32)] + \
+        [rng.integers(0, 10, size=8).astype(np.int32) for _ in range(5)]
+    idx = build_index(corpus, 10, params=BM25Params())
+    sig = doc_signatures(idx)
+    assert sig.shape == (6, 4)
+    assert sig[0, 0] == 3 and (sig[0, 1:] == 10).all()
+
+
+def test_minhash_signatures_nondegenerate(rng):
+    """Zipf-ish head token present in every doc must not collapse all
+    signatures to one value (hash(0) != 0 under every function)."""
+    corpus = [np.concatenate([np.zeros(2, np.int32),
+                              rng.integers(1, 50, size=8).astype(np.int32)])
+              for _ in range(40)]
+    idx = build_index(corpus, 50, params=BM25Params())
+    sig = minhash_signatures(idx)
+    assert np.unique(sig[:, 0]).size > 1
+
+
+def test_invert_and_is_permutation():
+    perm = np.array([2, 0, 3, 1], np.int32)
+    inv = invert_permutation(perm)
+    np.testing.assert_array_equal(perm[inv], np.arange(4))
+    np.testing.assert_array_equal(inv[perm], np.arange(4))
+    assert is_permutation(perm, 4)
+    assert is_permutation(np.zeros(0, np.int32), 0)
+    assert not is_permutation(perm, 5)                # wrong length
+    assert not is_permutation(np.array([0, 0, 1, 2]), 4)   # duplicate
+    assert not is_permutation(np.array([0, 1, 2, 4]), 4)   # out of range
+    assert not is_permutation(perm.reshape(2, 2), 4)       # wrong ndim
+    assert permutations_equal(None, None)
+    assert not permutations_equal(perm, None)
+    assert permutations_equal(perm, perm.copy())
+    assert not permutations_equal(perm, inv)
+
+
+# -- sparse: permuting an index ----------------------------------------------
+
+@pytest.mark.parametrize("method", ALL_VARIANTS)
+def test_permute_roundtrip_bit_exact(method, rng):
+    corpus = make_corpus(rng, n_docs=70, n_vocab=30)
+    corpus[3] = np.zeros(0, np.int32)                 # posting-less doc
+    idx = build_index(corpus, 30, params=BM25Params(method=method))
+    perm = signature_permutation(idx)
+    assert perm is not None
+    idx_p = permute_index(idx, perm)
+    back = unpermute_index(idx_p, perm)
+    np.testing.assert_array_equal(back.doc_ids, idx.doc_ids)
+    np.testing.assert_array_equal(back.scores, idx.scores)
+    np.testing.assert_array_equal(back.doc_lens, idx.doc_lens)
+    np.testing.assert_array_equal(back.indptr, idx.indptr)
+
+
+def test_permute_preserves_invariants(rng):
+    corpus = make_corpus(rng, n_docs=50, n_vocab=25)
+    idx = build_index(corpus, 25, params=BM25Params())
+    perm = signature_permutation(idx)
+    idx_p = permute_index(idx, perm)
+    # per-token arrays are permutation-invariant
+    np.testing.assert_array_equal(idx_p.indptr, idx.indptr)
+    np.testing.assert_array_equal(idx_p.nonoccurrence, idx.nonoccurrence)
+    # CSC invariant: doc ids strictly ascending within every token run
+    for t in range(25):
+        run = idx_p.doc_ids[idx.indptr[t]:idx.indptr[t + 1]]
+        assert (np.diff(run) > 0).all()
+    # every doc keeps its exact score vector, just under a new id
+    inv = invert_permutation(perm)
+    sc = ScipyBM25(idx)
+    sc_p = ScipyBM25(idx_p)
+    q = np.arange(25, dtype=np.int32)
+    np.testing.assert_array_equal(sc.score(q), sc_p.score(q)[inv])
+
+
+def test_permute_empty_and_stripped_index():
+    idx = build_index([np.zeros(0, np.int32) for _ in range(6)], 8,
+                      params=BM25Params())
+    perm = np.array([5, 4, 3, 2, 1, 0], np.int32)
+    idx_p = permute_index(idx, perm)                  # nnz == 0 early path
+    assert idx_p.doc_ids.size == 0
+    np.testing.assert_array_equal(idx_p.doc_lens, idx.doc_lens[perm])
+
+
+# -- sparse: the merge remap --------------------------------------------------
+
+def test_remap_board_identity_off_ties():
+    perm = np.array([3, 1, 0, 2], np.int32)
+    ids = np.array([[0, 2, 1]], np.int64)
+    board = np.array([[5.0, 3.0, 1.0]], np.float32)
+    out = remap_board(ids, board, perm)
+    np.testing.assert_array_equal(out, [[3, 0, 1]])   # plain gather
+
+
+def test_remap_board_canonicalizes_tie_runs():
+    """Inside a bit-equal score tie the remapped ids come back ascending
+    by CLIENT id, independent of the device-local order the permuted
+    layout produced."""
+    perm = np.array([9, 8, 7, 6, 5], np.int32)
+    board = np.array([[2.0, 1.0, 1.0, 1.0, 0.5]], np.float32)
+    ids = np.array([[0, 3, 1, 2, 4]], np.int64)
+    out = remap_board(ids, board, perm)
+    np.testing.assert_array_equal(out, [[9, 6, 7, 8, 5]])
+    # empty boards (batch of empty queries at k=0) pass through
+    empty = remap_board(np.zeros((1, 0), np.int64),
+                        np.zeros((1, 0), np.float32), perm)
+    assert empty.shape == (1, 0)
+
+
+# -- serve: bit-identical to the same-layout oracle ---------------------------
+
+@pytest.mark.parametrize("method", ALL_VARIANTS)
+@pytest.mark.parametrize("bmax_dtype", ["f32", "u8"])
+def test_reordered_pruned_bit_identical(method, bmax_dtype, rng):
+    corpus = make_clustered_corpus(rng)
+    idx = build_index(corpus, 60, params=BM25Params(method=method))
+    oracle = _reordered_oracle(idx)
+    pruned = PrunedRetriever(idx, bmax_dtype=bmax_dtype,
+                             reorder="signature", **SMALL)
+    assert pruned.dindex.perm is not None
+    queries = [np.array([0], np.int32),
+               rng.integers(0, 60, size=4).astype(np.int32),
+               np.zeros(0, np.int32)]                 # empty query in-batch
+    for k in (1, 9, 300):                             # incl. k == n_docs
+        i0, v0 = oracle.retrieve_batch(queries, k)
+        i1, v1 = pruned.retrieve_batch(queries, k)
+        np.testing.assert_array_equal(v0, v1)
+        np.testing.assert_array_equal(i0, i1)
+    # and the scores are the true BM25 scores under CLIENT ids
+    sc = ScipyBM25(idx)
+    i1, v1 = pruned.retrieve_batch(queries, 9)
+    for i, q in enumerate(queries):
+        np.testing.assert_allclose(sc.score(q)[i1[i]], v1[i], atol=1e-4)
+
+
+def test_reordered_device_plan_bit_identical(rng):
+    corpus = make_clustered_corpus(rng)
+    idx = build_index(corpus, 60, params=BM25Params())
+    oracle = _reordered_oracle(idx)
+    pruned = PrunedRetriever(idx, plan="device", bmax_dtype="u8",
+                             reorder="signature", **SMALL)
+    queries = [np.array([0], np.int32),
+               rng.integers(0, 60, size=5).astype(np.int32)]
+    for k in (1, 4):
+        i0, v0 = oracle.retrieve_batch(queries, k)
+        i1, v1 = pruned.retrieve_batch(queries, k)
+        np.testing.assert_array_equal(v0, v1)
+        np.testing.assert_array_equal(i0, i1)
+
+
+def test_reordered_vs_unordered_same_answers(rng):
+    """Across layouts only scores-to-1e-4 holds (f32 reduction order is
+    layout-dependent); ids must agree wherever the score order is
+    unambiguous at f32."""
+    corpus = make_clustered_corpus(rng, n_docs=200, n_vocab=50)
+    idx = build_index(corpus, 50, params=BM25Params(method="lucene"))
+    plain = PrunedRetriever(idx, **SMALL)
+    reord = PrunedRetriever(idx, reorder="signature", **SMALL)
+    queries = [rng.integers(0, 50, size=4).astype(np.int32)
+               for _ in range(3)]
+    i0, v0 = plain.retrieve_batch(queries, 7)
+    i1, v1 = reord.retrieve_batch(queries, 7)
+    np.testing.assert_allclose(v0, v1, atol=1e-4)
+    sc = ScipyBM25(idx)
+    for i, q in enumerate(queries):
+        full = sc.score(q)
+        # each returned id achieves the oracle score at its rank (ids may
+        # differ from the unordered run only inside f32-level ties)
+        np.testing.assert_allclose(full[i1[i]], full[i0[i]], atol=2e-4)
+
+
+def test_reorder_moves_zero_extra_device_bytes(rng):
+    """Posting bytes byte-equal; descriptor bytes never larger (clustering
+    can shrink the fragment table — a token's postings land in fewer
+    blocks — but the host-gather remap must never add device traffic)."""
+    corpus = make_clustered_corpus(rng)
+    idx = build_index(corpus, 60, params=BM25Params())
+    plain = PrunedRetriever(idx, **SMALL)
+    reord = PrunedRetriever(idx, reorder="signature", **SMALL)
+    queries = [rng.integers(0, 60, size=4).astype(np.int32)]
+
+    def batch_bytes(r):
+        r.retrieve_batch(queries, 5)                  # warm / compile
+        reset_transfer_stats()
+        r.retrieve_batch(queries, 5)
+        return TRANSFERS.posting_bytes, TRANSFERS.descriptor_bytes
+
+    post_p, desc_p = batch_bytes(plain)
+    post_r, desc_r = batch_bytes(reord)
+    assert post_r == post_p
+    assert desc_r <= desc_p
+
+
+def test_reorder_raises_skip_rate_on_clustered_corpus(rng):
+    """The point of the whole exercise: separable populations -> strictly
+    more fragments pruned/skipped than random order."""
+    corpus = make_clustered_corpus(rng, n_docs=600, n_vocab=60)
+    idx = build_index(corpus, 60, params=BM25Params())
+    plain = PrunedRetriever(idx, **SMALL)
+    reord = PrunedRetriever(idx, reorder="signature", **SMALL)
+
+    def skip_rate(r):
+        tot_p = tot_d = 0
+        for seed in range(8):
+            q = [np.array([seed % 2], np.int32),
+                 np.random.default_rng(seed).integers(
+                     0, 60, size=3).astype(np.int32)]
+            r.retrieve_batch(q, 3)
+            p = r.last_plan
+            tot_p += p.frags_planned
+            tot_d += p.frags_planned - p.frags_pruned - p.frags_skipped
+        return (tot_p - tot_d) / max(tot_p, 1)
+
+    assert skip_rate(reord) > skip_rate(plain)
+
+
+# -- serve: donor adoption rules ----------------------------------------------
+
+def test_reuse_requires_matching_permutation(rng):
+    corpus = make_corpus(rng, n_docs=40, n_vocab=20)
+    idx = build_index(corpus, 20, params=BM25Params())
+    di_r = DeviceIndex.build(idx, block_size=16, tile=16, frag=8,
+                             reorder="signature")
+    assert di_r.perm is not None and di_r.reorder == "signature"
+    # same index, same reorder -> full adoption
+    di2 = DeviceIndex.build(idx, block_size=16, tile=16, frag=8,
+                            reorder="signature", reuse_from=di_r)
+    assert di2.reused == {"csc": True, "blocked": True, "bmax": True}
+    np.testing.assert_array_equal(di2.perm, di_r.perm)
+    # unordered build must NOT adopt a reordered donor's layouts
+    di3 = DeviceIndex.build(idx, block_size=16, tile=16, frag=8,
+                            reuse_from=di_r)
+    assert di3.reused == {"csc": False, "blocked": False, "bmax": False}
+    assert di3.perm is None
+    # and a reordered build must not adopt an unordered donor
+    di_n = DeviceIndex.build(idx, block_size=16, tile=16, frag=8)
+    di4 = DeviceIndex.build(idx, block_size=16, tile=16, frag=8,
+                            reorder="signature", reuse_from=di_n)
+    assert di4.reused == {"csc": False, "blocked": False, "bmax": False}
+
+
+def test_reordered_host_arrays_drop_serves_exactly(rng):
+    corpus = make_clustered_corpus(rng, n_docs=120, n_vocab=40)
+    idx = build_index(corpus, 40, params=BM25Params())
+    keep = PrunedRetriever(idx, reorder="signature", plan="device",
+                           **SMALL)
+    drop = PrunedRetriever(idx, reorder="signature", plan="device",
+                           host_arrays="drop", **SMALL)
+    queries = [rng.integers(0, 40, size=4).astype(np.int32),
+               np.array([0], np.int32)]
+    i0, v0 = keep.retrieve_batch(queries, 5)
+    i1, v1 = drop.retrieve_batch(queries, 5)
+    np.testing.assert_array_equal(i0, i1)
+    np.testing.assert_array_equal(v0, v1)
+
+
+# -- engine: global ids stay client-space -------------------------------------
+
+def test_engine_reordered_scorer_exact_and_ragged_rescale(rng):
+    corpus = make_clustered_corpus(rng, n_docs=130, n_vocab=40)
+    p = BM25Params(method="bm25+")
+    shards = build_sharded_indexes(corpus, 40, 3, params=p)
+    eng = RetrievalEngine(shards, k=5, deadline_s=30.0, scorer="pruned",
+                          scorer_opts=dict(reorder="signature", **SMALL))
+    qs = [np.array([0], np.int32),
+          rng.integers(0, 40, size=4).astype(np.int32)]
+
+    def check(eng):
+        rb = eng.retrieve_batch(qs)
+        assert not rb.degraded
+        for i, q in enumerate(qs):
+            oracle = dense_oracle_scores(corpus, 40, q, p)
+            _, ref_v = topk_numpy(oracle[None], 5)
+            np.testing.assert_allclose(rb.scores[i], ref_v[0], atol=1e-3)
+            np.testing.assert_allclose(oracle[rb.ids[i]], rb.scores[i],
+                                       atol=1e-3)
+
+    check(eng)
+    eng.rescale(4)          # 130 docs over 4 shards: ragged boundaries
+    check(eng)
+    eng.rescale(2)
+    check(eng)
+
+
+# -- hypothesis properties ----------------------------------------------------
+
+@settings(max_examples=12, deadline=None)
+@given(st.data())
+def test_property_permute_roundtrip(data):
+    """Random corpora x variants: permuting with ANY valid permutation and
+    un-permuting is bit-exact, and permuted scoring is a relabeling."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 31)))
+    n_vocab = data.draw(st.integers(3, 30))
+    n_docs = data.draw(st.integers(2, 30))
+    method = data.draw(st.sampled_from(ALL_VARIANTS))
+    corpus = [rng.integers(0, n_vocab, size=rng.integers(0, 15)
+                           ).astype(np.int32) for _ in range(n_docs)]
+    idx = build_index(corpus, n_vocab, params=BM25Params(method=method))
+    perm = rng.permutation(n_docs).astype(np.int32)
+    idx_p = permute_index(idx, perm)
+    back = unpermute_index(idx_p, perm)
+    np.testing.assert_array_equal(back.doc_ids, idx.doc_ids)
+    np.testing.assert_array_equal(back.scores, idx.scores)
+    np.testing.assert_array_equal(back.doc_lens, idx.doc_lens)
+    q = rng.integers(0, n_vocab, size=3).astype(np.int32)
+    inv = invert_permutation(perm)
+    np.testing.assert_array_equal(ScipyBM25(idx).score(q),
+                                  ScipyBM25(idx_p).score(q)[inv])
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.data())
+def test_property_reordered_serving_exact(data):
+    """Random corpora x {variant, bound dtype, planner}: the reordered
+    pruned path is bit-identical to its same-layout resident oracle, and
+    true-score-correct vs scipy — including k >= n_docs and empty
+    queries."""
+    rng = np.random.default_rng(data.draw(st.integers(0, 2 ** 31)))
+    n_vocab = data.draw(st.integers(8, 40))
+    n_docs = data.draw(st.integers(6, 40))
+    method = data.draw(st.sampled_from(ALL_VARIANTS))
+    bmax_dtype = data.draw(st.sampled_from(["f32", "u8"]))
+    plan = data.draw(st.sampled_from(["host", "device"]))
+    corpus = [rng.integers(0, n_vocab, size=rng.integers(0, 20)
+                           ).astype(np.int32) for _ in range(n_docs)]
+    idx = build_index(corpus, n_vocab, params=BM25Params(method=method))
+    oracle = _reordered_oracle(idx, bmax_dtype=bmax_dtype, plan=plan)
+    pruned = PrunedRetriever(idx, bmax_dtype=bmax_dtype, plan=plan,
+                             reorder="signature", **SMALL)
+    k = data.draw(st.sampled_from([1, 3, n_docs, n_docs + 5]))
+    queries = [rng.integers(0, n_vocab, size=rng.integers(0, 5)
+                            ).astype(np.int32) for _ in range(2)]
+    queries.append(np.zeros(0, np.int32))
+    i0, v0 = oracle.retrieve_batch(queries, k)
+    i1, v1 = pruned.retrieve_batch(queries, k)
+    np.testing.assert_array_equal(v0, v1)
+    np.testing.assert_array_equal(i0, i1)
+    sc = ScipyBM25(idx)
+    kk = min(k, n_docs)
+    for i, q in enumerate(queries):
+        np.testing.assert_allclose(sc.score(q)[i1[i, :kk]], v1[i, :kk],
+                                   atol=1e-4)
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2 ** 31), n_new=st.integers(1, 5))
+def test_property_reordered_ragged_rescale(seed, n_new):
+    """Rescaling to ragged shard sizes under reordered scorers keeps
+    engine answers true to the dense oracle."""
+    rng = np.random.default_rng(seed)
+    corpus = [rng.integers(0, 30, size=rng.integers(0, 15)
+                           ).astype(np.int32) for _ in range(41)]
+    p = BM25Params(method="lucene")
+    shards = build_sharded_indexes(corpus, 30, 3, params=p)
+    eng = RetrievalEngine(shards, k=4, deadline_s=30.0, scorer="pruned",
+                          scorer_opts=dict(reorder="signature", **SMALL),
+                          warmup=False)
+    eng.rescale(n_new)
+    q = rng.integers(0, 30, size=3).astype(np.int32)
+    r = eng.retrieve(q)
+    oracle = dense_oracle_scores(corpus, 30, q, p)
+    _, ref_v = topk_numpy(oracle[None], 4)
+    np.testing.assert_allclose(r.scores, ref_v[0], atol=1e-3)
+    np.testing.assert_allclose(oracle[r.ids], r.scores, atol=1e-3)
