@@ -44,7 +44,7 @@ def _profile_queries(rng: np.random.Generator, profile: str, n_vocab: int,
 def bench_cell(n_docs: int, profile: str, *, n_vocab: int = 10_000,
                batch: int = 8, k: int = 10, avg_len: int = 60,
                tile: int = 2048, repeats: int = 2) -> dict:
-    from repro.serve import BlockedRetriever, GatheredRetriever
+    from repro.serve import DeviceRetriever
     from repro.core import ScipyBM25, batch_posting_budget
 
     corpus = zipf_corpus(n_docs, n_vocab, avg_len=avg_len)
@@ -55,8 +55,8 @@ def bench_cell(n_docs: int, profile: str, *, n_vocab: int = 10_000,
     sum_df = batch_posting_budget(idx, toks.reshape(1, -1))
     nnz = idx.nnz
 
-    gathered = GatheredRetriever(idx, tile=tile)
-    blocked = BlockedRetriever(idx, block_size=512, tile=tile)
+    gathered = DeviceRetriever(idx, regime="gathered", tile=tile)
+    blocked = DeviceRetriever(idx, regime="blocked", block_size=512, tile=tile)
     scipy_r = ScipyBM25(idx)
 
     def timed(fn):

@@ -1,4 +1,4 @@
-"""CI perf-trend gate over the BENCH_3 planner sweep and BENCH_6 reorder.
+"""CI perf gate over BENCH_3 (planner), BENCH_6 (reorder), BENCH_7 (serving).
 
 Compares a candidate bench JSON (PR head) against a baseline run of the
 SAME bench (the PR's base ref re-run on the same runner, or the committed
@@ -25,7 +25,15 @@ job when either:
   under clustering but never grow — the id remap must stay a host gather
   on the winner board, not a device transfer). Both checks are
   schema-tolerant: baselines predating BENCH_6 simply have no such
-  columns and are not penalized.
+  columns and are not penalized, or
+* (BENCH_7 serving cells) the micro-batching front-end's request-latency
+  p99 regresses by more than ``--max-ratio`` at a fixed (arrival rate,
+  batch deadline) load point, a serving cell stops asserting
+  bit-identity against direct ``retrieve_batch`` calls, or the frontend
+  zero-copy audit reports any steady-state posting/descriptor bytes.
+  Schema-tolerant like BENCH_6: baselines without serving cells are not
+  penalized, but a baseline WITH serving cells whose grid no longer
+  intersects the candidate's fails (vacuous-gate protection).
 
 Cells are matched on ``(n_docs, n_vocab, profile, batch, k)``; cells or
 columns present on only one side are reported as ``new``/``dropped`` but
@@ -116,6 +124,17 @@ BYTE_PAIRS = (
 # silently absorbing a real bug. Candidate-side only: old baselines
 # predate the column (schema drift tolerated, like every other column).
 DEGRADED_COL = "degradations_per_batch_healthy"
+
+# BENCH_7 (serving front-end): micro-batching cells are matched on the
+# load point — (arrival rate, batch deadline) — and the gated column is
+# the frontend's request-latency p99: the SLO number the deadline knob
+# exists to protect. Same ratio threshold as the planner latency cells,
+# with a millisecond floor (p99 of a finite request sample jitters).
+# Candidate-side hard gates, baseline or not: a serving cell that stops
+# asserting bit-identity, and steady-state bytes on the zero-copy audit.
+SERVING_KEY = ("rate_qps", "deadline_ms")
+SERVING_P99_COL = "frontend_p99_ms"
+SERVING_ABS_FLOOR_MS = 2.0
 
 
 def cell_key(cell: dict) -> tuple:
@@ -262,6 +281,59 @@ def compare(baseline: dict, candidate: dict, *, max_ratio: float = 1.25,
                 f"run (must be 0) — the entry regime is failing and the "
                 f"fallback ladder is absorbing it (trail sample: "
                 f"{degraded.get('degraded_trail')})")
+    # -- BENCH_7 serving cells (frontend p99 at fixed load points) -------
+    base_serv = {tuple(c.get(k) for k in SERVING_KEY): c
+                 for c in (baseline.get("serving") or {}).get("cells", [])}
+    had_serv_base = bool(base_serv)
+    serv_matched = 0
+    for cand in (candidate.get("serving") or {}).get("cells", []):
+        key = tuple(cand.get(k) for k in SERVING_KEY)
+        base = base_serv.pop(key, None)
+        p99 = cand.get(SERVING_P99_COL)
+        row = {"cell": key, "metric": SERVING_P99_COL, "candidate_s": p99}
+        if base is None or SERVING_P99_COL not in base:
+            row.update(baseline_s=None, ratio=None, status="new")
+        else:
+            serv_matched += 1
+            base_p99 = base[SERVING_P99_COL]
+            ratio = p99 / max(base_p99, 1e-9)
+            regressed = (ratio > max_ratio
+                         and p99 - base_p99 > SERVING_ABS_FLOOR_MS)
+            row.update(baseline_s=base_p99, ratio=round(ratio, 3),
+                       status="REGRESSED" if regressed else "ok")
+            if regressed:
+                failures.append(
+                    f"serving {key} {SERVING_P99_COL}: {base_p99:.2f}ms "
+                    f"-> {p99:.2f}ms ({ratio:.2f}x > {max_ratio:.2f}x) "
+                    f"at a fixed (rate, deadline) load point")
+        rows.append(row)
+        if not cand.get("bit_identical", False):
+            rows.append({"cell": key, "metric": "bit_identical",
+                         "candidate_s": False, "baseline_s": True,
+                         "ratio": None, "status": "BROKEN"})
+            failures.append(
+                f"serving {key}: bit_identical is not asserted — "
+                f"frontend batches must replay bit-for-bit against "
+                f"direct retrieve_batch calls")
+    zero_copy = candidate.get("zero_copy")
+    if zero_copy is not None:
+        for col in ("posting_bytes", "descriptor_bytes"):
+            shipped = zero_copy.get(col, 0)
+            rows.append({"cell": ("frontend-zero-copy",), "metric": col,
+                         "candidate_s": shipped, "baseline_s": 0,
+                         "ratio": None,
+                         "status": "LEAK" if shipped else "ok"})
+            if shipped:
+                failures.append(
+                    f"frontend zero-copy audit: {shipped} {col} per "
+                    f"steady-state batch (must be 0)")
+    if (had_serv_base and serv_matched == 0
+            and not allow_empty_intersection):
+        failures.append(
+            "no serving cell matched between baseline and candidate — "
+            "the frontend p99 gate would be vacuous. Keep the "
+            "(rate, deadline) grid stable or pass "
+            "--allow-empty-intersection in the grid-migration PR.")
     if matched == 0 and had_base and not allow_empty_intersection:
         # zero comparable cells would make the latency gate pass
         # VACUOUSLY — the silent-disable path a sweep-grid change opens
@@ -284,7 +356,10 @@ def to_markdown(rows: list[dict], failures: list[str], *,
         f"cell fails; a >{GAIN_MAX_DROP:.0%} relative drop of the "
         "reorder skip-rate gain fails; reordered transfer bytes must "
         "not exceed random-order bytes (postings exactly equal); any "
-        "healthy-baseline ladder degradation fails.",
+        "healthy-baseline ladder degradation fails; a serving-cell "
+        f"frontend p99 regression above {max_ratio:.2f}x at a fixed "
+        "(rate, deadline) load point fails, as does a dropped "
+        "bit-identity assertion or any frontend zero-copy byte leak.",
         "",
         "| cell (docs, vocab, profile, B, k) | metric | baseline | "
         "candidate | ratio | status |",
@@ -294,7 +369,8 @@ def to_markdown(rows: list[dict], failures: list[str], *,
         fmt = (lambda v: "-" if v is None
                else (f"{v:.4f}" if isinstance(v, float) else str(v)))
         status = r["status"]
-        if status in ("REGRESSED", "LEAK", "COLLAPSED", "DEGRADED"):
+        if status in ("REGRESSED", "LEAK", "COLLAPSED", "DEGRADED",
+                      "BROKEN"):
             status = f"**{status}**"
         lines.append(
             f"| {r['cell']} | {r['metric']} | {fmt(r['baseline_s'])} | "
@@ -340,6 +416,10 @@ def main(argv: list[str] | None = None) -> int:
             for col in LATENCY_COLS:
                 if col in c:
                     c[col] = c[col] * args.inject_slowdown
+        for c in (candidate.get("serving") or {}).get("cells", []):
+            if SERVING_P99_COL in c:
+                c[SERVING_P99_COL] = (c[SERVING_P99_COL]
+                                      * args.inject_slowdown)
 
     rows, failures = compare(
         baseline, candidate, max_ratio=args.max_ratio,

@@ -242,7 +242,7 @@ def bench_pruned_cell(n_docs: int, n_vocab: int, *, profile: str =
     the serving default: block-max bounds sharpen as blocks shrink, and
     the resident kernel's fragment grid is what pays for loose ones.
     """
-    from repro.serve import DeviceRetriever, PrunedRetriever
+    from repro.serve import DeviceRetriever
     from repro.sparse.block_csr import TRANSFERS, reset_transfer_stats
 
     corpus = zipf_corpus(n_docs, n_vocab, avg_len=avg_len)
@@ -258,7 +258,7 @@ def bench_pruned_cell(n_docs: int, n_vocab: int, *, profile: str =
     # resident CSC arrays / block-max table instead of re-uploading
     # (exercises the rescale reuse path at bench scale, and keeps the
     # CI bench-smoke job's wall time and memory flat)
-    pruned = PrunedRetriever(idx, block_size=block_size, frag=512,
+    pruned = DeviceRetriever(idx, regime="pruned", block_size=block_size, frag=512,
                              tile=tile, reuse_from=resident.dindex)
     paths = {
         "blocked": lambda: blocked.retrieve_batch(queries, k),
@@ -289,7 +289,7 @@ def bench_pruned_cell(n_docs: int, n_vocab: int, *, profile: str =
     pruned.retrieve_batch(queries, k)
     bytes_post, bytes_desc = (TRANSFERS.posting_bytes,
                               TRANSFERS.descriptor_bytes)
-    dev = PrunedRetriever(idx, plan="device", block_size=block_size,
+    dev = DeviceRetriever(idx, regime="pruned", plan="device", block_size=block_size,
                           frag=512, tile=tile, reuse_from=pruned.dindex)
     dev.retrieve_batch(queries, k)               # settle buckets
     reset_transfer_stats()
@@ -352,7 +352,7 @@ def bench_degraded_cell(n_docs: int, n_vocab: int, *, batch: int = 4,
     healthy baseline that degrades is a planner/capability bug being
     silently absorbed by the fallback machinery.
     """
-    from repro.serve import DeviceRetriever, PrunedRetriever
+    from repro.serve import DeviceRetriever
     from repro.serve.faults import inject_faults
 
     corpus = zipf_corpus(n_docs, n_vocab, avg_len=avg_len)
@@ -363,7 +363,7 @@ def bench_degraded_cell(n_docs: int, n_vocab: int, *, batch: int = 4,
     resident = DeviceRetriever(idx, regime="gathered", gather="resident",
                                block_size=block_size, frag=512, tile=tile)
     hops = {
-        "pruned": PrunedRetriever(idx, block_size=block_size, frag=512,
+        "pruned": DeviceRetriever(idx, regime="pruned", block_size=block_size, frag=512,
                                   tile=tile, reuse_from=resident.dindex),
         "resident": resident,
         "host": DeviceRetriever(idx, regime="gathered", gather="host",

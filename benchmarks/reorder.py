@@ -55,6 +55,7 @@ import numpy as np
 from benchmarks.planner import _guarded_write, _profile_queries, \
     bound_tightness
 from repro.core import BM25Params, build_index
+from repro.serve import DeviceRetriever
 from repro.data.corpus import zipf_corpus
 
 FIVE_VARIANTS = ("robertson", "lucene", "atire", "bm25l", "bm25+")
@@ -134,7 +135,6 @@ def bench_reorder_cell(n_docs: int, n_vocab: int, *, batch: int = 2,
     pass overhead relative to ``build_index`` alone and to end-to-end
     indexing (``build_index`` + ``DeviceIndex.build``).
     """
-    from repro.serve import PrunedRetriever
     from repro.sparse.block_csr import TRANSFERS, reset_transfer_stats
     from repro.sparse.reorder import permute_index, signature_permutation
 
@@ -152,9 +152,9 @@ def bench_reorder_cell(n_docs: int, n_vocab: int, *, batch: int = 2,
     queries = _profile_queries(rng, "head_mixed", n_vocab, batch, q_len=5)
 
     t0 = time.perf_counter()
-    plain = PrunedRetriever(idx, block_size=block_size, frag=512, tile=tile)
+    plain = DeviceRetriever(idx, regime="pruned", block_size=block_size, frag=512, tile=tile)
     t_device = time.perf_counter() - t0
-    reord = PrunedRetriever(idx, block_size=block_size, frag=512, tile=tile,
+    reord = DeviceRetriever(idx, regime="pruned", block_size=block_size, frag=512, tile=tile,
                             reorder="signature")
     t_plain = _timed(lambda: plain.retrieve_batch(queries, k), repeats)
     t_reord = _timed(lambda: reord.retrieve_batch(queries, k), repeats)
@@ -205,7 +205,6 @@ def bench_variants(n_docs: int, n_vocab: int, *, batch: int = 4,
                    k: int = 10, block_size: int = 64,
                    avg_len: int = 60, tile: int = 2048) -> dict:
     """Exactness sweep: reordered pruned top-k vs the oracle, per variant."""
-    from repro.serve import PrunedRetriever
 
     corpus = zipf_corpus(n_docs, n_vocab, avg_len=avg_len)
     rng = np.random.default_rng(7)
@@ -215,7 +214,7 @@ def bench_variants(n_docs: int, n_vocab: int, *, batch: int = 4,
     for variant in FIVE_VARIANTS:
         idx = build_index(corpus, n_vocab,
                           params=BM25Params(method=variant))
-        r = PrunedRetriever(idx, block_size=block_size, frag=512,
+        r = DeviceRetriever(idx, regime="pruned", block_size=block_size, frag=512,
                             tile=tile, reorder="signature")
         ids, vals = r.retrieve_batch(queries, k)
         out[variant] = _check_topk_vs_oracle(idx, ids, vals, queries, k)
@@ -231,7 +230,6 @@ def bench_schemes(n_docs: int, n_vocab: int, *, batch: int = 2,
     on exactly the per-token maxima the bounds sum over, minhash on raw
     token-set overlap.
     """
-    from repro.serve import PrunedRetriever
     from repro.sparse.reorder import signature_permutation
 
     corpus = zipf_corpus(n_docs, n_vocab, avg_len=avg_len)
@@ -241,7 +239,7 @@ def bench_schemes(n_docs: int, n_vocab: int, *, batch: int = 2,
         t0 = time.perf_counter()
         signature_permutation(idx, mode=mode)
         t_pass = time.perf_counter() - t0
-        r = PrunedRetriever(idx, block_size=block_size, frag=512,
+        r = DeviceRetriever(idx, regime="pruned", block_size=block_size, frag=512,
                             tile=tile, reorder=mode)
         sr = _avg_skip_rate(r, range(N_SKIP_BATCHES), n_vocab, batch, k)
         out[mode] = {
@@ -264,7 +262,6 @@ def snapshot_roundtrip(n_docs: int = 2_000, n_vocab: int = 3_000, *,
     import shutil
     import tempfile
 
-    from repro.serve import PrunedRetriever
     from repro.sparse import snapshot
     from repro.sparse.block_csr import DeviceIndex
 
@@ -272,7 +269,7 @@ def snapshot_roundtrip(n_docs: int = 2_000, n_vocab: int = 3_000, *,
     idx = build_index(corpus, n_vocab, params=BM25Params())
     rng = np.random.default_rng(11)
     queries = _profile_queries(rng, "head_mixed", n_vocab, 4, q_len=5)
-    r = PrunedRetriever(idx, block_size=block_size, frag=512, tile=tile,
+    r = DeviceRetriever(idx, regime="pruned", block_size=block_size, frag=512, tile=tile,
                         reorder="signature")
     want_ids, want_vals = r.retrieve_batch(queries, 10)
 
@@ -290,7 +287,7 @@ def snapshot_roundtrip(n_docs: int = 2_000, n_vocab: int = 3_000, *,
                 fh.write(bytes([b[0] ^ 0xFF]))
         di = DeviceIndex.load(path)
         hops = list(di.snapshot_report["hops"])
-        r2 = PrunedRetriever(None, block_size=block_size, frag=512,
+        r2 = DeviceRetriever(None, regime="pruned", block_size=block_size, frag=512,
                              tile=tile, device_index=di)
         got_ids, got_vals = r2.retrieve_batch(queries, 10)
         exact = (np.array_equal(np.asarray(want_ids), np.asarray(got_ids))

@@ -1,0 +1,259 @@
+"""BENCH_7: micro-batching front-end vs one-query-at-a-time serving.
+
+Drives a seeded Poisson arrival stream at each (arrival rate × batch
+deadline) cell through TWO servers over the same retriever:
+
+* **frontend** — :class:`repro.serve.ServingFrontend`: arrivals group by
+  jit-cache shape bucket, flush on size-or-deadline, pack of batch i+1
+  overlaps execution of batch i;
+* **direct**   — the naive bridge: one ``retrieve_batch([q], k)`` launch
+  per arrival, FIFO (the strongest honest baseline: same scorer, same
+  compiled kernels, no batching).
+
+Per cell it reports request-latency p50/p99 and completed-requests/s for
+both paths, the formed-batch stats, and the throughput gain — the
+latency/throughput Pareto the batching deadline knob trades along. Two
+invariants are asserted on the way (and stamped into the artifact):
+
+* **bit-identity** — every batch the frontend formed is replayed through
+  a direct ``retrieve_batch`` call and must match bit-for-bit
+  (micro-batching changes cost, never results);
+* **zero steady-state bytes** — a resident/device-plan retriever served
+  through the frontend ships ZERO posting and descriptor bytes per
+  steady-state batch (the PR-4 residency invariant survives the new
+  serving path).
+
+Conventions follow ``benchmarks.planner``: ``--fast`` runs the CI-smoke
+grid and stamps ``"fast": true``; ``_guarded_write`` refuses to clobber
+a committed full-scale BENCH_7.json with smoke numbers. The perf gate
+(``benchmarks.perf_gate``) compares the ``serving.cells`` p99 columns at
+fixed (rate, deadline) across refs and fails >25% regressions.
+
+    PYTHONPATH=src python -m benchmarks.serving --fast --force
+"""
+
+from __future__ import annotations
+
+import argparse
+import json
+import time
+
+import numpy as np
+
+from benchmarks.planner import _guarded_write
+from repro.core import BM25Params, build_index
+from repro.data.corpus import zipf_corpus
+from repro.serve import DeviceRetriever, ServingFrontend
+
+FAST = dict(n_docs=400, n_vocab=300, avg_len=40, n_requests=48,
+            rates=(100.0, 2000.0), deadlines_ms=(2.0, 10.0))
+# FULL is sized to the CPU interpret-mode proxy this repo benches on:
+# one warm launch costs ~4.4ms at 2000x1000 (~227 qps direct capacity,
+# batch-16 ~1071 qps effective), so the low rate sits under direct
+# capacity (a sane Pareto baseline) and the high rates saturate it —
+# which is the regime micro-batching exists for. On real hardware a
+# batch costs ~one launch, so the gain only grows; re-size rates to the
+# measured single-launch capacity when re-running there (the TPU
+# recalibration item in ROADMAP.md).
+FULL = dict(n_docs=2_000, n_vocab=1_000, avg_len=60, n_requests=300,
+            rates=(150.0, 1000.0, 3000.0), deadlines_ms=(1.0, 5.0, 20.0))
+
+K = 10
+MAX_BATCH = 32
+
+
+def _poisson_arrivals(n: int, rate_qps: float, seed: int) -> np.ndarray:
+    """Seeded arrival offsets (s): identical stream for both servers."""
+    rng = np.random.default_rng(seed)
+    return np.cumsum(rng.exponential(1.0 / rate_qps, size=n))
+
+
+def _queries(n: int, n_vocab: int, seed: int) -> list[np.ndarray]:
+    from repro.data.corpus import zipf_queries
+    return zipf_queries(n, n_vocab, q_len=5, seed=seed)
+
+
+def _warm(dr: DeviceRetriever, queries: list[np.ndarray],
+          seed: int = 3) -> None:
+    """Pre-compile every jit bucket the sweep can plausibly form.
+
+    Every device dim is pow2-bucketed (batch B, query width, u_max,
+    posting budget), so the bucket space is O(log demand) — but a bucket
+    first hit mid-measurement charges a multi-hundred-ms compile to some
+    unlucky request's latency. Real query batches (not a synthetic
+    token) are required: the u_max and posting-budget buckets depend on
+    the batch's actual distinct tokens and Σ df. The pow2 size ladder
+    plus random compositions cover the reachable bucket set; steady
+    state is then compile-free, which is what the sweep measures.
+    """
+    rng = np.random.default_rng(seed)
+    for b in (1, 2, 3, 4, 6, 8, 12, 16, 24, 32):
+        if b <= len(queries):
+            dr.retrieve_batch(queries[:b], K)
+    # low-rate cells form small batches of CONTIGUOUS arrivals — walk
+    # those compositions directly (their Σ df buckets are what the size
+    # ladder above can miss)
+    for b in (1, 2, 3, 4):
+        for i in range(0, len(queries) - b + 1, b):
+            dr.retrieve_batch(queries[i:i + b], K)
+    for _ in range(40):
+        b = int(rng.integers(1, MAX_BATCH + 1))
+        pick = rng.choice(len(queries), size=min(b, len(queries)),
+                          replace=False)
+        dr.retrieve_batch([queries[i] for i in pick], K)
+
+
+def _pcts(lat_s: list[float]) -> dict:
+    a = np.asarray(lat_s) * 1e3
+    return {"p50_ms": round(float(np.percentile(a, 50)), 3),
+            "p99_ms": round(float(np.percentile(a, 99)), 3)}
+
+
+def _run_frontend(dr, queries, arrivals, deadline_s, *, record=False):
+    """Replay the arrival stream through the micro-batching front-end."""
+    fe = ServingFrontend(dr, k=K, max_batch=MAX_BATCH,
+                         batch_deadline_s=deadline_s,
+                         max_queue=len(queries) + 1,
+                         record_batches=record)
+    t0 = time.monotonic()
+    futs = []
+    for q, t_arr in zip(queries, arrivals):
+        dt = t_arr - (time.monotonic() - t0)
+        if dt > 0:
+            time.sleep(dt)
+        futs.append((fe.submit(q), time.monotonic() - t0))
+    rows = [(f.result(), t_sub) for f, t_sub in futs]
+    fe.close()
+    h = fe.health()
+    lat = [r.latency_s for r, _ in rows]
+    done = max(t_sub + r.latency_s for r, t_sub in rows)
+    span = max(done - float(arrivals[0]), 1e-9)
+    return {**_pcts(lat), "qps": round(len(rows) / span, 1),
+            "batches": h["batches"],
+            "mean_batch": round(h["mean_batch"], 2)}, fe
+
+
+def _run_direct(dr, queries, arrivals):
+    """Same stream, one launch per arrival, FIFO single server."""
+    t0 = time.monotonic()
+    lat, done = [], 0.0
+    for q, t_arr in zip(queries, arrivals):
+        dt = t_arr - (time.monotonic() - t0)
+        if dt > 0:
+            time.sleep(dt)
+        dr.retrieve_batch([q], K)
+        done = time.monotonic() - t0
+        lat.append(done - float(t_arr))
+    span = max(done - float(arrivals[0]), 1e-9)
+    return {**_pcts(lat), "qps": round(len(lat) / span, 1)}
+
+
+def _assert_bit_identity(dr, fe: ServingFrontend) -> int:
+    """Replay every formed batch directly; raise on any mismatch."""
+    replayed = 0
+    for batch_qs, kk, res in fe.recorded:
+        replay = dr.retrieve_batch(batch_qs, kk)
+        if not (np.array_equal(np.asarray(res.ids), np.asarray(replay.ids))
+                and np.array_equal(np.asarray(res.scores),
+                                   np.asarray(replay.scores))):
+            raise AssertionError(
+                f"frontend batch (B={len(batch_qs)}, k={kk}) is not "
+                f"bit-identical to the direct retrieve_batch call")
+        replayed += 1
+    return replayed
+
+
+def bench_sweep(cfg: dict, *, seed: int = 7) -> dict:
+    corpus = zipf_corpus(cfg["n_docs"], cfg["n_vocab"],
+                         avg_len=cfg["avg_len"])
+    idx = build_index(corpus, cfg["n_vocab"], params=BM25Params())
+    dr = DeviceRetriever(idx)
+    n = cfg["n_requests"]
+    queries = _queries(n, cfg["n_vocab"], seed)
+    _warm(dr, queries)
+    # throwaway overload run: any u-bucket the pow2 warm ladder missed
+    # compiles here, not inside a measured cell
+    _run_frontend(dr, queries, _poisson_arrivals(n, max(cfg["rates"]),
+                                                 seed),
+                  min(cfg["deadlines_ms"]) / 1e3)
+    cells, replayed_total = [], 0
+    for rate in cfg["rates"]:
+        arrivals = _poisson_arrivals(n, rate, seed)
+        for dl_ms in cfg["deadlines_ms"]:
+            fe_stats, fe = _run_frontend(dr, queries, arrivals,
+                                         dl_ms / 1e3, record=True)
+            replayed_total += _assert_bit_identity(dr, fe)
+            di_stats = _run_direct(dr, queries, arrivals)
+            cells.append({
+                "rate_qps": rate, "deadline_ms": dl_ms, "k": K,
+                "n_requests": n, "max_batch": MAX_BATCH,
+                "frontend": fe_stats, "direct": di_stats,
+                "frontend_p99_ms": fe_stats["p99_ms"],
+                "direct_p99_ms": di_stats["p99_ms"],
+                "throughput_gain": round(
+                    fe_stats["qps"] / max(di_stats["qps"], 1e-9), 2),
+                "bit_identical": True,
+            })
+    return {"n_docs": cfg["n_docs"], "n_vocab": cfg["n_vocab"],
+            "cells": cells, "batches_replayed": replayed_total}
+
+
+def bench_zero_copy(*, seed: int = 11) -> dict:
+    """Residency audit: frontend traffic on a resident/device-plan
+    retriever ships zero steady-state posting AND descriptor bytes."""
+    from repro.sparse.block_csr import TRANSFERS, reset_transfer_stats
+
+    n_docs, n_vocab, n_req = 120, 80, 8
+    corpus = zipf_corpus(n_docs, n_vocab, avg_len=20)
+    idx = build_index(corpus, n_vocab, params=BM25Params())
+    dr = DeviceRetriever(idx, regime="gathered", gather="resident",
+                         plan="device", tile=64, block_size=32, q_max=8)
+    queries = _queries(n_req, n_vocab, seed)
+    dr.retrieve_batch(queries, K)                 # warm the bucket
+    reset_transfer_stats()
+    with ServingFrontend(dr, k=K, max_batch=n_req,
+                         batch_deadline_s=0.05) as fe:
+        futs = [fe.submit(q) for q in queries]
+        for f in futs:
+            f.result(timeout=120)
+    out = {"requests": n_req,
+           "posting_bytes": int(TRANSFERS.posting_bytes),
+           "descriptor_bytes": int(TRANSFERS.descriptor_bytes)}
+    if out["posting_bytes"] or out["descriptor_bytes"]:
+        raise AssertionError(
+            f"frontend path shipped steady-state bytes on the resident "
+            f"device-plan channel: {out}")
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true",
+                    help="CI-smoke grid (stamps \"fast\": true)")
+    ap.add_argument("--force", action="store_true",
+                    help="allow --fast to overwrite a full-scale artifact")
+    ap.add_argument("--out", default="BENCH_7.json")
+    args = ap.parse_args()
+
+    cfg = FAST if args.fast else FULL
+    serving = bench_sweep(cfg)
+    zero_copy = bench_zero_copy()
+    best = max(serving["cells"], key=lambda c: c["throughput_gain"])
+    result = {
+        "bench": "serving",
+        "config": {k: (list(v) if isinstance(v, tuple) else v)
+                   for k, v in cfg.items()},
+        "serving": serving,
+        "zero_copy": zero_copy,
+        "best_cell": {"rate_qps": best["rate_qps"],
+                      "deadline_ms": best["deadline_ms"],
+                      "throughput_gain": best["throughput_gain"],
+                      "frontend_p99_ms": best["frontend_p99_ms"],
+                      "direct_p99_ms": best["direct_p99_ms"]},
+    }
+    _guarded_write(args.out, result, fast=args.fast, force=args.force)
+    print(json.dumps(result["best_cell"], indent=1))
+
+
+if __name__ == "__main__":
+    main()

@@ -103,3 +103,66 @@ assert not rb.degraded and not rb2.degraded
 np.testing.assert_allclose(rb2.scores, rb.scores, atol=1e-5)
 print(f"  batch of {len(batch)}: {len(batch) / t_b:.1f} QPS warm, "
       f"ids {rb.ids.shape}, degraded={rb.degraded}")
+
+print("\nasync micro-batching front-end (Poisson single-query stream)...")
+# real traffic never hands us dense batches — ServingFrontend forms them:
+# arrivals group by (pow2 width bucket, k) so a formed batch lands on an
+# already-compiled jit cache key, a former thread flushes each bucket on
+# size-or-deadline, and host pack of batch i+1 overlaps device execution
+# of batch i. batch_deadline_s is the Pareto dial: the latency an early
+# arrival pays waiting for batchmates, bought back as throughput.
+from repro.core import build_index
+from repro.serve import DeviceRetriever, ServingFrontend
+
+# scale sized to THIS backend (CPU interpret mode, ~4ms/launch: see the
+# BENCH_7 FULL comment in benchmarks/serving.py) so the stream actually
+# overloads the one-launch-per-arrival server while batches keep up
+# deadline 20ms: BENCH_7's Pareto at this rate — batches of ~20 are what
+# hold 1000 qps on this backend (5ms forms ~6-query batches, just under
+# the arrival rate, and the queue grows instead)
+FE_DOCS, FE_VOCAB, N_REQ, RATE_QPS, DEADLINE_S = 2_000, 1_000, 150, 1_000.0, 0.020
+fe_corpus = zipf_corpus(FE_DOCS, FE_VOCAB, avg_len=60)
+dr = DeviceRetriever(build_index(fe_corpus, FE_VOCAB, params=BM25Params()))
+stream = zipf_queries(N_REQ, FE_VOCAB, q_len=5)
+for b in (1, 2, 4, 8, 16, 32):                 # compile the pow2 buckets
+    for lo in range(0, N_REQ - b + 1, max(b * 4, 1)):
+        dr.retrieve_batch(stream[lo:lo + b], 10)
+
+rng = np.random.default_rng(0)
+arrivals = np.cumsum(rng.exponential(1.0 / RATE_QPS, size=N_REQ))
+
+
+def replay(deadline_s):
+    with ServingFrontend(dr, k=10, max_batch=32,
+                         batch_deadline_s=deadline_s) as fe:
+        t0 = time.monotonic()
+        futs = []
+        for q, t_arr in zip(stream, arrivals):
+            dt = t_arr - (time.monotonic() - t0)
+            if dt > 0:
+                time.sleep(dt)
+            futs.append(fe.submit(q))
+        rows = [f.result() for f in futs]      # each a RetrievalResult
+        return rows, fe.health()
+
+
+# pass 1 compiles whatever formed-batch jit buckets the size ladder
+# above missed (batch composition picks the u_max / posting-budget
+# buckets); pass 2 is the steady state a long-lived server lives in
+replay(DEADLINE_S)
+rows, health = replay(DEADLINE_S)
+lat_ms = 1e3 * np.asarray([r.latency_s for r in rows])
+ids0, scores0 = rows[0]                        # legacy tuple unpack works
+direct = dr.retrieve(stream[0], 10)
+# same answers as an un-batched call (bit-identity vs the SAME formed
+# batch is the tier-1/BENCH_7 assertion; across different batch shapes
+# f32 association differs in the last ulp, hence allclose here)
+np.testing.assert_allclose(np.sort(scores0), np.sort(np.ravel(direct.scores)),
+                           rtol=1e-5)
+print(f"  {N_REQ} arrivals @ {RATE_QPS:.0f} qps, deadline "
+      f"{1e3 * DEADLINE_S:.0f}ms: p50 {np.percentile(lat_ms, 50):.1f}ms "
+      f"p99 {np.percentile(lat_ms, 99):.1f}ms, "
+      f"{health['batches']} batches (mean {health['mean_batch']:.1f} "
+      f"queries/launch), served={health['served']} "
+      f"degraded={health['degraded']} [health schema "
+      f"{health['schema']}]")

@@ -1,17 +1,62 @@
-"""Serving stack: sharded retrieval engine with hedging, LM decode engine."""
+"""Serving stack: sharded retrieval engine with hedging, an async
+micro-batching front-end, and the LM decode engine.
 
-from .errors import (InvalidQueryError, PlanOverflowError, ResidencyError,
+The retrieval surface speaks ONE result dialect and ONE health dialect:
+
+**Results.** Every retrieval entry point — ``DeviceRetriever.retrieve`` /
+``retrieve_batch``, ``RetrievalEngine.retrieve`` / ``retrieve_batch``,
+and the futures ``ServingFrontend.submit`` resolves — returns a
+:class:`~repro.serve.results.RetrievalResult` carrying the winner boards
+plus the evidence they were produced on (plan, degradation trail,
+stage timings). It unpacks as the legacy ``(ids, scores)`` tuple, so
+pre-unification call sites keep working unchanged.
+
+**Health — the schema-2 contract.** Every level's ``health()`` —
+``DeviceRetriever``, ``ShardRuntime``, ``RetrievalEngine``,
+``ServingFrontend`` — returns one envelope
+(:func:`~repro.serve.health.health_envelope`) whose COMMON keys mean the
+same thing everywhere:
+
+* ``schema``  — the schema version int
+  (:data:`~repro.serve.health.HEALTH_SCHEMA`, currently ``2``);
+* ``served``  — responses this level completed: batches for a retriever
+  or shard, scatter-gather rounds for the engine, client requests for
+  the front-end;
+* ``degraded`` — how many of those were served degraded: exact-ladder
+  hops (retriever/shard), missed shards under quorum+deadline hedging
+  (engine), deadline-missed-but-answered requests (front-end). Degraded
+  responses are still EXACT — degradation changes cost, never results;
+* ``faults``  — typed-fault counts keyed by ``RetrievalError`` subclass
+  name, aggregated upward (the engine sums its shards');
+* ``queries`` — shared-sanitizer repair counters
+  (``core.retrieval.validate_query_batch`` keys, e.g.
+  ``clamped_tokens`` / ``dropped_tokens``).
+
+Level-specific extras (legacy spellings like ``batches_served`` /
+``responses``, per-shard breakdowns, the front-end's queue/batch stats)
+ride alongside the common keys; tooling written against schema 2 reads
+only the common ones.
+"""
+
+from .errors import (DeadlineExceededError, InvalidQueryError,
+                     PlanOverflowError, QueueOverflowError, ResidencyError,
                      RetrievalConfigError, RetrievalError,
                      ScoreIntegrityError, SnapshotIntegrityError,
                      SnapshotVersionError, TruncationWarning)
+from .health import HEALTH_SCHEMA, health_envelope
+from .results import PackedBatch, RetrievalResult
 from .retrieval_engine import (BlockedRetriever, DeviceRetriever,
                                GatheredRetriever, PrunedRetriever,
                                RetrievalEngine, ShardRuntime)
+from .frontend import ServingFrontend
 from .decode_engine import DecodeEngine
 
 __all__ = ["BlockedRetriever", "DeviceRetriever", "GatheredRetriever",
            "PrunedRetriever", "RetrievalEngine", "ShardRuntime",
+           "ServingFrontend", "RetrievalResult", "PackedBatch",
+           "HEALTH_SCHEMA", "health_envelope",
            "DecodeEngine", "RetrievalError", "InvalidQueryError",
            "PlanOverflowError", "ResidencyError", "ScoreIntegrityError",
            "RetrievalConfigError", "SnapshotIntegrityError",
-           "SnapshotVersionError", "TruncationWarning"]
+           "SnapshotVersionError", "DeadlineExceededError",
+           "QueueOverflowError", "TruncationWarning"]

@@ -31,6 +31,13 @@ only cost.
 * :class:`SnapshotVersionError`  — a snapshot's format name, version, or
   checksum algorithm is not one this build can read; never silently
   reinterpreted as a different layout.
+* :class:`DeadlineExceededError` — a queued request missed its serving
+  deadline before its micro-batch launched (the front-end's SLO miss);
+  carries how long the request waited so operators can see whether the
+  queue or the device was the bottleneck.
+* :class:`QueueOverflowError`    — the front-end's admission queue is
+  full; the submission is REJECTED at the door (backpressure) instead of
+  growing an unbounded queue whose tail latency lies to every client.
 * :class:`TruncationWarning`     — results are exact over a truncated
   posting set (budget overflow in the convenience API); a warning, not an
   error, because callers asked for a fixed budget.
@@ -96,6 +103,34 @@ class SnapshotVersionError(RetrievalError, ValueError):
     """A snapshot's format/version/checksum-algo is unknown to this build."""
 
 
+class DeadlineExceededError(RetrievalError, TimeoutError):
+    """A queued request missed its serving deadline before launch.
+
+    Raised on (or set as the exception of) a front-end request future
+    when the request's SLO budget (``ServingFrontend(request_timeout_s=
+    ...)``) expired while it was still waiting in the batch former.
+    ``waited_s`` records how long the request sat queued — also inherits
+    the builtin ``TimeoutError`` so generic timeout handlers catch it.
+    """
+
+    def __init__(self, message: str, *, waited_s: float | None = None):
+        super().__init__(message)
+        self.waited_s = waited_s
+
+
+class QueueOverflowError(RetrievalError, RuntimeError):
+    """The serving front-end's admission queue is full (backpressure).
+
+    Raised synchronously by ``ServingFrontend.submit`` — the request was
+    never admitted, so the caller can shed load or retry elsewhere.
+    ``pending`` carries the queue depth at rejection time.
+    """
+
+    def __init__(self, message: str, *, pending: int | None = None):
+        super().__init__(message)
+        self.pending = pending
+
+
 class TruncationWarning(RuntimeWarning):
     """Scores were computed over a truncated posting set (budget overflow)."""
 
@@ -104,5 +139,6 @@ __all__ = [
     "RetrievalError", "InvalidQueryError", "PlanOverflowError",
     "ResidencyError", "ScoreIntegrityError", "RetrievalConfigError",
     "SnapshotIntegrityError", "SnapshotVersionError",
+    "DeadlineExceededError", "QueueOverflowError",
     "TruncationWarning",
 ]

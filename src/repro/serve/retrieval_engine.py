@@ -54,8 +54,10 @@ plane.
 from __future__ import annotations
 
 import time
+import warnings
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
 from dataclasses import dataclass, field
+from functools import partial
 from typing import Callable, Sequence
 
 import numpy as np
@@ -65,6 +67,8 @@ from ..core.reference import ScipyBM25
 from ..core.retrieval import merge_topk
 from .errors import (ResidencyError, RetrievalConfigError, RetrievalError,
                      ScoreIntegrityError)
+from .health import health_envelope, merge_fault_counts
+from .results import PackedBatch, RetrievalResult
 
 
 def _empty_batch(n_queries: int):
@@ -143,9 +147,17 @@ class _DeviceRetrieverBase:
         self.retrieve_batch([q], min(k, self.n_docs))
 
     def retrieve(self, query_tokens: np.ndarray, k: int
-                 ) -> tuple[np.ndarray, np.ndarray]:
-        ids, vals = self.retrieve_batch([np.asarray(query_tokens)], k)
-        return ids[0], vals[0]
+                 ) -> RetrievalResult:
+        """One query -> :class:`RetrievalResult` with ``[k]`` boards.
+
+        The single-query row of :meth:`retrieve_batch`; unpacks as the
+        legacy ``(ids, scores)`` tuple.
+        """
+        r = self.retrieve_batch([np.asarray(query_tokens)], k)
+        return RetrievalResult(
+            ids=r.ids[0], scores=r.scores[0], plan=r.plan,
+            degradations=r.degradations, timings=r.timings,
+            degraded=r.degraded, latency_s=r.latency_s)
 
 
 class DeviceRetriever(_DeviceRetrieverBase):
@@ -361,17 +373,24 @@ class DeviceRetriever(_DeviceRetrieverBase):
             self.retrieve_batch([q], kk, regime="pruned")
 
     def health(self) -> dict:
-        """This retriever's ladder/fault/sanitizer counters (see
-        :meth:`RetrievalEngine.health` for the engine-level aggregate)."""
-        return {
-            "batches_served": self.batches_served,
-            "batches_degraded": self.batches_degraded,
-            "degradations": dict(self.degradation_counts),
-            "faults": dict(self.fault_counters),
-            "queries": dict(self.query_counters),
-            "snapshot": dict(getattr(self.dindex, "snapshot_report", None)
-                             or {}),
-        }
+        """Schema-2 health report (see ``repro.serve`` package docstring).
+
+        ``served``/``degraded`` count BATCHES at this level; ``degraded``
+        means the exact-fallback ladder hopped at least once. Legacy
+        spellings (``batches_served``/``batches_degraded``) ride along as
+        level extras.
+        """
+        return health_envelope(
+            served=self.batches_served,
+            degraded=self.batches_degraded,
+            faults=self.fault_counters,
+            queries=self.query_counters,
+            batches_served=self.batches_served,
+            batches_degraded=self.batches_degraded,
+            degradations=dict(self.degradation_counts),
+            snapshot=dict(getattr(self.dindex, "snapshot_report", None)
+                          or {}),
+        )
 
     def save(self, path, *, algo: str | None = None) -> dict:
         """Persist this retriever's resident index (see sparse.snapshot)."""
@@ -410,29 +429,29 @@ class DeviceRetriever(_DeviceRetrieverBase):
             return self.dindex.blk_tok is not None
         return False
 
-    def retrieve_batch(self, query_tokens: Sequence[np.ndarray], k: int,
-                       *, regime: str | None = None
-                       ) -> tuple[np.ndarray, np.ndarray]:
-        """B queries -> (ids [B, k], scores [B, k]), one launch per batch.
+    def pack_batch(self, query_tokens: Sequence[np.ndarray], *,
+                   strict: bool | None = None) -> PackedBatch:
+        """Host half of :meth:`retrieve_batch`: fault hook + sanitizer +
+        pow2 pack, split out so a front-end can OVERLAP packing batch
+        i+1 with device execution of batch i.
 
-        ``regime`` overrides this call's plan (used by warmup and the
-        benchmark sweep) and makes the call STRICT — a typed failure
-        surfaces instead of degrading (a forced regime that cannot run is
-        an operator error, not traffic to absorb). Normal traffic leaves
-        it None: the cost model picks the entry rung and any typed
-        failure walks the exact fallback ladder (see class docstring and
-        ROADMAP "Fault tolerance"), recording each hop in
-        ``last_plan.degradations``. ``on_fault="raise"`` (constructor)
-        makes every call strict. Every returned board passes a cheap
-        ``[B, k]`` finite-check; a NaN/Inf tile is a
-        :class:`~repro.serve.errors.ScoreIntegrityError` — degraded
-        around like any other fault.
+        Runs exactly the stages ``retrieve_batch`` runs before planning —
+        the ``query.batch`` fault site, the shared sanitizer
+        (``core.retrieval.validate_query_batch``, counting repairs into
+        ``query_counters``), and ``_pack_batch``'s pow2 bucketing — so
+        ``retrieve_batch(None, k, packed=pack_batch(qs))`` is
+        bit-identical to ``retrieve_batch(qs, k)`` by construction.
+        ``strict`` mirrors the retrieve-side strictness (default: the
+        constructor's ``on_fault``); strict packs surface faults instead
+        of entering the recoverable guard scope.
         """
         import contextlib
 
-        from ..core.retrieval import plan_retrieval, validate_query_batch
+        from ..core.retrieval import validate_query_batch
 
-        strict = regime is not None or self.on_fault == "raise"
+        t0 = time.perf_counter()
+        if strict is None:
+            strict = self.on_fault == "raise"
         _f = _faults_module()
         # guarded faults target RECOVERABLE scopes only: a strict call
         # re-raises instead of degrading, so it never enters the guard —
@@ -449,10 +468,65 @@ class DeviceRetriever(_DeviceRetrieverBase):
             query_tokens, self.index.n_vocab,
             counters=self.query_counters,
             on_invalid="raise" if self.on_fault == "raise" else "sanitize")
+        if self.n_docs == 0:                     # empty shard post-rescale
+            return PackedBatch(qs, len(qs), np.zeros(0, np.int32), None,
+                               None, None,
+                               pack_s=time.perf_counter() - t0)
+        b, uniq_batch, uniq_tab, weights, shift = self._pack_batch(qs)
+        return PackedBatch(qs, b, uniq_batch, uniq_tab, weights, shift,
+                           pack_s=time.perf_counter() - t0)
+
+    def retrieve_batch(self, query_tokens: Sequence[np.ndarray] | None,
+                       k: int, *, regime: str | None = None,
+                       packed: PackedBatch | None = None
+                       ) -> RetrievalResult:
+        """B queries -> :class:`RetrievalResult` with ``[B, k]`` boards,
+        one launch per batch (unpacks as the legacy ``(ids, scores)``).
+
+        ``regime`` overrides this call's plan (used by warmup and the
+        benchmark sweep) and makes the call STRICT — a typed failure
+        surfaces instead of degrading (a forced regime that cannot run is
+        an operator error, not traffic to absorb). Normal traffic leaves
+        it None: the cost model picks the entry rung and any typed
+        failure walks the exact fallback ladder (see class docstring and
+        ROADMAP "Fault tolerance"), recording each hop in the result's
+        ``degradations`` (also ``last_plan.degradations``).
+        ``on_fault="raise"`` (constructor) makes every call strict.
+        Every returned board passes a cheap ``[B, k]`` finite-check; a
+        NaN/Inf tile is a
+        :class:`~repro.serve.errors.ScoreIntegrityError` — degraded
+        around like any other fault.
+
+        ``packed`` resumes from a prior :meth:`pack_batch` (the
+        front-end's overlap path; ``query_tokens`` is then ignored and
+        may be None) — the sanitizer and fault hook already ran at pack
+        time, so results are bit-identical to the one-call path.
+        """
+        import contextlib
+
+        from ..core.retrieval import plan_retrieval
+
+        strict = regime is not None or self.on_fault == "raise"
+        _f = _faults_module()
+        # recoverable-scope guard for the EXECUTION stages (see
+        # pack_batch for the strictness rationale)
+        guard = (_f.guard if _f is not None and not strict
+                 else contextlib.nullcontext)
+        if packed is None:
+            packed = self.pack_batch(query_tokens, strict=strict)
+        t_start = time.perf_counter()            # exec clock excludes pack
+        qs = packed.qs
         self.last_queries = qs
         if self.n_docs == 0 or k <= 0:           # empty shard post-rescale
-            return _empty_batch(len(qs))
-        b, uniq_batch, uniq_tab, weights, shift = self._pack_batch(qs)
+            ids0, sc0 = _empty_batch(len(qs))
+            return RetrievalResult(
+                ids=ids0, scores=sc0,
+                timings={"pack_s": packed.pack_s, "execute_s": 0.0,
+                         "total_s": packed.pack_s},
+                latency_s=packed.pack_s)
+        b, uniq_batch, uniq_tab, weights, shift = (
+            packed.b, packed.uniq_batch, packed.uniq_tab, packed.weights,
+            packed.shift)
         kk = min(k, self.n_docs)
         # the pruned regime needs the block-max table and an accumulator
         # window matching its block grid (k can outgrow the block height)
@@ -544,7 +618,13 @@ class DeviceRetriever(_DeviceRetrieverBase):
                 # winners back to client ids (zero extra device bytes)
                 from ..sparse.reorder import remap_board
                 ids = remap_board(ids, board, perm)
-            return (ids + self.index.doc_offset, board)
+            exec_s = time.perf_counter() - t_start
+            return RetrievalResult(
+                ids=ids + self.index.doc_offset, scores=board, plan=plan,
+                degradations=list(trail), degraded=bool(trail),
+                timings={"pack_s": packed.pack_s, "execute_s": exec_s,
+                         "total_s": packed.pack_s + exec_s},
+                latency_s=packed.pack_s + exec_s)
         raise RetrievalError(
             f"every ladder hop failed or is unavailable (entry "
             f"{entry!r}, degradations {trail!r})") from last_err
@@ -782,36 +862,68 @@ class DeviceRetriever(_DeviceRetrieverBase):
         return ids, vals
 
 
+# -- deprecated regime aliases -------------------------------------------
+#
+# The forced-regime subclasses predate ``DeviceRetriever(regime=...)``;
+# they add nothing the keyword does not, so they are deprecation shims
+# now. Each warns ONCE per process (a fleet constructing thousands of
+# shard scorers should not drown its logs), tracked in ``_ALIAS_WARNED``;
+# tests reset it via :func:`_reset_alias_warnings`.
+
+_ALIAS_WARNED: set[str] = set()
+
+
+def _reset_alias_warnings() -> None:
+    """Re-arm the once-per-alias deprecation warnings (test hook)."""
+    _ALIAS_WARNED.clear()
+
+
+def _warn_alias(name: str, regime: str) -> None:
+    if name in _ALIAS_WARNED:
+        return
+    _ALIAS_WARNED.add(name)
+    warnings.warn(
+        f"{name} is deprecated; use DeviceRetriever(index, "
+        f"regime={regime!r}) instead",
+        DeprecationWarning, stacklevel=3)
+
+
 class BlockedRetriever(DeviceRetriever):
-    """Forced full-scan alias of :class:`DeviceRetriever` (compat shim)."""
+    """Deprecated alias for ``DeviceRetriever(regime="blocked")``."""
 
     def __init__(self, index: BM25Index, *, block_size: int = 512,
                  tile: int = 512, q_max: int = 32, **kwargs):
+        _warn_alias("BlockedRetriever", "blocked")
         super().__init__(index, regime="blocked", block_size=block_size,
                          tile=tile, q_max=q_max, **kwargs)
 
 
 class GatheredRetriever(DeviceRetriever):
-    """Forced query-gathered alias of :class:`DeviceRetriever`."""
+    """Deprecated alias for ``DeviceRetriever(regime="gathered")``."""
 
     def __init__(self, index: BM25Index, *, tile: int = 512,
                  acc_block: int = 512, q_max: int = 32, **kwargs):
+        _warn_alias("GatheredRetriever", "gathered")
         super().__init__(index, regime="gathered", tile=tile,
                          acc_block=acc_block, q_max=q_max, **kwargs)
 
 
 class PrunedRetriever(DeviceRetriever):
-    """Forced block-max-pruned alias of :class:`DeviceRetriever`."""
+    """Deprecated alias for ``DeviceRetriever(regime="pruned")``."""
 
     def __init__(self, index: BM25Index, *, tile: int = 512,
                  q_max: int = 32, **kwargs):
+        _warn_alias("PrunedRetriever", "pruned")
         super().__init__(index, regime="pruned", tile=tile, q_max=q_max,
                          **kwargs)
 
 
+# partials, not the alias classes: engine-internal construction must not
+# fire the deprecation warnings users are being migrated off of
 _SCORERS = {"scipy": ScipyBM25, "auto": DeviceRetriever,
-            "blocked": BlockedRetriever, "gathered": GatheredRetriever,
-            "pruned": PrunedRetriever}
+            "blocked": partial(DeviceRetriever, regime="blocked"),
+            "gathered": partial(DeviceRetriever, regime="gathered"),
+            "pruned": partial(DeviceRetriever, regime="pruned")}
 
 
 @dataclass
@@ -830,21 +942,24 @@ class ShardRuntime:
         self._scorer = _SCORERS[self.scorer](self.index, **self.scorer_opts)
 
     def health(self) -> dict:
-        """This shard's fault/degradation/sanitizer counters (device
-        scorers; the scipy reference scorer has none)."""
+        """Schema-2 health report for this shard (see ``repro.serve``
+        package docstring). ``served``/``degraded`` count this shard's
+        batches (the scipy reference scorer has no counters — zeros)."""
         sc = self._scorer
-        return {
-            "scorer": self.scorer,
-            "batches_served": getattr(sc, "batches_served", 0),
-            "batches_degraded": getattr(sc, "batches_degraded", 0),
-            "degradations": dict(getattr(sc, "degradation_counts", {})),
-            "faults": dict(getattr(sc, "fault_counters", {})),
-            "queries": dict(getattr(sc, "query_counters", {})),
-            "snapshot": dict(
+        return health_envelope(
+            served=getattr(sc, "batches_served", 0),
+            degraded=getattr(sc, "batches_degraded", 0),
+            faults=dict(getattr(sc, "fault_counters", {})),
+            queries=dict(getattr(sc, "query_counters", {})),
+            scorer=self.scorer,
+            batches_served=getattr(sc, "batches_served", 0),
+            batches_degraded=getattr(sc, "batches_degraded", 0),
+            degradations=dict(getattr(sc, "degradation_counts", {})),
+            snapshot=dict(
                 getattr(getattr(sc, "dindex", None), "snapshot_report",
                         None)
                 or getattr(self.index, "snapshot_report", None) or {}),
-        }
+        )
 
     def warmup(self, k: int) -> None:
         """Pre-compile the device scorer so query #1 skips compilation."""
@@ -873,15 +988,6 @@ class ShardRuntime:
         sc = np.stack([p[1][:kk] for p in parts]) if parts else \
             np.zeros((0, 0), np.float32)
         return ids.astype(np.int64), sc.astype(np.float32)
-
-
-@dataclass
-class RetrievalResult:
-    ids: np.ndarray
-    scores: np.ndarray
-    degraded: bool
-    shards_answered: int
-    latency_s: float
 
 
 def _same_shard(a: BM25Index, b: BM25Index) -> bool:
@@ -1113,22 +1219,30 @@ class RetrievalEngine:
 
         Fields (see ROADMAP "Fault tolerance"):
 
-        * ``responses`` / ``degraded_responses`` — scatter-gather rounds
-          served, and how many missed shards (quorum+deadline hedging);
-        * ``queries`` — engine-level sanitizer counters (clamped/dropped
-          tokens from malformed client batches);
+        Schema-2 envelope (see ``repro.serve`` package docstring):
+        ``served``/``degraded`` count scatter-gather rounds, and how many
+        missed shards (quorum+deadline hedging); ``faults`` aggregates
+        the per-shard typed-fault counts; ``queries`` are the
+        engine-boundary sanitizer counters. Engine extras:
+
+        * ``responses`` / ``degraded_responses`` — legacy spellings of
+          ``served`` / ``degraded``;
         * ``build`` — the last ``_build_runtimes`` reuse split;
         * ``shards`` — per-shard :meth:`ShardRuntime.health`: ladder
           degradation counts keyed ``"from->to"``, typed-fault counts
           keyed by error class, and the shard's own sanitizer counters.
         """
-        return {
-            "responses": self._responses,
-            "degraded_responses": self._degraded_responses,
-            "queries": dict(self.query_counters),
-            "build": dict(self.last_build_stats),
-            "shards": [rt.health() for rt in self.runtimes],
-        }
+        shard_reports = [rt.health() for rt in self.runtimes]
+        return health_envelope(
+            served=self._responses,
+            degraded=self._degraded_responses,
+            faults=merge_fault_counts(shard_reports),
+            queries=self.query_counters,
+            responses=self._responses,
+            degraded_responses=self._degraded_responses,
+            build=dict(self.last_build_stats),
+            shards=shard_reports,
+        )
 
     # -- data plane ----------------------------------------------------------
     def _scatter_gather(self, submit, merge, k: int):
@@ -1156,9 +1270,11 @@ class RetrievalEngine:
         degraded = len(done) < len(self.runtimes)
         self._responses += 1
         self._degraded_responses += int(degraded)
+        latency = time.time() - t0
         return RetrievalResult(
             ids=ids, scores=scores, degraded=degraded,
-            shards_answered=len(done), latency_s=time.time() - t0)
+            shards_answered=len(done), latency_s=latency,
+            timings={"total_s": latency})
 
     def _sanitize(self, query_batch):
         """Engine-boundary pass of the shared sanitizer — covers scipy

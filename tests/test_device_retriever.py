@@ -31,8 +31,7 @@ from repro.core import (BM25Params, ScipyBM25, build_index,
                         dense_oracle_scores, pad_queries, plan_retrieval,
                         topk_numpy)
 from repro.core.retrieval import DEFAULT_CROSSOVER
-from repro.serve import (BlockedRetriever, DeviceRetriever,
-                         GatheredRetriever, RetrievalEngine)
+from repro.serve import DeviceRetriever, RetrievalEngine
 from repro.sparse.block_csr import (TRANSFERS, DeviceIndex, PostingRunCache,
                                     fragment_plan, gather_posting_runs,
                                     reset_transfer_stats)
@@ -230,10 +229,10 @@ def test_planner_forced_aliases_honored(rng):
     corpus = make_corpus(rng, n_docs=60, n_vocab=200)
     idx = build_index(corpus, 200, params=BM25Params())
     q = [np.array([5], dtype=np.int32)]           # tail-ish: auto => gathered
-    br = BlockedRetriever(idx, block_size=16, tile=16, q_max=8)
+    br = DeviceRetriever(idx, regime="blocked", block_size=16, tile=16, q_max=8)
     br.retrieve_batch(q, 3)
     assert br.last_plan.regime == "blocked" and br.last_plan.forced
-    gr = GatheredRetriever(idx, tile=16, acc_block=16, q_max=8)
+    gr = DeviceRetriever(idx, regime="gathered", tile=16, acc_block=16, q_max=8)
     gr.retrieve_batch(q, 3)
     assert gr.last_plan.regime == "gathered" and gr.last_plan.forced
     # both give the same exact answer

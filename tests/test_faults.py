@@ -542,9 +542,8 @@ def test_guarded_fault_does_not_fire_outside_ladder(rng):
 # client CSC, trading the skip-rate win for exactness, never correctness.
 
 def _reordered_snap(tmp_path, rng, method="lucene"):
-    from repro.serve import PrunedRetriever
     idx = _mk(rng, method)
-    r = PrunedRetriever(idx, reorder="signature",
+    r = DeviceRetriever(idx, regime="pruned", reorder="signature",
                         **{k: v for k, v in SMALL.items()
                            if k != "acc_block"})
     assert r.dindex.perm is not None
@@ -570,11 +569,10 @@ def _corrupt(fname, offset=8):
 
 
 def _assert_adopted_identical(r, path, want_hop):
-    from repro.serve import PrunedRetriever
     from repro.sparse.block_csr import DeviceIndex
     di = DeviceIndex.load(path)
     assert want_hop in di.snapshot_report["hops"]
-    r2 = PrunedRetriever(None, device_index=di,
+    r2 = DeviceRetriever(None, regime="pruned", device_index=di,
                          **{k: v for k, v in SMALL.items()
                             if k != "acc_block"})
     rng_q = np.random.default_rng(5)
@@ -624,12 +622,11 @@ def test_perm_checksum_mismatch_falls_to_identity(tmp_path, rng,
         return p[::-1].copy()                       # a DIFFERENT valid perm
 
     monkeypatch.setattr(reorder_mod, "signature_permutation", drifted)
-    from repro.serve import PrunedRetriever
     from repro.sparse.block_csr import DeviceIndex
     di = DeviceIndex.load(path)
     assert "perm<-identity" in di.snapshot_report["hops"]
     assert di.perm is None
-    r2 = PrunedRetriever(None, device_index=di,
+    r2 = DeviceRetriever(None, regime="pruned", device_index=di,
                          **{k: v for k, v in SMALL.items()
                             if k != "acc_block"})
     rng_q = np.random.default_rng(5)
@@ -651,13 +648,12 @@ def test_reordered_snapshot_array_fault_recovers_exact(kind, tmp_path, rng):
     the injector picked and serving stays identical."""
     idx, r, path = _reordered_snap(tmp_path, rng)
     from repro.sparse.block_csr import DeviceIndex
-    from repro.serve import PrunedRetriever
     with inject_faults({"site": "snapshot.array", "kind": kind,
                         "times": 1, "seed": 11}) as sp:
         di = DeviceIndex.load(path)
     assert sp[0].fired == 1
     assert di.snapshot_report["hops"]
-    r2 = PrunedRetriever(None, device_index=di,
+    r2 = DeviceRetriever(None, regime="pruned", device_index=di,
                          **{k: v for k, v in SMALL.items()
                             if k != "acc_block"})
     rng_q = np.random.default_rng(5)

@@ -1,0 +1,304 @@
+"""Async micro-batching front-end + the unified retrieval API surface.
+
+Covers the PR-9 redesign contract:
+
+* :class:`ServingFrontend` batches arrivals by the jit-cache shape keys
+  and serves results BIT-IDENTICAL to direct ``retrieve_batch`` calls
+  (per BM25 variant — degradation and batching change cost, never
+  results);
+* every retrieval entry point speaks :class:`RetrievalResult`, which
+  unpacks as the legacy ``(ids, scores)`` tuple;
+* every ``health()`` level speaks the schema-2 envelope;
+* the deprecated forced-regime aliases still work but warn ONCE;
+* SLO machinery: deadline misses raise (or count degraded), a full
+  admission queue rejects with a typed error.
+"""
+
+import warnings
+
+import numpy as np
+import pytest
+
+from repro.core import BM25Params, ScipyBM25, build_index
+from repro.data.corpus import zipf_corpus, zipf_queries
+from repro.serve import (HEALTH_SCHEMA, BlockedRetriever,
+                         DeadlineExceededError, DeviceRetriever,
+                         GatheredRetriever, PrunedRetriever, QueueOverflowError,
+                         RetrievalEngine, RetrievalResult, ServingFrontend)
+from repro.serve.retrieval_engine import _reset_alias_warnings
+
+pytestmark = pytest.mark.no_chaos    # asserts exact counter values
+
+N_VOCAB = 120
+FIVE_VARIANTS = ("lucene", "robertson", "atire", "bm25l", "bm25+")
+SMALL = dict(block_size=32, tile=64, q_max=8, frag=64)
+
+
+@pytest.fixture(scope="module")
+def corpus():
+    return zipf_corpus(150, N_VOCAB, avg_len=25)
+
+
+@pytest.fixture(scope="module")
+def index(corpus):
+    return build_index(corpus, N_VOCAB, params=BM25Params())
+
+
+@pytest.fixture(scope="module")
+def retriever(index):
+    return DeviceRetriever(index, **SMALL)
+
+
+# -- unified result type -------------------------------------------------
+
+def test_result_tuple_unpack_compat(retriever):
+    qs = zipf_queries(3, N_VOCAB)
+    r = retriever.retrieve_batch(qs, 5)
+    assert isinstance(r, RetrievalResult)
+    ids, scores = r                                # legacy unpack order
+    assert ids is r.ids and scores is r.scores
+    assert r[0] is r.ids and r[1] is r.scores
+    assert len(r) == 2
+    assert tuple(r) == (r.ids, r.scores)
+    # evidence fields ride along
+    assert r.plan is not None and r.plan.regime in (
+        "blocked", "gathered", "pruned")
+    assert r.timings["total_s"] >= r.timings["execute_s"] >= 0
+    assert r.degradations == [] and r.degraded is False
+
+
+def test_result_single_query_row(retriever):
+    q = zipf_queries(1, N_VOCAB)[0]
+    r = retriever.retrieve(q, 5)
+    ids, scores = r
+    assert ids.shape == (5,) and scores.shape == (5,)
+    rb = retriever.retrieve_batch([q], 5)
+    np.testing.assert_array_equal(ids, rb.ids[0])
+    np.testing.assert_array_equal(scores, rb.scores[0])
+
+
+def test_engine_returns_unified_type(index):
+    eng = RetrievalEngine([index], scorer="gathered",
+                          scorer_opts=dict(SMALL), warmup=False)
+    qs = zipf_queries(3, N_VOCAB)
+    r = eng.retrieve_batch(qs, k=5)
+    assert isinstance(r, RetrievalResult)
+    ids, scores = r
+    assert ids.shape == (3, 5)
+    assert r.shards_answered == 1 and r.latency_s is not None
+    r1 = eng.retrieve(qs[0], k=5)
+    assert isinstance(r1, RetrievalResult)
+
+
+def test_pack_then_execute_bit_identical(retriever):
+    qs = zipf_queries(6, N_VOCAB)
+    direct = retriever.retrieve_batch(qs, 7)
+    packed = retriever.pack_batch(qs)
+    resumed = retriever.retrieve_batch(None, 7, packed=packed)
+    np.testing.assert_array_equal(direct.ids, resumed.ids)
+    np.testing.assert_array_equal(direct.scores, resumed.scores)
+
+
+# -- deprecated aliases --------------------------------------------------
+
+@pytest.mark.parametrize("alias,regime", [
+    (BlockedRetriever, "blocked"), (GatheredRetriever, "gathered"),
+    (PrunedRetriever, "pruned")])
+def test_alias_warns_once_and_forces_regime(index, alias, regime):
+    _reset_alias_warnings()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        r1 = alias(index, **SMALL)
+        alias(index, **SMALL)                     # second: silent
+    dep = [x for x in w if issubclass(x.category, DeprecationWarning)]
+    assert len(dep) == 1
+    assert "DeviceRetriever" in str(dep[0].message)
+    assert regime in str(dep[0].message)
+    assert r1.regime == regime
+    # alias output == keyword output (they are the same scorer)
+    qs = zipf_queries(2, N_VOCAB)
+    kw = DeviceRetriever(index, regime=regime, **SMALL)
+    np.testing.assert_array_equal(r1.retrieve_batch(qs, 5).ids,
+                                  kw.retrieve_batch(qs, 5).ids)
+
+
+def test_engine_scorers_do_not_warn(index):
+    _reset_alias_warnings()
+    with warnings.catch_warnings(record=True) as w:
+        warnings.simplefilter("always")
+        RetrievalEngine([index], scorer="pruned",
+                        scorer_opts=dict(SMALL), warmup=False)
+    assert not [x for x in w if issubclass(x.category, DeprecationWarning)]
+
+
+# -- health schema -------------------------------------------------------
+
+def test_health_schema_at_every_level(index, retriever):
+    common = {"schema", "served", "degraded", "faults", "queries"}
+    eng = RetrievalEngine([index], scorer="gathered",
+                          scorer_opts=dict(SMALL), warmup=False)
+    eng.retrieve_batch(zipf_queries(2, N_VOCAB), k=5)
+    fe = ServingFrontend(retriever, k=5, max_batch=4,
+                         batch_deadline_s=0.001)
+    fe.submit(zipf_queries(1, N_VOCAB)[0]).result(timeout=30)
+    fe.close()
+    reports = {
+        "retriever": retriever.health(),
+        "shard": eng.runtimes[0].health(),
+        "engine": eng.health(),
+        "frontend": fe.health(),
+    }
+    for level, h in reports.items():
+        missing = common - set(h)
+        assert not missing, f"{level} missing {missing}"
+        assert h["schema"] == HEALTH_SCHEMA
+        assert isinstance(h["faults"], dict)
+        assert isinstance(h["queries"], dict)
+    # legacy spellings still present
+    assert reports["retriever"]["batches_served"] == \
+        reports["retriever"]["served"]
+    assert reports["engine"]["responses"] == reports["engine"]["served"]
+    assert reports["engine"]["shards"][0]["schema"] == HEALTH_SCHEMA
+    assert reports["frontend"]["served"] == 1
+    assert reports["frontend"]["retriever"]["schema"] == HEALTH_SCHEMA
+
+
+# -- frontend: bit-identity ----------------------------------------------
+
+@pytest.mark.parametrize("variant", FIVE_VARIANTS)
+def test_frontend_bit_identical_to_direct(corpus, variant):
+    """Every batch the frontend FORMS serves bit-identically to a direct
+    ``retrieve_batch`` call on that same batch — micro-batching changes
+    cost, never results (per BM25 variant)."""
+    idx = build_index(corpus, N_VOCAB, params=BM25Params(method=variant))
+    dr = DeviceRetriever(idx, **SMALL)
+    qs = zipf_queries(8, N_VOCAB)
+    with ServingFrontend(dr, k=5, max_batch=4, batch_deadline_s=0.005,
+                         record_batches=True) as fe:
+        futs = [fe.submit(q) for q in qs]
+        rows = [f.result(timeout=60) for f in futs]
+    assert fe.recorded                             # batches actually formed
+    served = 0
+    for batch_qs, kk, res in fe.recorded:
+        replay = dr.retrieve_batch(batch_qs, kk)   # direct, same batch
+        np.testing.assert_array_equal(res.ids, replay.ids)
+        np.testing.assert_array_equal(res.scores, replay.scores)
+        served += len(batch_qs)
+    assert served == len(qs)
+    # and every per-request row agrees with the numpy oracle
+    sp = ScipyBM25(idx)
+    for i, q in enumerate(qs):
+        _, ref_v = sp.retrieve(q, 5)
+        np.testing.assert_allclose(np.sort(rows[i].scores),
+                                   np.sort(ref_v), atol=1e-3)
+
+
+def test_frontend_forms_batches(retriever):
+    """Concurrent same-shape arrivals share launches (micro-batching)."""
+    qs = zipf_queries(12, N_VOCAB)
+    with ServingFrontend(retriever, k=5, max_batch=4,
+                         batch_deadline_s=0.05) as fe:
+        futs = [fe.submit(q) for q in qs]
+        for f in futs:
+            f.result(timeout=60)
+        h = fe.health()
+    assert h["served"] == 12
+    assert h["batches"] < 12                      # amortization happened
+    assert h["flushes"]["size"] >= 1
+    assert h["mean_batch"] > 1.0
+
+
+def test_frontend_engine_target(index):
+    """The single-stage path serves RetrievalEngine targets too."""
+    eng = RetrievalEngine([index], scorer="gathered",
+                          scorer_opts=dict(SMALL), warmup=False)
+    q = zipf_queries(1, N_VOCAB)[0]
+    with ServingFrontend(eng, k=5, max_batch=2,
+                         batch_deadline_s=0.001) as fe:
+        row = fe.submit(q).result(timeout=30)
+    direct = eng.retrieve_batch([q], k=5)
+    np.testing.assert_array_equal(row.ids, direct.ids[0])
+    np.testing.assert_array_equal(row.scores, direct.scores[0])
+
+
+def test_frontend_asubmit(retriever):
+    import asyncio
+
+    qs = zipf_queries(3, N_VOCAB)
+
+    async def drive(fe):
+        return await asyncio.gather(*(fe.asubmit(q) for q in qs))
+
+    with ServingFrontend(retriever, k=5, max_batch=8,
+                         batch_deadline_s=0.05) as fe:
+        rows = asyncio.run(drive(fe))
+    direct = retriever.retrieve_batch(qs, 5)       # same formed batch of 3
+    for i, row in enumerate(rows):
+        np.testing.assert_array_equal(row.ids, direct.ids[i])
+
+
+# -- frontend: SLO + admission control -----------------------------------
+
+def test_queue_overflow_typed_raise(retriever):
+    fe = ServingFrontend(retriever, k=5, max_queue=2, autostart=False)
+    fe._started = True                  # admit without draining (no threads)
+    q = zipf_queries(1, N_VOCAB)[0]
+    fe.submit(q)
+    fe.submit(q)
+    with pytest.raises(QueueOverflowError) as ei:
+        fe.submit(q)
+    assert ei.value.pending == 2
+    assert isinstance(ei.value, RuntimeError)     # builtin-compat base
+    assert fe.health()["rejected"] == 1
+
+
+def test_deadline_miss_raises_typed(retriever):
+    """on_miss="raise": a request that waited past its SLO fails typed."""
+    fe = ServingFrontend(retriever, k=5, max_batch=8,
+                         batch_deadline_s=0.05, request_timeout_s=1e-9,
+                         on_miss="raise", autostart=False)
+    fe._started = True
+    q = zipf_queries(1, N_VOCAB)[0]
+    fut = fe.submit(q)
+    fe._started = False
+    fe.start()                          # former drains the queued request
+    with pytest.raises(DeadlineExceededError) as ei:
+        fut.result(timeout=30)
+    assert ei.value.waited_s is not None and ei.value.waited_s > 0
+    assert isinstance(ei.value, TimeoutError)     # builtin-compat base
+    fe.close()
+    h = fe.health()
+    assert h["deadline_missed"] == 1
+    assert h["faults"].get("DeadlineExceededError") == 1
+
+
+def test_deadline_miss_counts_degraded(retriever):
+    """on_miss="degrade" (default): served exactly, counted degraded."""
+    fe = ServingFrontend(retriever, k=5, max_batch=8,
+                         batch_deadline_s=0.05, request_timeout_s=1e-9,
+                         autostart=False)
+    fe._started = True
+    q = zipf_queries(1, N_VOCAB)[0]
+    fut = fe.submit(q)
+    fe._started = False
+    fe.start()
+    row = fut.result(timeout=30)
+    fe.close()
+    assert row.degraded                            # SLO miss flagged
+    direct = retriever.retrieve_batch([q], 5)      # ... but still exact
+    np.testing.assert_array_equal(row.ids, direct.ids[0])
+    h = fe.health()
+    assert h["deadline_missed"] == 1 and h["degraded"] == 1
+    assert h["served"] == 1
+
+
+def test_close_drains_pending(retriever):
+    fe = ServingFrontend(retriever, k=5, max_batch=64,
+                         batch_deadline_s=30.0)    # deadline never fires
+    futs = [fe.submit(q) for q in zipf_queries(5, N_VOCAB)]
+    fe.close()                                     # drain flush
+    for f in futs:
+        assert f.result(timeout=5).ids.shape == (5,)
+    assert fe.health()["flushes"]["drain"] >= 1
+    with pytest.raises(RuntimeError):
+        fe.submit(zipf_queries(1, N_VOCAB)[0])     # closed: no admission

@@ -285,11 +285,11 @@ def test_corpus_coo_rejects_out_of_range_tokens(rng):
 
 def test_blocked_scorer_long_query_not_truncated(rng):
     """Queries with more unique tokens than the q_max floor stay exact."""
-    from repro.serve import BlockedRetriever
+    from repro.serve import DeviceRetriever
     from repro.core import ScipyBM25
     corpus = make_corpus(rng, n_docs=100, n_vocab=120, max_len=40)
     idx = build_index(corpus, 120, params=BM25Params())
-    br = BlockedRetriever(idx, block_size=32, tile=64, q_max=8)
+    br = DeviceRetriever(idx, regime="blocked", block_size=32, tile=64, q_max=8)
     q = rng.choice(120, size=40, replace=False).astype(np.int32)  # 40 > 8
     ids, vals = br.retrieve(q, k=5)
     ref_ids, ref_vals = ScipyBM25(idx).retrieve(q, 5)

@@ -25,6 +25,7 @@ from repro.core import (BM25Params, ScipyBM25, batch_posting_budget,
                         dense_oracle_scores, merge_topk_batch, pad_queries,
                         sharded_retrieve_adaptive, suggest_p_max, topk_numpy)
 from repro.kernels import ops, ref
+from repro.serve import DeviceRetriever
 from repro.kernels.bm25_gather_score import bm25_gather_score_topk
 from repro.sparse.block_csr import (gather_posting_runs, pack_query_batch,
                                     posting_runs, query_nonoccurrence_shift)
@@ -415,10 +416,9 @@ def test_pad_queries_return_uniq_matches_full_sort(rng):
 def test_retriever_ragged_batch_sizes_exact(rng):
     """The batch dim is pow2-bucketed (padded with empty queries) — ragged
     batch sizes must still return [b_true, k] exact results."""
-    from repro.serve import GatheredRetriever
     corpus = make_corpus(rng, n_docs=60, n_vocab=40)
     idx = build_index(corpus, 40, params=BM25Params(method="bm25+"))
-    gr = GatheredRetriever(idx, tile=64, acc_block=32)
+    gr = DeviceRetriever(idx, regime="gathered", tile=64, acc_block=32)
     sc = ScipyBM25(idx)
     for b in (1, 3, 9):                          # crosses the B=8 floor
         qs = [rng.integers(0, 40, size=4).astype(np.int32)

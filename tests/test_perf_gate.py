@@ -346,3 +346,98 @@ def test_gate_trips_on_reorder_byte_inequality():
     legacy = _bench(_cell())
     _, failures = compare(legacy, copy.deepcopy(legacy))
     assert failures == []
+
+
+# -- BENCH_7 serving cells (PR-9 micro-batching front-end) ---------------
+
+def _serving_cell(rate=800.0, deadline=2.0, p99=12.0, direct_p99=70.0,
+                  bit_identical=True):
+    return {"rate_qps": rate, "deadline_ms": deadline, "k": 10,
+            "frontend_p99_ms": p99, "direct_p99_ms": direct_p99,
+            "throughput_gain": round(direct_p99 / p99, 2),
+            "bit_identical": bit_identical}
+
+
+def _serving_bench(*cells, zero_copy=None):
+    return {"serving": {"cells": list(cells)},
+            "zero_copy": zero_copy or {"posting_bytes": 0,
+                                       "descriptor_bytes": 0}}
+
+
+def test_serving_gate_passes_identical_runs():
+    base = _serving_bench(_serving_cell(), _serving_cell(rate=100.0))
+    rows, failures = compare(base, copy.deepcopy(base))
+    assert failures == []
+    assert any(r["metric"] == "frontend_p99_ms" for r in rows)
+
+
+def test_serving_gate_trips_on_p99_regression():
+    """>25% frontend p99 at a fixed (rate, deadline) cell fails."""
+    base = _serving_bench(_serving_cell(p99=12.0),
+                          _serving_cell(rate=100.0, p99=6.0))
+    cand = copy.deepcopy(base)
+    cand["serving"]["cells"][0]["frontend_p99_ms"] = 20.0   # 1.67x, +8ms
+    rows, failures = compare(base, cand, max_ratio=1.25)
+    assert len(failures) == 1
+    assert "frontend_p99_ms" in failures[0]
+    assert sum(r["status"] == "REGRESSED" for r in rows) == 1
+
+
+def test_serving_gate_millisecond_floor():
+    """p99 jitter under the ms floor must not flap the gate."""
+    base = _serving_bench(_serving_cell(p99=1.0))
+    cand = _serving_bench(_serving_cell(p99=2.5))     # 2.5x but +1.5ms
+    _, failures = compare(base, cand, max_ratio=1.25)
+    assert failures == []
+
+
+def test_serving_gate_trips_on_dropped_bit_identity():
+    base = _serving_bench(_serving_cell())
+    cand = _serving_bench(_serving_cell(bit_identical=False))
+    rows, failures = compare(base, cand)
+    assert any("bit_identical" in f for f in failures)
+    assert any(r["status"] == "BROKEN" for r in rows)
+
+
+def test_serving_gate_trips_on_zero_copy_leak():
+    base = _serving_bench(_serving_cell())
+    cand = _serving_bench(_serving_cell(),
+                          zero_copy={"posting_bytes": 4096,
+                                     "descriptor_bytes": 0})
+    _, failures = compare(base, cand)
+    assert any("zero-copy" in f and "posting_bytes" in f
+               for f in failures)
+
+
+def test_serving_gate_fails_on_empty_serving_intersection():
+    """A (rate, deadline) grid change silently disabling the p99 gate
+    fails, mirroring the planner-cell vacuous-gate protection."""
+    base = _serving_bench(_serving_cell(rate=800.0))
+    cand = _serving_bench(_serving_cell(rate=999.0))
+    _, failures = compare(base, cand)
+    assert any("serving cell matched" in f for f in failures)
+    _, failures = compare(base, cand, allow_empty_intersection=True)
+    assert not any("serving cell matched" in f for f in failures)
+
+
+def test_serving_gate_tolerates_pre_serving_baseline():
+    """Baselines predating BENCH_7 have no serving section — candidate
+    serving cells report as new, never regress-fail."""
+    base = _bench(_cell())
+    cand = _bench(_cell())
+    cand.update(_serving_bench(_serving_cell()))
+    rows, failures = compare(base, cand)
+    assert failures == []
+    serv = [r for r in rows if r["metric"] == "frontend_p99_ms"]
+    assert serv and all(r["status"] == "new" for r in serv)
+
+
+def test_main_inject_slowdown_trips_serving_gate(tmp_path):
+    base = _serving_bench(_serving_cell(p99=20.0))
+    b = tmp_path / "base.json"
+    c = tmp_path / "cand.json"
+    b.write_text(json.dumps(base))
+    c.write_text(json.dumps(base))
+    assert main(["--baseline", str(b), "--candidate", str(c)]) == 0
+    assert main(["--baseline", str(b), "--candidate", str(c),
+                 "--inject-slowdown", "1.5"]) == 1

@@ -34,7 +34,7 @@ from repro.core import (BM25Params, ScipyBM25, build_index,
                         build_sharded_indexes, dense_oracle_scores,
                         plan_retrieval, topk_numpy)
 from repro.core.retrieval import PRUNE_DISCOUNT
-from repro.serve import DeviceRetriever, PrunedRetriever, RetrievalEngine
+from repro.serve import DeviceRetriever, RetrievalEngine
 from repro.sparse.block_csr import (TRANSFERS, DeviceIndex,
                                     block_upper_bounds, build_block_max,
                                     fragment_plan, prune_fragment_plan,
@@ -76,7 +76,7 @@ def test_pruned_bit_identical_all_variants(method, bmax_dtype, rng):
     corpus = make_skewed_corpus(rng)
     idx = build_index(corpus, 60, params=BM25Params(method=method))
     oracle = _oracle(idx)
-    pruned = PrunedRetriever(idx, bmax_dtype=bmax_dtype, **SMALL)
+    pruned = DeviceRetriever(idx, regime="pruned", bmax_dtype=bmax_dtype, **SMALL)
     queries = [np.array([0], np.int32),
                rng.integers(0, 60, size=4).astype(np.int32),
                np.zeros(0, np.int32)]               # empty query in-batch
@@ -97,7 +97,7 @@ def test_pruned_device_plan_bit_identical(method, rng):
     corpus = make_skewed_corpus(rng)
     idx = build_index(corpus, 60, params=BM25Params(method=method))
     oracle = _oracle(idx)
-    pruned = PrunedRetriever(idx, plan="device", bmax_dtype="u8", **SMALL)
+    pruned = DeviceRetriever(idx, regime="pruned", plan="device", bmax_dtype="u8", **SMALL)
     queries = [np.array([0], np.int32),
                rng.integers(0, 60, size=5).astype(np.int32)]
     for k in (1, 4):
@@ -114,7 +114,7 @@ def test_prelaunch_compaction_fires_and_auto_picks_pruned(rng):
     corpus = make_skewed_corpus(rng)
     idx = build_index(corpus, 60, params=BM25Params())
     oracle = _oracle(idx)
-    pruned = PrunedRetriever(idx, **SMALL)
+    pruned = DeviceRetriever(idx, regime="pruned", **SMALL)
     q = [np.array([0], np.int32)]
     i0, v0 = oracle.retrieve_batch(q, 1)
     i1, v1 = pruned.retrieve_batch(q, 1)
@@ -159,7 +159,7 @@ def test_inkernel_skip_fires_on_late_saturating_threshold(rng):
     q = [np.array([0, 1], np.int32)]
     i0, v0 = oracle.retrieve_batch(q, 1)
     for plan in ("host", "device"):
-        pruned = PrunedRetriever(idx, plan=plan, **SMALL)
+        pruned = DeviceRetriever(idx, regime="pruned", plan=plan, **SMALL)
         i1, v1 = pruned.retrieve_batch(q, 1)
         np.testing.assert_array_equal(v0, v1)
         np.testing.assert_array_equal(i0, i1)
@@ -175,7 +175,7 @@ def test_pruned_edge_cases_exact(rng):
     for method in ("lucene", "robertson"):
         idx = build_index(corpus, 50, params=BM25Params(method=method))
         oracle = _oracle(idx)
-        pruned = PrunedRetriever(idx, **SMALL)
+        pruned = DeviceRetriever(idx, regime="pruned", **SMALL)
         for qs in ([np.zeros(0, np.int32)],
                    [np.array([48, 49], np.int32)],
                    [np.zeros(0, np.int32), np.array([1, 2], np.int32)]):
@@ -200,7 +200,7 @@ def test_all_nonseed_fragments_pruned(rng):
         corpus.append(base)
     idx = build_index(corpus, 40, params=BM25Params())
     oracle = _oracle(idx)
-    pruned = PrunedRetriever(idx, **SMALL)
+    pruned = DeviceRetriever(idx, regime="pruned", **SMALL)
     q = [np.array([0], np.int32)]
     i0, v0 = oracle.retrieve_batch(q, 1)
     i1, v1 = pruned.retrieve_batch(q, 1)
@@ -220,13 +220,13 @@ def test_pruned_steady_state_zero_posting_bytes(rng):
     corpus = make_skewed_corpus(rng)
     idx = build_index(corpus, 60, params=BM25Params())
     qs = [np.array([0], np.int32), np.array([3, 7], np.int32)]
-    host = PrunedRetriever(idx, **SMALL)
+    host = DeviceRetriever(idx, regime="pruned", **SMALL)
     host.retrieve_batch(qs, 3)
     reset_transfer_stats()
     host.retrieve_batch(qs, 3)
     assert TRANSFERS.posting_bytes == 0              # bounds ship as
     assert TRANSFERS.descriptor_bytes > 0            # descriptors only
-    dev = PrunedRetriever(idx, plan="device", **SMALL)
+    dev = DeviceRetriever(idx, regime="pruned", plan="device", **SMALL)
     dev.retrieve_batch(qs, 3)
     reset_transfer_stats()
     dev.retrieve_batch(qs, 3)

@@ -32,7 +32,7 @@ from conftest import (HAVE_HYPOTHESIS, given, make_corpus, settings, st)
 from repro.core import (BM25Params, ScipyBM25, build_index,
                         build_sharded_indexes, dense_oracle_scores,
                         topk_numpy)
-from repro.serve import DeviceRetriever, PrunedRetriever, RetrievalEngine
+from repro.serve import DeviceRetriever, RetrievalEngine
 from repro.sparse.block_csr import (TRANSFERS, DeviceIndex,
                                     reset_transfer_stats)
 from repro.sparse.reorder import (REORDER_MODES, doc_signatures,
@@ -234,7 +234,7 @@ def test_reordered_pruned_bit_identical(method, bmax_dtype, rng):
     corpus = make_clustered_corpus(rng)
     idx = build_index(corpus, 60, params=BM25Params(method=method))
     oracle = _reordered_oracle(idx)
-    pruned = PrunedRetriever(idx, bmax_dtype=bmax_dtype,
+    pruned = DeviceRetriever(idx, regime="pruned", bmax_dtype=bmax_dtype,
                              reorder="signature", **SMALL)
     assert pruned.dindex.perm is not None
     queries = [np.array([0], np.int32),
@@ -256,7 +256,7 @@ def test_reordered_device_plan_bit_identical(rng):
     corpus = make_clustered_corpus(rng)
     idx = build_index(corpus, 60, params=BM25Params())
     oracle = _reordered_oracle(idx)
-    pruned = PrunedRetriever(idx, plan="device", bmax_dtype="u8",
+    pruned = DeviceRetriever(idx, regime="pruned", plan="device", bmax_dtype="u8",
                              reorder="signature", **SMALL)
     queries = [np.array([0], np.int32),
                rng.integers(0, 60, size=5).astype(np.int32)]
@@ -273,8 +273,8 @@ def test_reordered_vs_unordered_same_answers(rng):
     unambiguous at f32."""
     corpus = make_clustered_corpus(rng, n_docs=200, n_vocab=50)
     idx = build_index(corpus, 50, params=BM25Params(method="lucene"))
-    plain = PrunedRetriever(idx, **SMALL)
-    reord = PrunedRetriever(idx, reorder="signature", **SMALL)
+    plain = DeviceRetriever(idx, regime="pruned", **SMALL)
+    reord = DeviceRetriever(idx, regime="pruned", reorder="signature", **SMALL)
     queries = [rng.integers(0, 50, size=4).astype(np.int32)
                for _ in range(3)]
     i0, v0 = plain.retrieve_batch(queries, 7)
@@ -294,8 +294,8 @@ def test_reorder_moves_zero_extra_device_bytes(rng):
     blocks — but the host-gather remap must never add device traffic)."""
     corpus = make_clustered_corpus(rng)
     idx = build_index(corpus, 60, params=BM25Params())
-    plain = PrunedRetriever(idx, **SMALL)
-    reord = PrunedRetriever(idx, reorder="signature", **SMALL)
+    plain = DeviceRetriever(idx, regime="pruned", **SMALL)
+    reord = DeviceRetriever(idx, regime="pruned", reorder="signature", **SMALL)
     queries = [rng.integers(0, 60, size=4).astype(np.int32)]
 
     def batch_bytes(r):
@@ -315,8 +315,8 @@ def test_reorder_raises_skip_rate_on_clustered_corpus(rng):
     more fragments pruned/skipped than random order."""
     corpus = make_clustered_corpus(rng, n_docs=600, n_vocab=60)
     idx = build_index(corpus, 60, params=BM25Params())
-    plain = PrunedRetriever(idx, **SMALL)
-    reord = PrunedRetriever(idx, reorder="signature", **SMALL)
+    plain = DeviceRetriever(idx, regime="pruned", **SMALL)
+    reord = DeviceRetriever(idx, regime="pruned", reorder="signature", **SMALL)
 
     def skip_rate(r):
         tot_p = tot_d = 0
@@ -361,9 +361,9 @@ def test_reuse_requires_matching_permutation(rng):
 def test_reordered_host_arrays_drop_serves_exactly(rng):
     corpus = make_clustered_corpus(rng, n_docs=120, n_vocab=40)
     idx = build_index(corpus, 40, params=BM25Params())
-    keep = PrunedRetriever(idx, reorder="signature", plan="device",
+    keep = DeviceRetriever(idx, regime="pruned", reorder="signature", plan="device",
                            **SMALL)
-    drop = PrunedRetriever(idx, reorder="signature", plan="device",
+    drop = DeviceRetriever(idx, regime="pruned", reorder="signature", plan="device",
                            host_arrays="drop", **SMALL)
     queries = [rng.integers(0, 40, size=4).astype(np.int32),
                np.array([0], np.int32)]
@@ -444,7 +444,7 @@ def test_property_reordered_serving_exact(data):
                            ).astype(np.int32) for _ in range(n_docs)]
     idx = build_index(corpus, n_vocab, params=BM25Params(method=method))
     oracle = _reordered_oracle(idx, bmax_dtype=bmax_dtype, plan=plan)
-    pruned = PrunedRetriever(idx, bmax_dtype=bmax_dtype, plan=plan,
+    pruned = DeviceRetriever(idx, regime="pruned", bmax_dtype=bmax_dtype, plan=plan,
                              reorder="signature", **SMALL)
     k = data.draw(st.sampled_from([1, 3, n_docs, n_docs + 5]))
     queries = [rng.integers(0, n_vocab, size=rng.integers(0, 5)
