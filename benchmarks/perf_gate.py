@@ -33,6 +33,18 @@ job when either:
   zero-copy audit reports any steady-state posting/descriptor bytes.
   Schema-tolerant like BENCH_6: baselines without serving cells are not
   penalized, but a baseline WITH serving cells whose grid no longer
+  intersects the candidate's fails (vacuous-gate protection), or
+* (BENCH_8 overload cells) the protected front-end's ``goodput_ratio``
+  (goodput / measured capacity, machine-independent) at a fixed
+  ``rate_factor`` drops by more than 25% relative to the baseline's
+  ratio — the admission gate stopped protecting throughput. Candidate-
+  side hard gates, baseline or not: a nonzero ``shed_leak`` (a shed
+  request that still consumed device work) is a LEAK; ``dominates``
+  false past saturation, a dropped ``bit_identical`` assertion, or
+  ``p99_bounded`` false (admitted-p99 growing with offered load — the
+  gate stopped bounding the queue) are BROKEN. Schema-tolerant:
+  baselines without an ``overload`` section are not penalized, but a
+  baseline WITH overload cells whose ``rate_factor`` grid no longer
   intersects the candidate's fails (vacuous-gate protection).
 
 Cells are matched on ``(n_docs, n_vocab, profile, batch, k)``; cells or
@@ -135,6 +147,20 @@ DEGRADED_COL = "degradations_per_batch_healthy"
 SERVING_KEY = ("rate_qps", "deadline_ms")
 SERVING_P99_COL = "frontend_p99_ms"
 SERVING_ABS_FLOOR_MS = 2.0
+
+# BENCH_8 (overload sweep): cells are matched on rate_factor — offered
+# load as a multiple of MEASURED capacity — so the comparison survives
+# runner-speed differences between refs (absolute qps does not). The
+# gated column is goodput_ratio = goodput / capacity, also
+# machine-independent. shed_leak / dominates / bit_identical /
+# p99_bounded are candidate-side hard gates: they encode the overload
+# contract itself (a shed request must cost zero device work; protection
+# must strictly beat no-protection past saturation; admitted requests
+# stay bit-identical; admitted p99 must not grow with offered load), so
+# a candidate violating them fails even against an old baseline.
+OVERLOAD_KEY = ("rate_factor",)
+GOODPUT_COL = "goodput_ratio"
+GOODPUT_MAX_DROP = 0.25
 
 
 def cell_key(cell: dict) -> tuple:
@@ -334,6 +360,78 @@ def compare(baseline: dict, candidate: dict, *, max_ratio: float = 1.25,
             "the frontend p99 gate would be vacuous. Keep the "
             "(rate, deadline) grid stable or pass "
             "--allow-empty-intersection in the grid-migration PR.")
+    # -- BENCH_8 overload cells (goodput under admission control) --------
+    base_over = {tuple(c.get(k) for k in OVERLOAD_KEY): c
+                 for c in (baseline.get("overload") or {}).get("cells", [])}
+    had_over_base = bool(base_over)
+    over_matched = 0
+    cand_over = candidate.get("overload") or {}
+    for cand in cand_over.get("cells", []):
+        key = tuple(cand.get(k) for k in OVERLOAD_KEY)
+        base = base_over.pop(key, None)
+        ratio_val = cand.get(GOODPUT_COL)
+        row = {"cell": ("overload",) + key, "metric": GOODPUT_COL,
+               "candidate_s": ratio_val}
+        if base is None or GOODPUT_COL not in base:
+            row.update(baseline_s=None, ratio=None, status="new")
+        else:
+            over_matched += 1
+            base_ratio = base[GOODPUT_COL]
+            rel = (ratio_val or 0.0) / max(base_ratio, 1e-9)
+            dropped = (base_ratio > 0
+                       and (ratio_val or 0.0)
+                       < (1.0 - GOODPUT_MAX_DROP) * base_ratio)
+            row.update(baseline_s=base_ratio, ratio=round(rel, 3),
+                       status="COLLAPSED" if dropped else "ok")
+            if dropped:
+                failures.append(
+                    f"overload {key} {GOODPUT_COL}: {base_ratio:.3f} -> "
+                    f"{ratio_val:.3f} (>{GOODPUT_MAX_DROP:.0%} goodput "
+                    f"drop at a fixed rate_factor — the admission gate "
+                    f"stopped protecting throughput under overload)")
+        rows.append(row)
+        leak = cand.get("shed_leak", 0)
+        rows.append({"cell": ("overload",) + key, "metric": "shed_leak",
+                     "candidate_s": leak, "baseline_s": 0, "ratio": None,
+                     "status": "LEAK" if leak else "ok"})
+        if leak:
+            failures.append(
+                f"overload {key}: shed_leak={leak} — a shed request "
+                f"consumed device work (admission must reject BEFORE "
+                f"the request reaches the batch former)")
+        if cand.get("dominates") is False:
+            rows.append({"cell": ("overload",) + key,
+                         "metric": "dominates", "candidate_s": False,
+                         "baseline_s": True, "ratio": None,
+                         "status": "BROKEN"})
+            failures.append(
+                f"overload {key}: protected p99 does not dominate the "
+                f"unprotected frontend past saturation — shedding is "
+                f"not buying the latency it exists to buy")
+        if not cand.get("bit_identical", False):
+            rows.append({"cell": ("overload",) + key,
+                         "metric": "bit_identical", "candidate_s": False,
+                         "baseline_s": True, "ratio": None,
+                         "status": "BROKEN"})
+            failures.append(
+                f"overload {key}: bit_identical is not asserted — "
+                f"admitted requests must replay bit-for-bit against "
+                f"direct retrieve_batch calls")
+    if cand_over.get("cells") and cand_over.get("p99_bounded") is False:
+        rows.append({"cell": ("overload",), "metric": "p99_bounded",
+                     "candidate_s": False, "baseline_s": True,
+                     "ratio": None, "status": "BROKEN"})
+        failures.append(
+            "overload: admitted-request p99 grows with offered load — "
+            "the admission gate is not bounding the queue (CoDel target "
+            "or bucket rate mistuned)")
+    if (had_over_base and over_matched == 0
+            and not allow_empty_intersection):
+        failures.append(
+            "no overload cell matched between baseline and candidate — "
+            "the goodput gate would be vacuous. Keep the rate_factor "
+            "grid stable or pass --allow-empty-intersection in the "
+            "grid-migration PR.")
     if matched == 0 and had_base and not allow_empty_intersection:
         # zero comparable cells would make the latency gate pass
         # VACUOUSLY — the silent-disable path a sweep-grid change opens
@@ -359,7 +457,11 @@ def to_markdown(rows: list[dict], failures: list[str], *,
         "healthy-baseline ladder degradation fails; a serving-cell "
         f"frontend p99 regression above {max_ratio:.2f}x at a fixed "
         "(rate, deadline) load point fails, as does a dropped "
-        "bit-identity assertion or any frontend zero-copy byte leak.",
+        "bit-identity assertion or any frontend zero-copy byte leak; "
+        f"an overload-cell goodput_ratio drop above "
+        f"{GOODPUT_MAX_DROP:.0%} at a fixed rate_factor fails, as does "
+        "any shed_leak (shed request consuming device work), a lost "
+        "p99-dominance past saturation, or unbounded admitted p99.",
         "",
         "| cell (docs, vocab, profile, B, k) | metric | baseline | "
         "candidate | ratio | status |",
@@ -420,6 +522,12 @@ def main(argv: list[str] | None = None) -> int:
             if SERVING_P99_COL in c:
                 c[SERVING_P99_COL] = (c[SERVING_P99_COL]
                                       * args.inject_slowdown)
+        for c in (candidate.get("overload") or {}).get("cells", []):
+            # a slower stack admits the same load but completes less of
+            # it — model the slowdown as a proportional goodput loss so
+            # the dry run demonstrates the goodput gate too
+            if GOODPUT_COL in c:
+                c[GOODPUT_COL] = c[GOODPUT_COL] / args.inject_slowdown
 
     rows, failures = compare(
         baseline, candidate, max_ratio=args.max_ratio,

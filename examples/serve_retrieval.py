@@ -166,3 +166,74 @@ print(f"  {N_REQ} arrivals @ {RATE_QPS:.0f} qps, deadline "
       f"queries/launch), served={health['served']} "
       f"degraded={health['degraded']} [health schema "
       f"{health['schema']}]")
+
+print("\noverload shedding (flood at 3x the admission gate's rate)...")
+# a traffic spike nobody provisioned for: the admission gate sheds the
+# excess AT THE DOOR with a typed AdmissionRejectedError (carrying a
+# retry_after_s hint) BEFORE it costs any device work, so the requests
+# it does admit keep a bounded p99 instead of everyone queueing into
+# timeout territory. Every admitted answer stays bit-identical to a
+# direct call — shedding trades availability, never scores.
+from repro.serve import AdmissionRejectedError
+
+FLOOD_RATE = 3.0 * RATE_QPS
+flood_arrivals = np.cumsum(rng.exponential(1.0 / FLOOD_RATE, size=N_REQ))
+
+
+def flood():
+    with ServingFrontend(dr, k=10, max_batch=32,
+                         batch_deadline_s=DEADLINE_S,
+                         admission_rate_qps=RATE_QPS,      # what we can do
+                         admission_burst=64,
+                         codel_target_s=0.050) as fe:
+        t0 = time.monotonic()
+        futs, shed, hints = [], 0, []
+        for q, t_arr in zip(stream, flood_arrivals):
+            dt = t_arr - (time.monotonic() - t0)
+            if dt > 0:
+                time.sleep(dt)
+            try:
+                futs.append(fe.submit(q))
+            except AdmissionRejectedError as e:  # typed, pre-device
+                shed += 1
+                hints.append(e.retry_after_s)
+        return [f.result() for f in futs], shed, hints, fe.health()
+
+
+# same two-pass idiom as replay() above: the flood's batch compositions
+# hit jit buckets the smooth stream never formed, so pass 1 compiles
+# them and pass 2 is the steady state the p99 claim is about
+flood()
+rows, shed, hints, health = flood()
+lat_ms = 1e3 * np.asarray([r.latency_s for r in rows])
+print(f"  {N_REQ} arrivals @ {FLOOD_RATE:.0f} qps against a "
+      f"{RATE_QPS:.0f} qps gate: admitted {len(rows)}, shed {shed} "
+      f"(typed, retry-after ~{1e3 * float(np.median(hints)):.1f}ms), "
+      f"admitted p99 {np.percentile(lat_ms, 99):.1f}ms")
+print(f"  health: shed={health['shed']} rejected={health['rejected']} "
+      f"admission={health['admission']}")
+
+print("\ncircuit breaker: force a rung open, serving stays exact...")
+# operators (or K repeated typed faults inside a window) can take a
+# ladder rung out of rotation; the ladder hops over it and keeps
+# serving bit-identical results on the remaining rungs while health()
+# reports the skip. Entry rung pinned here so the demo shows the hop.
+dr_cb = DeviceRetriever(build_index(fe_corpus, FE_VOCAB,
+                                    params=BM25Params()),
+                        regime="gathered", gather="host")
+r_ok = dr_cb.retrieve(stream[0], 10)
+dr_cb.trip_breaker("host", cooldown_s=60.0)
+r_skip = dr_cb.retrieve(stream[0], 10)
+np.testing.assert_array_equal(np.asarray(r_skip.ids),
+                              np.asarray(r_ok.ids))
+# same winners, scores to f32 tolerance: the skipped-to rung sums
+# postings in a different association order (last-ulp, like the
+# cross-batch-shape comparison above)
+np.testing.assert_allclose(np.asarray(r_skip.scores),
+                           np.asarray(r_ok.scores), rtol=1e-5)
+br = dr_cb.health()["breakers"]["host"]
+print(f"  host rung open (state={br['state']}, skips={br['skips']}): "
+      f"hop {r_skip.degradations[0]['from']}->"
+      f"{r_skip.degradations[0]['to']} "
+      f"[{r_skip.degradations[0]['error']}], same winners, scores "
+      f"within f32 tolerance of the closed-breaker call: True")

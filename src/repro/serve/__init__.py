@@ -36,13 +36,57 @@ Level-specific extras (legacy spellings like ``batches_served`` /
 ``responses``, per-shard breakdowns, the front-end's queue/batch stats)
 ride alongside the common keys; tooling written against schema 2 reads
 only the common ones.
+
+**Overload protection — the contract.** When traffic exceeds capacity or
+a ladder rung keeps faulting, the stack sheds and degrades in TYPED,
+observable ways; it never queues unboundedly, never hangs a client
+future, and never changes scores (every request it does answer is
+bit-identical to a direct ``retrieve_batch`` of the same formed batch):
+
+* load above the admission gate is shed at ``submit`` with
+  :class:`AdmissionRejectedError` (``retry_after_s`` = backoff hint)
+  BEFORE consuming device work, so admitted-request p99 stays bounded
+  under sustained overload;
+* a rung that faults repeatedly is skipped by a per-rung circuit
+  breaker for a cooldown (one half-open probe re-closes it) — the
+  ladder keeps serving exactly on the remaining rungs;
+* device execution is watchdog-guarded: a stall becomes a typed
+  :class:`ExecutionStalledError` feeding the same exact ladder, and
+  transient :class:`ResidencyError` gets seeded bounded backoff;
+* a dead pipeline stage fails its pending futures with
+  :class:`StageFailedError` and restarts (bounded), so clients never
+  block on a stage that no longer exists.
+
+Every shed / breaker-open / stall / restart is a ``health()`` counter.
+The knobs (all constructor arguments, all off by default except the
+breakers):
+
+====================== ========================= =======================
+knob                   constructor               default
+====================== ========================= =======================
+admission_rate_qps     ``ServingFrontend``       None (bucket off)
+admission_burst        ``ServingFrontend``       ``max(rate//5, 8)``
+codel_target_s         ``ServingFrontend``       None (CoDel off)
+codel_interval_s       ``ServingFrontend``       0.1
+max_stage_restarts     ``ServingFrontend``       3
+watchdog_s             ``DeviceRetriever``       None (watchdog off)
+retry_budget           ``DeviceRetriever``       0 (no retries)
+retry_backoff_s        ``DeviceRetriever``       0.005
+breaker_threshold      ``DeviceRetriever``       3 (None disables)
+breaker_window_s       ``DeviceRetriever``       30.0
+breaker_cooldown_s     ``DeviceRetriever``       5.0
+====================== ========================= =======================
 """
 
-from .errors import (DeadlineExceededError, InvalidQueryError,
+from .errors import (AdmissionRejectedError, DeadlineExceededError,
+                     ExecutionStalledError, InvalidQueryError,
                      PlanOverflowError, QueueOverflowError, ResidencyError,
                      RetrievalConfigError, RetrievalError,
                      ScoreIntegrityError, SnapshotIntegrityError,
-                     SnapshotVersionError, TruncationWarning)
+                     SnapshotVersionError, StageFailedError,
+                     TruncationWarning)
+from .overload import (AdmissionController, CircuitBreaker, RetryPolicy,
+                       WatchdogExecutor)
 from .health import HEALTH_SCHEMA, health_envelope
 from .results import PackedBatch, RetrievalResult
 from .retrieval_engine import (BlockedRetriever, DeviceRetriever,
@@ -59,4 +103,7 @@ __all__ = ["BlockedRetriever", "DeviceRetriever", "GatheredRetriever",
            "PlanOverflowError", "ResidencyError", "ScoreIntegrityError",
            "RetrievalConfigError", "SnapshotIntegrityError",
            "SnapshotVersionError", "DeadlineExceededError",
-           "QueueOverflowError", "TruncationWarning"]
+           "QueueOverflowError", "AdmissionRejectedError",
+           "ExecutionStalledError", "StageFailedError",
+           "AdmissionController", "CircuitBreaker", "RetryPolicy",
+           "WatchdogExecutor", "TruncationWarning"]

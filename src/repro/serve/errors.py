@@ -38,6 +38,16 @@ only cost.
 * :class:`QueueOverflowError`    — the front-end's admission queue is
   full; the submission is REJECTED at the door (backpressure) instead of
   growing an unbounded queue whose tail latency lies to every client.
+* :class:`AdmissionRejectedError` — the overload-protection gate (token
+  bucket / CoDel queue-delay controller) shed the submission at the
+  door; carries ``retry_after_s`` so well-behaved clients back off.
+* :class:`ExecutionStalledError` — device execution of a formed batch
+  exceeded the watchdog deadline; the (presumed hung) launch is
+  abandoned and the typed error feeds the exact degradation ladder.
+* :class:`StageFailedError`      — a serving pipeline stage (the batch
+  former, a pack/execute worker) died or was shut down with requests
+  still pending; every affected future fails with this instead of
+  hanging its client.
 * :class:`TruncationWarning`     — results are exact over a truncated
   posting set (budget overflow in the convenience API); a warning, not an
   error, because callers asked for a fixed budget.
@@ -131,6 +141,58 @@ class QueueOverflowError(RetrievalError, RuntimeError):
         self.pending = pending
 
 
+class AdmissionRejectedError(RetrievalError, RuntimeError):
+    """The overload-protection admission gate shed this submission.
+
+    Raised synchronously by ``ServingFrontend.submit`` when the token
+    bucket is dry or the CoDel-style queue-delay controller is shedding —
+    the request was never admitted and consumed no device work.
+    ``retry_after_s`` is the gate's backoff hint (seconds until a token
+    accrues, or the controller's current shedding interval); ``pending``
+    carries the queue depth the gate saw.
+    """
+
+    def __init__(self, message: str, *, retry_after_s: float | None = None,
+                 pending: int | None = None):
+        super().__init__(message)
+        self.retry_after_s = retry_after_s
+        self.pending = pending
+
+
+class ExecutionStalledError(RetrievalError, TimeoutError):
+    """Device execution exceeded the watchdog deadline (presumed hung).
+
+    The watchdog abandons the stalled launch (its worker thread is
+    replaced; a late result is discarded) and raises this typed error,
+    which feeds the exact degradation ladder like any other rung fault —
+    a stall trades latency and availability, never scores. ``waited_s``
+    records how long the watchdog waited; ``hop`` names the ladder rung
+    whose execution stalled.
+    """
+
+    def __init__(self, message: str, *, waited_s: float | None = None,
+                 hop: str | None = None):
+        super().__init__(message)
+        self.waited_s = waited_s
+        self.hop = hop
+
+
+class StageFailedError(RetrievalError, RuntimeError):
+    """A serving pipeline stage died (or closed) with requests pending.
+
+    Set as the exception of every future the failed stage stranded: a
+    batch-former crash beyond its restart budget, a request in flight
+    when the former died, or a queued request aborted by
+    ``ServingFrontend.close(drain=False)``. ``stage`` names the stage
+    ("former", "close", ...) so operators can tell a crash from an
+    abort.
+    """
+
+    def __init__(self, message: str, *, stage: str | None = None):
+        super().__init__(message)
+        self.stage = stage
+
+
 class TruncationWarning(RuntimeWarning):
     """Scores were computed over a truncated posting set (budget overflow)."""
 
@@ -140,5 +202,6 @@ __all__ = [
     "ResidencyError", "ScoreIntegrityError", "RetrievalConfigError",
     "SnapshotIntegrityError", "SnapshotVersionError",
     "DeadlineExceededError", "QueueOverflowError",
+    "AdmissionRejectedError", "ExecutionStalledError", "StageFailedError",
     "TruncationWarning",
 ]

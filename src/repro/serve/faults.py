@@ -50,6 +50,30 @@ site                           kinds
                                   flipped on disk; the loader's checksum
                                   pass must catch it and walk the
                                   snapshot recovery ladder.
+``kernel.stall``                  ``stall`` — device execution of a hop
+                                  hangs for a deterministic 150–250ms
+                                  (simulated wedged launch). Under a
+                                  retriever watchdog the stall surfaces
+                                  as ``ExecutionStalledError`` and the
+                                  ladder hops; without one it is only
+                                  latency — recovery is exact either
+                                  way (chaos-pool safe).
+``frontend.former``               ``thread_death`` — an uncaught
+                                  ``RuntimeError`` (an arbitrary bug,
+                                  deliberately NOT a typed error) is
+                                  raised inside the front-end's batch
+                                  former loop; the stage supervisor
+                                  must fail any in-flight requests
+                                  typed and restart the stage.
+``queue.flood``                   ``flood`` — the pending-queue depth
+                                  the admission gate reads is inflated
+                                  by a seeded burst (simulated arrival
+                                  flood), forcing a typed shed
+                                  (``AdmissionRejectedError`` /
+                                  ``QueueOverflowError``). Fires only
+                                  unguarded: shedding is designed
+                                  behavior but changes what the caller
+                                  gets, so it never joins a chaos pool.
 =============================  ==========================================
 
 The ``snapshot.*`` I/O lane mutates REAL files on disk (the paths the
@@ -129,6 +153,9 @@ SITES: dict[str, tuple[str, ...]] = {
     "snapshot.write": ("torn_write",),
     "snapshot.manifest": ("manifest_corrupt", "stale_version"),
     "snapshot.array": ("truncate", "bit_flip"),
+    "kernel.stall": ("stall",),
+    "frontend.former": ("thread_death",),
+    "queue.flood": ("flood",),
 }
 
 
@@ -335,6 +362,25 @@ def fire(site: str, payload=None, *, n_vocab: int | None = None):
                 f"injected: process killed mid-write at {site} "
                 f"({payload}; spec seed={spec.seed}, fire #{spec.fired})")
         return payload
+    if spec.kind == "stall":
+        # a wedged device launch: block the calling (worker) thread for a
+        # deterministic 150-250ms — far past any test watchdog, bounded
+        # enough that an unguarded retriever merely slows down (exact
+        # recovery either way, which is what makes it chaos-pool safe)
+        import time as _time
+        _time.sleep(0.15 + 0.1 * float(rng.random()))
+        return payload
+    if spec.kind == "thread_death":
+        # deliberately NOT a RetrievalError: simulates an arbitrary bug
+        # escaping the former loop, which only the stage supervisor
+        # (not the typed ladder) can absorb
+        raise RuntimeError(
+            f"injected: former thread death at {site} "
+            f"(spec seed={spec.seed}, fire #{spec.fired})")
+    if spec.kind == "flood":
+        # inflate the queue depth the admission gate is about to read —
+        # a simulated arrival burst, sized by the spec's seeded rng
+        return int(payload or 0) + 10_000 + int(rng.integers(0, 1000))
     raise AssertionError(f"unhandled fault kind {spec.kind!r}")
 
 

@@ -53,6 +53,7 @@ plane.
 
 from __future__ import annotations
 
+import threading
 import time
 import warnings
 from concurrent.futures import FIRST_COMPLETED, ThreadPoolExecutor, wait
@@ -65,9 +66,11 @@ import numpy as np
 from ..core.index import BM25Index, reshard_index
 from ..core.reference import ScipyBM25
 from ..core.retrieval import merge_topk
-from .errors import (ResidencyError, RetrievalConfigError, RetrievalError,
+from .errors import (ExecutionStalledError, ResidencyError,
+                     RetrievalConfigError, RetrievalError,
                      ScoreIntegrityError)
 from .health import health_envelope, merge_fault_counts
+from .overload import CircuitBreaker, RetryPolicy, WatchdogExecutor
 from .results import PackedBatch, RetrievalResult
 
 
@@ -233,12 +236,25 @@ class DeviceRetriever(_DeviceRetrieverBase):
                  host_arrays: str = "keep", run_cache: int = 256,
                  bmax_dtype: str = "auto", reorder: str = "none",
                  reuse_from=None,
-                 device_index=None, on_fault: str = "degrade"):
+                 device_index=None, on_fault: str = "degrade",
+                 watchdog_s: float | None = None, retry_budget: int = 0,
+                 retry_backoff_s: float = 0.005, retry_seed: int = 0,
+                 breaker_threshold: int | None = 3,
+                 breaker_window_s: float = 30.0,
+                 breaker_cooldown_s: float = 5.0):
         from ..sparse.block_csr import DeviceIndex, PostingRunCache
         if regime not in ("auto", "blocked", "gathered", "pruned"):
             raise RetrievalConfigError(f"unknown regime {regime!r}")
         if on_fault not in ("degrade", "raise"):
             raise RetrievalConfigError(f"unknown on_fault mode {on_fault!r}")
+        if watchdog_s is not None and watchdog_s <= 0:
+            raise RetrievalConfigError("watchdog_s must be positive "
+                                       "(or None to disable)")
+        if retry_budget < 0:
+            raise RetrievalConfigError("retry_budget must be >= 0")
+        if breaker_threshold is not None and breaker_threshold < 1:
+            raise RetrievalConfigError("breaker_threshold must be >= 1 "
+                                       "(or None to disable breakers)")
         if device_index is not None:
             # ADOPT a pre-built DeviceIndex (snapshot cold-start:
             # ``DeviceIndex.load`` already uploaded the resident arrays —
@@ -331,12 +347,30 @@ class DeviceRetriever(_DeviceRetrieverBase):
             self.index = self.dindex.host
         self._nf_state = {}                      # steady-state nf bucket
         self.on_fault = on_fault
-        # observability: ladder + sanitizer counters feeding engine health()
+        # overload protection (PR 10): watchdog-guarded execution, seeded
+        # bounded retry on transient residency faults, and per-rung
+        # circuit breakers giving the ladder memory across batches
+        self.watchdog_s = watchdog_s
+        self._watchdog = (WatchdogExecutor(watchdog_s,
+                                           name="retriever-watchdog")
+                          if watchdog_s is not None else None)
+        self._retry = RetryPolicy(budget=retry_budget,
+                                  base_s=retry_backoff_s, seed=retry_seed)
+        self._breakers = ({hop: CircuitBreaker(
+            threshold=breaker_threshold, window_s=breaker_window_s,
+            cooldown_s=breaker_cooldown_s) for hop in self._LADDER}
+            if breaker_threshold is not None else None)
+        # observability: ladder + sanitizer counters feeding engine
+        # health(). Mutations go through _health_lock — the frontend's
+        # pack/execute stages run concurrently with direct callers, and
+        # counts must sum exactly under that interleaving.
+        self._health_lock = threading.RLock()
         self.fault_counters: dict[str, int] = {}
         self.query_counters: dict[str, int] = {}
         self.degradation_counts: dict[str, int] = {}
         self.batches_served = 0
         self.batches_degraded = 0
+        self.retry_count = 0
         self.last_queries: list[np.ndarray] = []
         self._oracle = None                      # lazy ScipyBM25 (last rung)
         if (host_arrays == "drop"
@@ -378,19 +412,32 @@ class DeviceRetriever(_DeviceRetrieverBase):
         ``served``/``degraded`` count BATCHES at this level; ``degraded``
         means the exact-fallback ladder hopped at least once. Legacy
         spellings (``batches_served``/``batches_degraded``) ride along as
-        level extras.
+        level extras, as do the overload-protection counters:
+        ``breakers`` (per-rung state machine snapshots), ``retries``
+        (seeded-backoff re-attempts that saved a ladder hop) and
+        ``watchdog`` (armed deadline + stall count).
         """
-        return health_envelope(
-            served=self.batches_served,
-            degraded=self.batches_degraded,
-            faults=self.fault_counters,
-            queries=self.query_counters,
-            batches_served=self.batches_served,
-            batches_degraded=self.batches_degraded,
-            degradations=dict(self.degradation_counts),
-            snapshot=dict(getattr(self.dindex, "snapshot_report", None)
-                          or {}),
-        )
+        now = time.monotonic()
+        with self._health_lock:
+            breakers = ({hop: br.snapshot(now)
+                         for hop, br in self._breakers.items()}
+                        if self._breakers is not None else {})
+            return health_envelope(
+                served=self.batches_served,
+                degraded=self.batches_degraded,
+                faults=dict(self.fault_counters),
+                queries=dict(self.query_counters),
+                batches_served=self.batches_served,
+                batches_degraded=self.batches_degraded,
+                degradations=dict(self.degradation_counts),
+                breakers=breakers,
+                retries=self.retry_count,
+                watchdog=({"timeout_s": self._watchdog.timeout_s,
+                           "stalls": self._watchdog.stalls}
+                          if self._watchdog is not None else {}),
+                snapshot=dict(getattr(self.dindex, "snapshot_report",
+                                      None) or {}),
+            )
 
     def save(self, path, *, algo: str | None = None) -> dict:
         """Persist this retriever's resident index (see sparse.snapshot)."""
@@ -429,6 +476,76 @@ class DeviceRetriever(_DeviceRetrieverBase):
             return self.dindex.blk_tok is not None
         return False
 
+    # -- per-rung circuit breakers (overload protection, PR 10) -----------
+
+    def _breaker_allow(self, hop: str) -> bool:
+        """May the ladder run this rung now? (half-open claims its probe)."""
+        if self._breakers is None:
+            return True
+        with self._health_lock:
+            return self._breakers[hop].allow(time.monotonic())
+
+    def _breaker_record(self, hop: str, *, ok: bool) -> None:
+        if self._breakers is None:
+            return
+        with self._health_lock:
+            br = self._breakers[hop]
+            if ok:
+                br.record_success(time.monotonic())
+            else:
+                br.record_fault(time.monotonic())
+
+    def trip_breaker(self, hop: str, *,
+                     cooldown_s: float | None = None) -> None:
+        """Operator override: force a rung's breaker open for a cooldown.
+
+        The ladder then skips ``hop`` (recording a ``BreakerOpen`` trail
+        entry) and serves exactly from the remaining rungs until the
+        cooldown's half-open probe closes the breaker again. Raises
+        :class:`RetrievalConfigError` when breakers are disabled
+        (``breaker_threshold=None``) or ``hop`` is not a ladder rung.
+        """
+        if self._breakers is None:
+            raise RetrievalConfigError(
+                "circuit breakers are disabled on this retriever "
+                "(breaker_threshold=None)")
+        if hop not in self._breakers:
+            raise RetrievalConfigError(
+                f"unknown ladder rung {hop!r}; available: "
+                f"{list(self._LADDER)}")
+        with self._health_lock:
+            self._breakers[hop].force_open(time.monotonic(),
+                                           cooldown_s=cooldown_s)
+
+    def _run_hop(self, hop, qs, b, uniq_batch, uniq_tab, weights, shift,
+                 kk, plan, prune_ub, *, strict, guard_cm):
+        """One execution attempt of a rung: the ``kernel.stall`` fault
+        site, then ``_exec_hop`` — under the watchdog deadline when armed.
+
+        The watchdog runs the body on its supervised worker thread, so
+        the ladder guard scope (thread-local) is re-entered ON that
+        thread via ``ctx=``; a deadline miss abandons the stalled worker
+        and surfaces as :class:`ExecutionStalledError` tagged with the
+        rung. Strict calls bypass the watchdog: warmup's forced-regime
+        calls pay one-off compiles that a serving-sized deadline would
+        misread as stalls.
+        """
+        def body():
+            _f = _faults_module()
+            if _f is not None and _f.ACTIVE:
+                _f.fire("kernel.stall")
+            return self._exec_hop(hop, qs, b, uniq_batch, uniq_tab,
+                                  weights, shift, kk, plan, prune_ub)
+
+        if self._watchdog is not None and not strict:
+            try:
+                return self._watchdog.run(body, ctx=guard_cm)
+            except ExecutionStalledError as e:
+                e.hop = hop
+                raise
+        with guard_cm():
+            return body()
+
     def pack_batch(self, query_tokens: Sequence[np.ndarray], *,
                    strict: bool | None = None) -> PackedBatch:
         """Host half of :meth:`retrieve_batch`: fault hook + sanitizer +
@@ -464,10 +581,20 @@ class DeviceRetriever(_DeviceRetrieverBase):
             with guard():
                 query_tokens = _f.fire("query.batch", list(query_tokens),
                                        n_vocab=self.index.n_vocab)
+        # sanitize into a LOCAL counter dict, merged under the health
+        # lock: the frontend pack stage runs concurrently with direct
+        # callers, and in-place mutation of the shared dict would drop
+        # increments under that interleaving
+        local_counts: dict[str, int] = {}
         qs = validate_query_batch(
             query_tokens, self.index.n_vocab,
-            counters=self.query_counters,
+            counters=local_counts,
             on_invalid="raise" if self.on_fault == "raise" else "sanitize")
+        if local_counts:
+            with self._health_lock:
+                for key, v in local_counts.items():
+                    self.query_counters[key] = \
+                        self.query_counters.get(key, 0) + v
         if self.n_docs == 0:                     # empty shard post-rescale
             return PackedBatch(qs, len(qs), np.zeros(0, np.int32), None,
                                None, None,
@@ -576,40 +703,70 @@ class DeviceRetriever(_DeviceRetrieverBase):
         hops = ((entry,) if strict
                 else self._LADDER[self._LADDER.index(entry):])
         last_err = None
-        self.batches_served += 1
+        with self._health_lock:
+            self.batches_served += 1
         for hop in hops:
             if hop != entry and not self._hop_available(hop, kk):
                 continue
+            if not strict and not self._breaker_allow(hop):
+                # the breaker remembers this rung's recent faults: skip
+                # it WITHOUT execution (no fault-then-hop tax) and let
+                # the next rung fill the trail entry's "to"
+                trail.append({"from": hop, "to": None,
+                              "error": "BreakerOpen",
+                              "detail": f"circuit breaker open for rung "
+                                        f"{hop!r} (skipped without "
+                                        f"execution)"})
+                continue
             if trail and trail[-1]["to"] is None:
                 trail[-1]["to"] = hop
-            try:
-                with guard():
-                    ids, vals = self._exec_hop(
+            # transient-fault retry: seeded exponential backoff with a
+            # bounded budget before burning a ladder hop (strict calls
+            # surface the first fault instead)
+            delays = self._retry.delays() if not strict else []
+            board = None
+            while board is None:
+                try:
+                    ids, vals = self._run_hop(
                         hop, qs, b, uniq_batch, uniq_tab, weights, shift,
-                        kk, plan, prune_ub)
-                board = np.asarray(vals)[:b].astype(np.float32, copy=False)
-                # cheap integrity gate on the [B, k] board — NOT the full
-                # score matrix (which never materializes on these paths)
-                if not np.isfinite(board).all():
-                    raise ScoreIntegrityError(
-                        f"non-finite entries in the [{b}, {kk}] score "
-                        f"board returned by the {hop!r} hop")
-            except RetrievalError as e:
-                name = type(e).__name__
-                self.fault_counters[name] = \
-                    self.fault_counters.get(name, 0) + 1
-                if strict:
-                    raise
-                trail.append({"from": hop, "to": None, "error": name,
-                              "detail": str(e)})
-                last_err = e
+                        kk, plan, prune_ub, strict=strict, guard_cm=guard)
+                    cand = np.asarray(vals)[:b].astype(np.float32,
+                                                       copy=False)
+                    # cheap integrity gate on the [B, k] board — NOT the
+                    # full score matrix (which never materializes on
+                    # these paths)
+                    if not np.isfinite(cand).all():
+                        raise ScoreIntegrityError(
+                            f"non-finite entries in the [{b}, {kk}] "
+                            f"score board returned by the {hop!r} hop")
+                    board = cand
+                except RetrievalError as e:
+                    name = type(e).__name__
+                    with self._health_lock:
+                        self.fault_counters[name] = \
+                            self.fault_counters.get(name, 0) + 1
+                    if strict:
+                        raise
+                    if isinstance(e, ResidencyError) and delays:
+                        with self._health_lock:
+                            self.retry_count += 1
+                        time.sleep(delays.pop(0))
+                        continue
+                    self._breaker_record(hop, ok=False)
+                    trail.append({"from": hop, "to": None, "error": name,
+                                  "detail": str(e)})
+                    last_err = e
+                    break
+            if board is None:
                 continue
+            self._breaker_record(hop, ok=True)
             if trail:
-                self.batches_degraded += 1
-                for t in trail:
-                    key = f"{t['from']}->{t['to']}"
-                    self.degradation_counts[key] = \
-                        self.degradation_counts.get(key, 0) + 1
+                with self._health_lock:
+                    self.batches_degraded += 1
+                    for t in trail:
+                        key = f"{t['from']}->{t['to']}"
+                        self.degradation_counts[key] = \
+                            self.degradation_counts.get(key, 0) + 1
             ids = np.asarray(ids)[:b].astype(np.int64)
             perm = getattr(self.dindex, "perm", None)
             if perm is not None:

@@ -51,11 +51,17 @@ def pytest_configure(config):
 # "ladder" (default): residency / overflow / poisoned boards, healed by the
 # retriever's degradation ladder. "io" ($CHAOS_POOL=io): on-disk snapshot
 # corruption injected inside a load's guard scope, healed by the snapshot
-# recovery ladder (dup replicas + layout rebuilds). Excluded on purpose:
-# query.* corruption (the sanitizer's repair CHANGES the correct answer),
-# torn_write (fires during saves, which run unguarded) and stale_version
-# (a typed refusal, not a recovery) — those families are covered
-# explicitly in tests/test_faults.py instead.
+# recovery ladder (dup replicas + layout rebuilds). "serve"
+# ($CHAOS_POOL=serve): overload-lane faults — a wedged device launch
+# (bounded stall: only latency without a watchdog, a typed ladder hop
+# with one) and a former-stage crash (the supervisor fails in-flight
+# futures typed and restarts the stage) — both exact recoveries.
+# Excluded on purpose: query.* corruption (the sanitizer's repair CHANGES
+# the correct answer), torn_write (fires during saves, which run
+# unguarded), stale_version (a typed refusal, not a recovery) and
+# queue.flood (a typed shed is caller-visible, like torn_write — tests
+# not written for it would see AdmissionRejectedError) — those families
+# are covered explicitly in tests/test_faults.py instead.
 _CHAOS_POOLS = {
     "ladder": (
         ("residency.put_posting_arrays", "residency"),
@@ -67,6 +73,10 @@ _CHAOS_POOLS = {
         ("snapshot.array", "bit_flip"),
         ("snapshot.array", "truncate"),
         ("snapshot.manifest", "manifest_corrupt"),
+    ),
+    "serve": (
+        ("kernel.stall", "stall"),
+        ("frontend.former", "thread_death"),
     ),
 }
 _CHAOS_POOL = _CHAOS_POOLS[os.environ.get("CHAOS_POOL", "ladder")]

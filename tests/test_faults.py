@@ -19,6 +19,8 @@ Pins the PR-6 contract:
   returning when overflow persists at the Σdf bucket.
 """
 
+import time
+
 import numpy as np
 import pytest
 
@@ -91,7 +93,8 @@ def test_fault_spec_rejects_unknown_site():
     assert set(SITES) == {"residency.put_posting_arrays",
                           "plan.fragments_device", "kernel.resident_pruned",
                           "query.batch", "snapshot.write",
-                          "snapshot.manifest", "snapshot.array"}
+                          "snapshot.manifest", "snapshot.array",
+                          "kernel.stall", "frontend.former", "queue.flood"}
     with pytest.raises(ValueError, match="no kind"):
         FaultSpec(site="snapshot.array", kind="torn_write")
 
@@ -639,6 +642,243 @@ def test_perm_checksum_mismatch_falls_to_identity(tmp_path, rng,
         np.testing.assert_allclose(vals[i], ref_v[0], atol=1e-4)
         np.testing.assert_allclose(ref[np.asarray(ids)[i]],
                                    np.asarray(vals)[i], atol=1e-4)
+
+
+# -- the overload fault lane (PR 10): stalls, breakers, floods ----------------
+#
+# kernel.stall is exact BY CONSTRUCTION both ways: without a watchdog the
+# injected sleep is pure latency (the hop still returns its exact board);
+# with one, the stall becomes a typed ExecutionStalledError the ladder
+# absorbs. frontend.former fires at the top of a former iteration —
+# nothing in flight — so supervisor recovery is exact. queue.flood is a
+# typed shed at the door (caller-visible), so it is unguarded-only, like
+# torn_write.
+
+def _settle(dr, qs, k, tries=6):
+    """Drive the retriever until its jit caches are warm enough that a
+    call completes without spurious watchdog stalls (a cold compile can
+    outlast a serving-sized deadline; the abandoned worker still
+    finishes and caches it)."""
+    for _ in range(tries):
+        dr.retrieve_batch(qs, k)
+        if not dr.last_plan.degradations:
+            return
+        time.sleep(0.2)       # let abandoned workers finish their compiles
+    raise AssertionError("retriever never settled under its watchdog")
+
+
+@pytest.mark.parametrize("method", ALL_VARIANTS)
+def test_watchdog_stall_recovers_exact(method, rng):
+    """A stalled pruned-kernel launch trips the watchdog, surfaces as a
+    typed ExecutionStalledError, and the ladder re-serves the batch on
+    the unpruned resident rung — bit-identical to the no-fault answer."""
+    idx = _mk(rng, method)
+    # breakers off: a cold compile can spuriously stall a few times while
+    # settling, and this test pins the watchdog/ladder story in isolation
+    dr = DeviceRetriever(idx, regime="pruned", gather="resident",
+                         plan="host", watchdog_s=0.12,
+                         breaker_threshold=None, **SMALL)
+    qs = _queries(rng, 64)
+    _settle(dr, qs, 7)
+    ids0, vals0 = dr.retrieve_batch(qs, 7)
+    stalls0 = dr.health()["watchdog"]["stalls"]
+    with inject_faults({"site": "kernel.stall", "kind": "stall",
+                        "times": 1, "seed": 5}) as sp:
+        ids, vals = dr.retrieve_batch(qs, 7)
+    assert sp[0].fired == 1
+    trail = dr.last_plan.degradations
+    assert trail[0]["from"] == "pruned" and trail[0]["to"] == "resident"
+    assert trail[0]["error"] == "ExecutionStalledError"
+    assert dr.health()["watchdog"]["stalls"] == stalls0 + 1
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(vals0))
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ids0))
+    _assert_exact(dr, ids, vals, 7)
+
+
+def test_stall_without_watchdog_is_latency_only(rng):
+    """No watchdog armed: the injected stall is pure latency — the hop
+    still returns its exact board and nothing degrades."""
+    idx = _mk(rng, "lucene")
+    dr = DeviceRetriever(idx, regime="gathered", gather="host", **SMALL)
+    qs = _queries(rng, 64)
+    ids0, vals0 = dr.retrieve_batch(qs, 7)
+    with inject_faults({"site": "kernel.stall", "kind": "stall",
+                        "times": 1, "seed": 5}) as sp:
+        t0 = time.monotonic()
+        ids, vals = dr.retrieve_batch(qs, 7)
+        dt = time.monotonic() - t0
+    assert sp[0].fired == 1
+    assert dt >= 0.15                     # the sleep really happened
+    assert dr.last_plan.degradations == []
+    assert dr.health()["watchdog"] == {}
+    np.testing.assert_array_equal(np.asarray(vals), np.asarray(vals0))
+    np.testing.assert_array_equal(np.asarray(ids), np.asarray(ids0))
+
+
+def test_stall_is_guard_scoped(rng):
+    """A guarded stall spec cannot fire on a strict retriever (strict
+    calls never enter the ladder guard) — chaos safety for
+    on_fault="raise" deployments."""
+    idx = _mk(rng, "lucene")
+    dr = DeviceRetriever(idx, regime="gathered", gather="host",
+                         on_fault="raise", **SMALL)
+    qs = _queries(rng, 64)
+    with inject_faults({"site": "kernel.stall", "kind": "stall",
+                        "times": 1, "seed": 5}) as sp:
+        dr.retrieve_batch(qs, 7)
+    assert sp[0].fired == 0
+
+
+@pytest.mark.parametrize("method", ALL_VARIANTS)
+def test_breaker_opens_after_threshold_and_recloses(method, rng):
+    """The per-rung breaker state machine end to end: K faults open it,
+    the ladder then skips the rung WITHOUT execution (trail says
+    BreakerOpen), the cooldown's half-open probe re-closes it — and
+    every answer along the way is exact."""
+    idx = _mk(rng, method)
+    dr = DeviceRetriever(idx, regime="gathered", gather="host",
+                         breaker_threshold=2, breaker_cooldown_s=0.3,
+                         **SMALL)
+    qs = _queries(rng, 64)
+    # two faulted calls: host faults, ladder hops to oracle, breaker
+    # accumulates
+    for _ in range(2):
+        with inject_faults({"site": "residency.put_posting_arrays",
+                            "kind": "residency", "times": 1, "seed": 1}):
+            ids, vals = dr.retrieve_batch(qs, 7)
+        _assert_exact(dr, ids, vals, 7)
+    h = dr.health()
+    assert h["breakers"]["host"]["state"] == "open"
+    assert h["breakers"]["host"]["opened"] == 1
+    # breaker open: the host rung is skipped without execution (no fault
+    # armed — it WOULD succeed, but the breaker remembers), still exact
+    ids, vals = dr.retrieve_batch(qs, 7)
+    trail = dr.last_plan.degradations
+    assert trail[0]["from"] == "host" and trail[0]["error"] == "BreakerOpen"
+    assert trail[0]["to"] == "oracle"
+    assert dr.health()["breakers"]["host"]["skips"] >= 1
+    _assert_exact(dr, ids, vals, 7)
+    # cooldown elapses -> half-open -> the probe succeeds -> closed
+    time.sleep(0.35)
+    ids, vals = dr.retrieve_batch(qs, 7)
+    assert dr.last_plan.degradations == []
+    assert dr.health()["breakers"]["host"]["state"] == "closed"
+    _assert_exact(dr, ids, vals, 7)
+
+
+def test_breaker_probe_failure_reopens(rng):
+    """A fault during the half-open probe re-opens the breaker for
+    another cooldown instead of closing it."""
+    idx = _mk(rng, "lucene")
+    dr = DeviceRetriever(idx, regime="gathered", gather="host",
+                         breaker_threshold=1, breaker_cooldown_s=0.2,
+                         **SMALL)
+    qs = _queries(rng, 64)
+    with inject_faults({"site": "residency.put_posting_arrays",
+                        "kind": "residency", "times": 1, "seed": 1}):
+        dr.retrieve_batch(qs, 7)
+    assert dr.health()["breakers"]["host"]["state"] == "open"
+    time.sleep(0.25)                       # half-open: probe slot free
+    with inject_faults({"site": "residency.put_posting_arrays",
+                        "kind": "residency", "times": 1, "seed": 1}):
+        ids, vals = dr.retrieve_batch(qs, 7)
+    h = dr.health()["breakers"]["host"]
+    assert h["state"] == "open" and h["opened"] == 2
+    _assert_exact(dr, ids, vals, 7)
+
+
+def test_trip_breaker_forced_open_serves_exact(rng):
+    """Operator override: with the entry rung's breaker forced open,
+    serving continues exactly on the remaining rungs and health says so."""
+    idx = _mk(rng, "lucene")
+    dr = DeviceRetriever(idx, regime="gathered", gather="host", **SMALL)
+    qs = _queries(rng, 64)
+    dr.trip_breaker("host", cooldown_s=60.0)
+    ids, vals = dr.retrieve_batch(qs, 7)
+    trail = dr.last_plan.degradations
+    assert trail[0] == {"from": "host", "to": "oracle",
+                        "error": "BreakerOpen", "detail": trail[0]["detail"]}
+    h = dr.health()
+    assert h["breakers"]["host"]["state"] == "open"
+    assert h["degradations"] == {"host->oracle": 1}
+    _assert_exact(dr, ids, vals, 7)
+    with pytest.raises(RetrievalConfigError, match="unknown ladder rung"):
+        dr.trip_breaker("nope")
+    dr_off = DeviceRetriever(idx, regime="gathered", gather="host",
+                             breaker_threshold=None, **SMALL)
+    assert dr_off.health()["breakers"] == {}
+    with pytest.raises(RetrievalConfigError, match="disabled"):
+        dr_off.trip_breaker("host")
+
+
+@pytest.mark.parametrize("method", ALL_VARIANTS)
+def test_retry_budget_absorbs_transient_residency_fault(method, rng):
+    """With a retry budget, a transient ResidencyError is retried on the
+    SAME rung (seeded backoff) instead of burning a ladder hop."""
+    idx = _mk(rng, method)
+    dr = DeviceRetriever(idx, regime="gathered", gather="host",
+                         retry_budget=2, retry_backoff_s=0.001, **SMALL)
+    qs = _queries(rng, 64)
+    with inject_faults({"site": "residency.put_posting_arrays",
+                        "kind": "residency", "times": 1, "seed": 1}) as sp:
+        ids, vals = dr.retrieve_batch(qs, 7)
+    assert sp[0].fired == 1
+    assert dr.last_plan.degradations == []          # no hop burned
+    h = dr.health()
+    assert h["retries"] == 1
+    assert h["faults"]["ResidencyError"] == 1       # still counted typed
+    _assert_exact(dr, ids, vals, 7)
+
+
+def test_frontend_former_death_recovers(rng):
+    """Injected former-thread death is absorbed by the stage supervisor:
+    the stage restarts, queued requests ride the next iteration, and the
+    answers stay bit-identical to direct retrieval."""
+    from repro.serve import ServingFrontend
+    idx = _mk(rng, "lucene")
+    dr = DeviceRetriever(idx, regime="gathered", gather="host", **SMALL)
+    qs = _queries(rng, 64, n=4)
+    direct = dr.retrieve_batch(qs, 5)
+    with inject_faults({"site": "frontend.former", "kind": "thread_death",
+                        "times": 1, "seed": 1}) as sp:
+        fe = ServingFrontend(dr, k=5, max_batch=4,
+                             batch_deadline_s=0.005)
+        futs = [fe.submit(q) for q in qs]
+        rows = [f.result(timeout=10.0) for f in futs]
+        fe.close()
+    assert sp[0].fired == 1
+    assert fe.health()["restarts"] == 1
+    for i, row in enumerate(rows):
+        np.testing.assert_array_equal(np.asarray(row.ids),
+                                      np.asarray(direct.ids[i]))
+        np.testing.assert_array_equal(np.asarray(row.scores),
+                                      np.asarray(direct.scores[i]))
+
+
+def test_queue_flood_guarded_vs_unguarded(rng):
+    """submit() has no guard scope, so a guarded flood spec can never
+    fire (chaos safety: the shed is caller-visible); an unguarded one
+    inflates the depth the gate sees and the submission is REJECTED
+    typed at the door — the real queue is untouched."""
+    from repro.serve import QueueOverflowError, ServingFrontend
+    idx = _mk(rng, "lucene")
+    dr = DeviceRetriever(idx, regime="gathered", gather="host", **SMALL)
+    fe = ServingFrontend(dr, k=5, max_batch=4, batch_deadline_s=0.005,
+                         max_queue=64)
+    q = np.array([1, 2], np.int32)
+    with inject_faults({"site": "queue.flood", "kind": "flood",
+                        "times": 1, "seed": 1}) as sp:
+        fe.submit(q).result(timeout=10.0)
+    assert sp[0].fired == 0                # guarded: submit untouched
+    with inject_faults({"site": "queue.flood", "kind": "flood",
+                        "times": 1, "seed": 1, "guarded": False}) as sp:
+        with pytest.raises(QueueOverflowError, match="queue full"):
+            fe.submit(q)
+    assert sp[0].fired == 1
+    h = fe.health()
+    assert h["pending"] == 0               # the flood never queued anything
+    fe.submit(q).result(timeout=10.0)      # ... and serving continues
+    fe.close()
 
 
 @pytest.mark.parametrize("kind", ["bit_flip", "truncate"])

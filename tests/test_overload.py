@@ -1,0 +1,420 @@
+"""Overload protection: admission control, breakers, watchdog, supervision.
+
+Pins the PR-10 contract:
+
+* **admission** — the token-bucket + CoDel gate sheds at the DOOR with a
+  typed :class:`AdmissionRejectedError` (carrying ``retry_after_s``)
+  before any device work is consumed; the decision sequence is a pure
+  function of the observed clock, no RNG.
+* **breakers** — the per-rung circuit breaker walks
+  closed -> open -> half-open -> closed (or re-open) exactly as specified
+  (fault-injection integration lives in ``test_faults.py``).
+* **watchdog** — a deadline miss abandons the stalled worker, REPLACES
+  the thread, and surfaces a typed :class:`ExecutionStalledError`.
+* **supervision** — a dead batch-former never hangs a client: in-flight
+  and stranded requests fail typed (:class:`StageFailedError`), the
+  stage restarts within ``max_stage_restarts``, and ``close()`` resolves
+  every future under both drain and abort semantics.
+* **thread-safe health** — concurrent submits + direct retriever calls
+  leave counters that SUM EXACTLY (the hammer test).
+"""
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.core import BM25Params, build_index
+from repro.data.corpus import zipf_corpus, zipf_queries
+from repro.serve import (AdmissionController, AdmissionRejectedError,
+                         CircuitBreaker, DeviceRetriever,
+                         ExecutionStalledError, RetrievalConfigError,
+                         RetrievalResult, RetryPolicy, ServingFrontend,
+                         StageFailedError, WatchdogExecutor)
+
+pytestmark = pytest.mark.no_chaos    # asserts exact counter values
+
+N_VOCAB = 120
+SMALL = dict(block_size=32, tile=64, q_max=8, frag=64)
+
+
+class _StubRetriever:
+    """Device-free retrieve_batch target with a tunable service time."""
+
+    def __init__(self, delay_s=0.0):
+        self.q_max = 8
+        self.query_counters = {}
+        self.delay_s = delay_s
+        self.calls = 0
+        self.rows = 0
+        self._lock = threading.Lock()
+
+    def retrieve_batch(self, batch, k=5, **kw):
+        if self.delay_s:
+            time.sleep(self.delay_s)
+        with self._lock:
+            self.calls += 1
+            self.rows += len(batch)
+        b = len(batch)
+        return RetrievalResult(ids=np.tile(np.arange(k), (b, 1)),
+                               scores=np.zeros((b, k), np.float32))
+
+
+# -- AdmissionController (unit, fake clock) ------------------------------
+
+def test_bucket_sheds_above_rate_and_refills():
+    ac = AdmissionController(rate_qps=10.0, burst=2)
+    assert ac.admit(0.0, 0) is None
+    assert ac.admit(0.0, 0) is None              # burst of 2 admitted
+    ra = ac.admit(0.0, 0)
+    assert ra is not None and ra == pytest.approx(0.1)   # 1 token / 10 qps
+    assert ac.admit(0.05, 0) is not None         # half a token accrued
+    assert ac.admit(0.1001, 0) is None           # a full token accrued
+    assert ac.admitted == 3
+    assert ac.shed_bucket == 2 and ac.shed_codel == 0
+
+
+def test_bucket_is_deterministic():
+    """Same clock sequence -> same decision sequence (no RNG anywhere)."""
+    seq = [0.0, 0.01, 0.02, 0.3, 0.31, 0.32, 0.9]
+    runs = []
+    for _ in range(2):
+        ac = AdmissionController(rate_qps=5.0, burst=1)
+        runs.append([ac.admit(t, 0) for t in seq])
+    assert runs[0] == runs[1]
+
+
+def test_codel_sheds_after_interval_and_recovers():
+    ac = AdmissionController(codel_target_s=0.01, codel_interval_s=0.1)
+    ac.observe(0.05, 0.0)                        # above target at t=0
+    assert ac.admit(0.05, 0) is None             # patience: < one interval
+    ra = ac.admit(0.11, 0)                       # interval elapsed: shed
+    assert ra == pytest.approx(0.1)              # interval / sqrt(1)
+    assert ac.admit(0.12, 0) is None             # next shed not yet due
+    ra = ac.admit(0.22, 0)                       # past _drop_next
+    assert ra == pytest.approx(0.1 / np.sqrt(2))
+    ac.observe(0.001, 0.3)                       # delay back under target
+    assert ac.admit(0.31, 0) is None             # episode over: admit again
+    assert ac.shed_codel == 2
+    snap = ac.snapshot()
+    assert snap["admitted"] == 3 and snap["codel_dropping"] is False
+
+
+def test_admission_validation_and_defaults():
+    with pytest.raises(ValueError, match="rate_qps"):
+        AdmissionController(rate_qps=-1.0)
+    with pytest.raises(ValueError, match="codel_target_s"):
+        AdmissionController(codel_target_s=0.0)
+    assert AdmissionController(rate_qps=1000.0).burst == 200
+    assert AdmissionController(rate_qps=10.0).burst == 8  # floor
+
+
+# -- CircuitBreaker (unit, fake clock) -----------------------------------
+
+def test_breaker_state_machine():
+    br = CircuitBreaker(threshold=3, window_s=10.0, cooldown_s=5.0)
+    assert br.state(0.0) == "closed" and br.allow(0.0)
+    br.record_fault(0.0)
+    br.record_fault(1.0)
+    assert br.state(1.0) == "closed"             # under threshold
+    br.record_fault(2.0)
+    assert br.state(2.0) == "open" and br.opened == 1
+    assert not br.allow(3.0) and br.skips == 1
+    assert br.state(7.0) == "half-open"
+    assert br.allow(7.0)                          # claims THE probe slot
+    assert not br.allow(7.1)                      # second caller: no slot
+    br.record_success(7.2)
+    assert br.state(7.2) == "closed"
+    assert br.snapshot(7.2)["faults_in_window"] == 0
+
+
+def test_breaker_window_prunes_old_faults():
+    br = CircuitBreaker(threshold=2, window_s=1.0, cooldown_s=5.0)
+    br.record_fault(0.0)
+    br.record_fault(5.0)                          # first fault aged out
+    assert br.state(5.0) == "closed"
+    br.record_fault(5.5)
+    assert br.state(5.5) == "open"
+
+
+def test_breaker_probe_failure_reopens():
+    br = CircuitBreaker(threshold=1, cooldown_s=2.0)
+    br.record_fault(0.0)
+    assert br.allow(3.0)                          # half-open probe
+    br.record_fault(3.1)                          # probe failed
+    assert br.state(3.2) == "open" and br.opened == 2
+    assert br.state(5.2) == "half-open"           # another cooldown later
+
+
+def test_breaker_force_open_and_validation():
+    br = CircuitBreaker()
+    br.force_open(0.0, cooldown_s=100.0)
+    assert br.state(50.0) == "open" and br.opened == 1
+    with pytest.raises(ValueError, match="threshold"):
+        CircuitBreaker(threshold=0)
+
+
+# -- WatchdogExecutor ----------------------------------------------------
+
+def test_watchdog_converts_stall_and_replaces_worker():
+    wd = WatchdogExecutor(0.05, name="t-wd")
+    with pytest.raises(ExecutionStalledError) as ei:
+        wd.run(time.sleep, 0.5)
+    assert ei.value.waited_s == pytest.approx(0.05)
+    assert isinstance(ei.value, TimeoutError)     # builtin-compat base
+    assert wd.stalls == 1
+    assert wd.run(lambda: 42) == 42               # fresh worker is live
+    wd.close()
+
+
+def test_watchdog_enters_ctx_on_worker_thread():
+    """Thread-local guard scopes must be re-entered ON the worker."""
+    import contextlib
+
+    entered_on = []
+
+    @contextlib.contextmanager
+    def ctx():
+        entered_on.append(threading.current_thread().name)
+        yield
+
+    wd = WatchdogExecutor(5.0, name="ctx-wd")
+    ran_on = wd.run(lambda: threading.current_thread().name, ctx=ctx)
+    assert entered_on == [ran_on]                 # same (worker) thread
+    assert ran_on != threading.current_thread().name
+    wd.close()
+    with pytest.raises(ValueError, match="positive"):
+        WatchdogExecutor(0.0)
+
+
+def test_watchdog_propagates_worker_exceptions():
+    wd = WatchdogExecutor(5.0)
+
+    def boom():
+        raise KeyError("from the worker")
+
+    with pytest.raises(KeyError, match="from the worker"):
+        wd.run(boom)
+    assert wd.stalls == 0
+    wd.close()
+
+
+# -- RetryPolicy ---------------------------------------------------------
+
+def test_retry_policy_is_seeded_and_bounded():
+    rp = RetryPolicy(budget=3, base_s=0.01, factor=2.0, seed=7)
+    d1, d2 = rp.delays(), rp.delays()
+    assert d1 == d2 and len(d1) == 3              # pure function of seed
+    assert 0.01 <= d1[0] <= 0.015                 # base * (1 + 0.5*u)
+    assert d1[1] >= 2 * 0.01 and d1[2] >= 4 * 0.01
+    assert RetryPolicy().delays() == []           # budget 0: no retries
+    assert RetryPolicy(budget=3, seed=8).delays() != d1
+    with pytest.raises(ValueError, match="budget"):
+        RetryPolicy(budget=-1)
+
+
+def test_retriever_overload_knob_validation(rng_index):
+    idx = rng_index
+    with pytest.raises(RetrievalConfigError, match="watchdog_s"):
+        DeviceRetriever(idx, watchdog_s=0.0, **SMALL)
+    with pytest.raises(RetrievalConfigError, match="retry_budget"):
+        DeviceRetriever(idx, retry_budget=-1, **SMALL)
+    with pytest.raises(RetrievalConfigError, match="breaker_threshold"):
+        DeviceRetriever(idx, breaker_threshold=0, **SMALL)
+
+
+@pytest.fixture(scope="module")
+def rng_index():
+    return build_index(zipf_corpus(150, N_VOCAB, avg_len=25), N_VOCAB,
+                       params=BM25Params())
+
+
+# -- frontend: admission gate --------------------------------------------
+
+def test_admission_gate_sheds_typed_before_device_work():
+    stub = _StubRetriever()
+    fe = ServingFrontend(stub, k=5, max_batch=4, batch_deadline_s=0.001,
+                         admission_rate_qps=0.001, admission_burst=2)
+    q = np.array([1, 2], np.int32)
+    futs = [fe.submit(q), fe.submit(q)]           # the whole burst
+    with pytest.raises(AdmissionRejectedError) as ei:
+        fe.submit(q)
+    assert ei.value.retry_after_s is not None and ei.value.retry_after_s > 0
+    assert ei.value.pending is not None
+    assert isinstance(ei.value, RuntimeError)     # builtin-compat base
+    for f in futs:
+        f.result(timeout=10.0)
+    fe.close()
+    h = fe.health()
+    assert h["shed"] == 1 and h["rejected"] == 1
+    assert h["faults"]["AdmissionRejectedError"] == 1
+    assert h["served"] == 2 and h["submitted"] == 2
+    assert h["admission"]["shed_bucket"] == 1
+    assert stub.rows == 2                         # the shed cost NO work
+
+
+def test_codel_gate_converges_under_sustained_overload():
+    """A slow backend + sustained arrivals: the CoDel half starts
+    shedding once the standing delay exceeds target, and every ADMITTED
+    request still resolves."""
+    stub = _StubRetriever(delay_s=0.03)
+    fe = ServingFrontend(stub, k=5, max_batch=1, batch_deadline_s=0.0002,
+                         codel_target_s=0.005, codel_interval_s=0.02)
+    q = np.array([1, 2], np.int32)
+    futs, shed = [], 0
+    for _ in range(40):
+        try:
+            futs.append(fe.submit(q))
+        except AdmissionRejectedError:
+            shed += 1
+        time.sleep(0.002)
+    for f in futs:
+        f.result(timeout=30.0)
+    fe.close()
+    h = fe.health()
+    assert shed > 0 and h["admission"]["shed_codel"] == shed
+    assert h["served"] == len(futs) == stub.rows  # admitted => served
+    assert h["served"] + shed == 40
+
+
+# -- frontend: close semantics + stage supervision ------------------------
+
+def test_close_abort_fails_queued_typed():
+    stub = _StubRetriever()
+    fe = ServingFrontend(stub, k=5, max_batch=64,
+                         batch_deadline_s=30.0)   # deadline never fires
+    q = np.array([1, 2], np.int32)
+    futs = [fe.submit(q) for _ in range(5)]
+    fe.close(drain=False)
+    for f in futs:
+        with pytest.raises(StageFailedError) as ei:
+            f.result(timeout=5.0)
+        assert ei.value.stage == "close"
+    h = fe.health()
+    assert h["aborted"] == 5 and h["pending"] == 0
+    assert h["faults"]["StageFailedError"] == 5
+    assert stub.rows == 0                         # nothing reached the device
+
+
+def test_supervisor_restarts_former_within_budget():
+    """A crashing former step fails nothing queued (nothing was in
+    flight), restarts in place, and keeps serving."""
+    stub = _StubRetriever()
+    fe = ServingFrontend(stub, k=5, max_batch=4, batch_deadline_s=0.001,
+                         autostart=False, max_stage_restarts=3)
+    real_step, crashes = fe._former_step, []
+
+    def flaky_step():
+        if not crashes:
+            crashes.append(1)
+            raise RuntimeError("injected former crash")
+        return real_step()
+
+    fe._former_step = flaky_step
+    fe.start()
+    q = np.array([1, 2], np.int32)
+    row = fe.submit(q).result(timeout=10.0)
+    assert row.ids.shape == (5,)
+    fe.close()
+    assert fe.health()["restarts"] == 1
+
+
+def test_supervisor_budget_exhaustion_fails_pending_typed():
+    """Beyond max_stage_restarts the frontend STOPS: queued requests fail
+    typed instead of crash-looping, and new submits are refused."""
+    stub = _StubRetriever()
+    fe = ServingFrontend(stub, k=5, max_batch=64, batch_deadline_s=30.0,
+                         autostart=False, max_stage_restarts=2)
+    fe._started = True                  # queue without threads (test idiom)
+    q = np.array([1, 2], np.int32)
+    futs = [fe.submit(q) for _ in range(3)]
+    fe._started = False
+
+    def always_boom():
+        raise RuntimeError("unrecoverable former crash")
+
+    fe._former_step = always_boom
+    fe.start()
+    for f in futs:
+        with pytest.raises(StageFailedError) as ei:
+            f.result(timeout=5.0)
+        assert ei.value.stage == "former"
+    with pytest.raises(RuntimeError, match="not running"):
+        fe.submit(q)
+    h = fe.health()
+    assert h["restarts"] == 2 and h["pending"] == 0
+
+
+def test_dead_former_detected_and_revived_at_submit():
+    """A former found dead at submit time is restarted (budget
+    permitting) after failing what it stranded — submits never queue
+    onto a dead stage."""
+    stub = _StubRetriever()
+    fe = ServingFrontend(stub, k=5, max_batch=4, batch_deadline_s=0.001)
+    with fe._cond:                                # kill the former cleanly
+        fe._stopping = True
+        fe._cond.notify_all()
+    fe._former.join(timeout=5.0)
+    assert not fe._former.is_alive()
+    fe._stopping = False                          # simulate silent death
+    q = np.array([1, 2], np.int32)
+    row = fe.submit(q).result(timeout=10.0)       # revived + served
+    assert row.ids.shape == (5,)
+    assert fe.health()["restarts"] == 1
+    fe.close()
+
+
+def test_frontend_knob_validation():
+    with pytest.raises(ValueError, match="max_stage_restarts"):
+        ServingFrontend(_StubRetriever(), max_stage_restarts=-1,
+                        autostart=False)
+
+
+# -- the hammer: thread-safe health counters ------------------------------
+
+def test_concurrent_submit_counters_sum_exactly(rng_index):
+    """Satellite (b): submits racing across threads WITH direct
+    retriever calls leave health counters that sum exactly — no lost
+    updates anywhere in the two-level report."""
+    dr = DeviceRetriever(rng_index, **SMALL)
+    dr.retrieve_batch(zipf_queries(4, N_VOCAB), 5)        # warm compiles
+    base_batches = dr.health()["served"]
+    fe = ServingFrontend(dr, k=5, max_batch=8, batch_deadline_s=0.002)
+    qs = zipf_queries(8, N_VOCAB)
+    n_threads, per_thread, n_direct = 8, 10, 6
+    errs = []
+
+    def submitter():
+        try:
+            futs = [fe.submit(qs[i % len(qs)]) for i in range(per_thread)]
+            for f in futs:
+                f.result(timeout=60.0)
+        except BaseException as e:               # noqa: BLE001
+            errs.append(e)
+
+    def direct_caller():
+        try:
+            for _ in range(n_direct // 2):
+                dr.retrieve_batch(qs[:4], 5)
+        except BaseException as e:               # noqa: BLE001
+            errs.append(e)
+
+    threads = ([threading.Thread(target=submitter) for _ in range(n_threads)]
+               + [threading.Thread(target=direct_caller) for _ in range(2)])
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(timeout=120.0)
+    fe.close()
+    assert not errs
+    h = fe.health()
+    total = n_threads * per_thread
+    assert h["submitted"] == total
+    assert h["served"] == total                   # nothing lost, nothing shed
+    assert h["pending"] == 0 and h["rejected"] == 0
+    assert h["faults"] == {}
+    hr = dr.health()
+    # retriever-level: frontend batches + direct calls, counted exactly
+    assert hr["served"] == base_batches + h["batches"] + n_direct
+    assert sum(h["flushes"].values()) == h["batches"]

@@ -441,3 +441,121 @@ def test_main_inject_slowdown_trips_serving_gate(tmp_path):
     assert main(["--baseline", str(b), "--candidate", str(c)]) == 0
     assert main(["--baseline", str(b), "--candidate", str(c),
                  "--inject-slowdown", "1.5"]) == 1
+
+
+# -- BENCH_8 overload cells (PR-10 admission control) --------------------
+
+def _overload_cell(factor=3.0, goodput_ratio=0.9, p99=50.0,
+                   unprot_p99=400.0, shed_leak=0, dominates=True,
+                   bit_identical=True):
+    return {"rate_factor": factor, "rate_qps": factor * 400.0, "k": 10,
+            "goodput_ratio": goodput_ratio, "protected_p99_ms": p99,
+            "unprotected_p99_ms": unprot_p99, "shed_leak": shed_leak,
+            "dominates": dominates, "bit_identical": bit_identical}
+
+
+def _overload_bench(*cells, p99_bounded=True):
+    return {"overload": {"capacity_qps": 400.0, "p99_bounded": p99_bounded,
+                         "cells": list(cells)}}
+
+
+def test_overload_gate_passes_identical_runs():
+    base = _overload_bench(_overload_cell(factor=1.0, dominates=None),
+                           _overload_cell(factor=3.0))
+    rows, failures = compare(base, copy.deepcopy(base))
+    assert failures == []
+    assert any(r["metric"] == "goodput_ratio" for r in rows)
+
+
+def test_overload_gate_trips_on_goodput_drop():
+    """>25% relative goodput_ratio drop at a fixed rate_factor fails —
+    the admission gate stopped protecting throughput."""
+    base = _overload_bench(_overload_cell(goodput_ratio=0.90))
+    cand = _overload_bench(_overload_cell(goodput_ratio=0.60))  # -33%
+    rows, failures = compare(base, cand)
+    assert len(failures) == 1 and "goodput" in failures[0]
+    assert any(r["status"] == "COLLAPSED" for r in rows)
+    # a drop within the tolerance passes
+    cand = _overload_bench(_overload_cell(goodput_ratio=0.70))  # -22%
+    _, failures = compare(base, cand)
+    assert failures == []
+
+
+def test_overload_gate_trips_on_shed_leak():
+    """A shed request that still consumed device work is a LEAK — the
+    whole point of admission control is rejecting BEFORE the former."""
+    base = _overload_bench(_overload_cell())
+    cand = _overload_bench(_overload_cell(shed_leak=3))
+    rows, failures = compare(base, cand)
+    assert any("shed_leak=3" in f for f in failures)
+    assert any(r["metric"] == "shed_leak" and r["status"] == "LEAK"
+               for r in rows)
+
+
+def test_overload_gate_trips_on_lost_dominance_and_bit_identity():
+    base = _overload_bench(_overload_cell())
+    cand = _overload_bench(_overload_cell(dominates=False))
+    rows, failures = compare(base, cand)
+    assert any("dominate" in f for f in failures)
+    assert any(r["metric"] == "dominates" and r["status"] == "BROKEN"
+               for r in rows)
+    # the factor-1.0 cell legitimately reports dominates=None (at
+    # capacity there is nothing to dominate) — that must NOT fail
+    cand = _overload_bench(_overload_cell(dominates=None))
+    _, failures = compare(base, cand)
+    assert not any("dominate" in f for f in failures)
+    cand = _overload_bench(_overload_cell(bit_identical=False))
+    _, failures = compare(base, cand)
+    assert any("bit_identical" in f for f in failures)
+
+
+def test_overload_gate_trips_on_unbounded_p99():
+    base = _overload_bench(_overload_cell())
+    cand = _overload_bench(_overload_cell(), p99_bounded=False)
+    rows, failures = compare(base, cand)
+    assert any("p99" in f and "bounding" in f for f in failures)
+    assert any(r["metric"] == "p99_bounded" and r["status"] == "BROKEN"
+               for r in rows)
+
+
+def test_overload_gate_tolerates_pre_overload_baseline():
+    """Baselines predating BENCH_8 have no overload section — candidate
+    overload cells report as new, never regress-fail — and a candidate
+    with no overload section gates nothing new either."""
+    base = _bench(_cell())
+    cand = _bench(_cell())
+    cand.update(_overload_bench(_overload_cell()))
+    rows, failures = compare(base, cand)
+    assert failures == []
+    over = [r for r in rows if r["metric"] == "goodput_ratio"]
+    assert over and all(r["status"] == "new" for r in over)
+    _, failures = compare(_bench(_cell()), _bench(_cell()))
+    assert failures == []
+
+
+def test_overload_gate_fails_on_empty_overload_intersection():
+    """A rate_factor grid change silently disabling the goodput gate
+    fails, mirroring the serving-cell vacuous-gate protection."""
+    base = _overload_bench(_overload_cell(factor=3.0))
+    cand = _overload_bench(_overload_cell(factor=7.0))
+    _, failures = compare(base, cand)
+    assert any("overload cell matched" in f for f in failures)
+    _, failures = compare(base, cand, allow_empty_intersection=True)
+    assert not any("overload cell matched" in f for f in failures)
+    # a candidate that DROPS the overload section entirely is the same
+    # silent-disable path and fails identically
+    _, failures = compare(base, _bench(_cell()))
+    assert any("overload cell matched" in f for f in failures)
+
+
+def test_main_inject_slowdown_trips_overload_gate(tmp_path):
+    """The dry run models a slowdown as proportional goodput loss, so
+    --inject-slowdown demonstrates the goodput gate trips too."""
+    base = _overload_bench(_overload_cell(goodput_ratio=0.9))
+    b = tmp_path / "base.json"
+    c = tmp_path / "cand.json"
+    b.write_text(json.dumps(base))
+    c.write_text(json.dumps(base))
+    assert main(["--baseline", str(b), "--candidate", str(c)]) == 0
+    assert main(["--baseline", str(b), "--candidate", str(c),
+                 "--inject-slowdown", "1.5"]) == 1
